@@ -1,0 +1,59 @@
+"""Shared benchmark helpers: instance generation per paper settings, CSV."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (
+    SDPOptions,
+    compare_methods,
+    random_compute_graph,
+    random_task_graph,
+)
+from repro.core.rounding import optimal_upper_bound
+from repro.core.sdp import solve_sdp
+
+
+def paper_instance(seed: int, num_tasks: int, num_machines: int = 4,
+                   degree_low: int = 2, degree_high: int = 4):
+    """§4.1.2: C ~ |N(0,√10)|, e ~ |N(0,√15)|, p ~ |N(0,1)| (folded)."""
+    rng = np.random.default_rng(seed)
+    tg = random_task_graph(
+        rng, num_tasks, degree_low=degree_low, degree_high=degree_high
+    )
+    cg = random_compute_graph(rng, num_machines)
+    return tg, cg
+
+
+def run_methods(tg, cg, *, num_samples=3000, sdp_iters=4000, seed=0):
+    """All schedulers on one instance + the paper's Eq. 27 upper bound."""
+    cache: dict = {}
+    out = compare_methods(
+        tg,
+        cg,
+        methods=("heft", "tp_heft", "sdp_naive", "sdp", "sdp_ls"),
+        num_samples=num_samples,
+        sdp_options=SDPOptions(max_iters=sdp_iters),
+        seed=seed,
+        _sdp_cache=cache,
+    )
+    ub = optimal_upper_bound(cache["bqp"], cache["sol"].Y)
+    res = {m: s.bottleneck for m, s in out.items()}
+    res["upper_bound"] = ub
+    res["sdp_seconds"] = out["sdp"].info["sdp_seconds"]
+    return res
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

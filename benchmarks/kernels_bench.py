@@ -1,0 +1,78 @@
+"""Kernel micro-benchmarks.
+
+On this CPU-only container wall-clock of interpret-mode Pallas is
+meaningless, so per kernel we measure the jnp reference path (CPU µs) and
+DERIVE the projected v5e time from the roofline model (bytes / 819 GB/s vs
+flops / 197 TFLOP/s) — the same constants as §Roofline.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(quick: bool = True):
+    from repro.kernels import ref as kref
+
+    rng = np.random.default_rng(0)
+    t = lambda s, d=jnp.bfloat16: jnp.asarray(rng.standard_normal(s), d)
+
+    # flash attention: B=1, S=2048, H=16, D=128 (scaled-down train block)
+    b, s, h, hkv, d = 1, 2048 if not quick else 1024, 16, 8, 128
+    q, k, v = t((b, h, s, d)), t((b, hkv, s, d)), t((b, hkv, s, d))
+    us = _time(jax.jit(lambda q, k, v: kref.flash_attention_ref(q, k, v)), q, k, v)
+    flops = 2 * 2 * b * h * s * s * d / 2
+    emit("kernel_flash_attention_ref", us,
+         f"S={s};proj_v5e_us={flops / PEAK_FLOPS * 1e6:.1f}")
+
+    # decode attention: B=8, S=32768 cache
+    s_c = 32768 if not quick else 8192
+    q1, kc, vc = t((8, h, d)), t((8, s_c, hkv, d)), t((8, s_c, hkv, d))
+    vl = jnp.full((8,), s_c, jnp.int32)
+    us = _time(jax.jit(kref.decode_attention_ref), q1, kc, vc, vl)
+    bytes_ = 2 * 8 * s_c * hkv * d * 2
+    emit("kernel_decode_attention_ref", us,
+         f"S={s_c};proj_v5e_us={bytes_ / HBM_BW * 1e6:.1f} (memory-bound)")
+
+    # rmsnorm
+    x, w = t((8192, 4096)), t((4096,), jnp.float32)
+    us = _time(jax.jit(kref.rmsnorm_ref), x, w)
+    bytes_ = 2 * x.size * 2
+    emit("kernel_rmsnorm_ref", us,
+         f"rows=8192;proj_v5e_us={bytes_ / HBM_BW * 1e6:.1f}")
+
+    # gossip mix: 9 neighbors x 16M params
+    n, l = 9, (1 << 24) if not quick else (1 << 21)
+    st_, ww = t((n, l), jnp.float32), jnp.ones((n,), jnp.float32) / n
+    us = _time(jax.jit(kref.gossip_mix_ref), st_, ww)
+    bytes_ = (n + 1) * l * 4
+    naive_bytes = 2 * (n - 1) * l * 4 + 2 * l * 4
+    emit(
+        "kernel_gossip_mix_ref", us,
+        f"N={n};proj_v5e_us={bytes_ / HBM_BW * 1e6:.1f};"
+        f"naive_axpy_us={naive_bytes / HBM_BW * 1e6:.1f}",
+    )
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,75 @@
+"""Roofline report: reads artifacts/dryrun/*.json (written by
+repro.launch.dryrun) and prints the per-cell three-term table used in
+EXPERIMENTS.md §Roofline.  No recompilation happens here."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ARTIFACT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(records: list[dict], mesh_filter: str | None = "pod") -> list[dict]:
+    rows = []
+    for r in records:
+        if r.get("status") != "ok":
+            continue
+        if mesh_filter and not r["mesh"].startswith("data="):
+            if mesh_filter == "pod":
+                continue
+        rows.append(
+            {
+                "arch": r["arch"],
+                "shape": r["shape"],
+                "mesh": r["mesh"],
+                "compute_s": r.get("compute_s", 0.0),
+                "memory_s": r.get("memory_s", 0.0),
+                "collective_s": r.get("collective_s", 0.0),
+                "dominant": r.get("dominant", "?"),
+                "useful_ratio": r.get("useful_flops_ratio", 0.0),
+                "hbm_gib": r.get("hbm_peak_bytes_per_device", 0) / 2**30,
+            }
+        )
+    return rows
+
+
+def main(quick: bool = True):
+    recs = load_records()
+    rows = table(recs, mesh_filter="pod")
+    if not rows:
+        emit("roofline", 0.0, "no_dryrun_artifacts_yet")
+        return rows
+    print("# arch, shape, mesh, compute_s, memory_s, collective_s, dominant,"
+          " useful_ratio, hbm_gib")
+    for r in rows:
+        print(
+            f"# {r['arch']}, {r['shape']}, {r['mesh']}, "
+            f"{r['compute_s']:.4f}, {r['memory_s']:.4f}, "
+            f"{r['collective_s']:.4f}, {r['dominant']}, "
+            f"{r['useful_ratio']:.2f}, {r['hbm_gib']:.2f}"
+        )
+    n_dom = {}
+    for r in rows:
+        n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    emit(
+        "roofline_summary",
+        0.0,
+        f"cells={len(rows)};" + ";".join(f"{k}={v}" for k, v in n_dom.items()),
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+``python -m benchmarks.run``          — quick mode (CI-sized)
+``python -m benchmarks.run --full``   — paper-sized settings
+
+Prints ``name,us_per_call,derived`` CSV lines (plus commented detail rows).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig4,fig5,fig6,roofline,"
+                         "kernels,scheduler")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (
+        fig4_tasks,
+        fig5_density,
+        fig6_gossip_fl,
+        kernels_bench,
+        roofline,
+        scheduler_bench,
+    )
+
+    suites = {
+        "fig4": fig4_tasks.main,
+        "fig5": fig5_density.main,
+        "fig6": fig6_gossip_fl.main,
+        "roofline": roofline.main,
+        "kernels": kernels_bench.main,
+        "scheduler": scheduler_bench.main,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(quick=quick)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failed.append(name)
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

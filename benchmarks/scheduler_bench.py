@@ -1,0 +1,51 @@
+"""Scheduler performance: SDP solve + rounding cost vs problem size.
+
+This is the control-plane cost of the paper's technique (runs once per
+topology change).  Also compares the numpy vs JAX-vectorized rounding
+backends (§Perf scheduler item).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Timer, emit, paper_instance
+from repro.core import SDPOptions, build_bqp, randomized_rounding, solve_sdp
+
+
+def main(quick: bool = True):
+    sizes = (10, 21) if quick else (10, 21, 30)
+    iters = 1500 if quick else 4000
+    for n in sizes:
+        tg, cg = paper_instance(0, n)
+        data = build_bqp(tg, cg)
+        with Timer() as t_solve:
+            sol = solve_sdp(data, SDPOptions(max_iters=iters))
+        times = {}
+        for backend in ("numpy", "jax"):
+            # warm once (jax backend jit-compiles per instance), then time
+            # the steady state — the regime of elastic re-scheduling where
+            # the same graphs are re-rounded after speed/failure updates.
+            randomized_rounding(
+                data, tg, cg, sol.Y, num_samples=4000,
+                rng=np.random.default_rng(0), backend=backend,
+            )
+            with Timer() as t_round:
+                randomized_rounding(
+                    data, tg, cg, sol.Y, num_samples=4000,
+                    rng=np.random.default_rng(1), backend=backend,
+                )
+            times[backend] = t_round.seconds
+        emit(
+            f"scheduler_sdp_n{n}",
+            t_solve.seconds * 1e6,
+            f"iters={sol.iterations};residual={sol.residual:.1e};"
+            f"round_numpy_us={times['numpy']*1e6:.0f};"
+            f"round_jax_us={times['jax']*1e6:.0f}",
+        )
+
+
+if __name__ == "__main__":
+    main(quick=False)

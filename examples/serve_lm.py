@@ -1,0 +1,53 @@
+"""Batched serving example: greedy decode with the KV-cache serve path
+(the same ``decode_step`` the dry-run lowers at 32k/500k contexts).
+
+    PYTHONPATH=src python examples/serve_lm.py --tokens 32 --batch 8
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--cache", type=int, default=256)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).replace(param_dtype=jnp.bfloat16)
+    api = build_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    cache = api.init_cache(args.batch, args.cache)
+    step = jax.jit(lambda p, c, b: api.decode_step(p, c, b), donate_argnums=1)
+
+    tokens = jnp.zeros((args.batch,), jnp.int32)
+    outs = []
+    t0 = time.perf_counter()
+    for pos in range(args.tokens):
+        batch = {"tokens": tokens, "pos": jnp.full((args.batch,), pos, jnp.int32)}
+        if cfg.family == "vlm":
+            batch = {"pos": batch["pos"],
+                     "inputs_embeds": jnp.ones((args.batch, 1, cfg.d_model), cfg.dtype)}
+        logits, cache = step(params, cache, batch)
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        outs.append(np.asarray(tokens))
+    dt = time.perf_counter() - t0
+    gen = np.stack(outs, axis=1)
+    print(f"arch={args.arch} (reduced config) batch={args.batch}")
+    print(f"generated {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({args.batch*args.tokens/dt:.1f} tok/s incl. compile)")
+    print("first sequence:", gen[0][:16], "...")
+    assert np.isfinite(gen).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: bottleneck-time-minimizing scheduling for distributed iterative
+training (Kiamari & Krishnamachari 2021) as a first-class feature of a
+JAX training/serving framework."""
+
+__version__ = "1.0.0"

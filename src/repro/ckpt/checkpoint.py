@@ -1,0 +1,111 @@
+"""Checkpointing: atomic npz snapshots with a JSON manifest + resume.
+
+Fault-tolerance contract (DESIGN.md §7): a checkpoint is (a) written
+atomically (tmp file + rename), (b) self-describing (manifest carries the
+step, config hash, data-pipeline cursor, and schedule), (c) discoverable
+(``latest_step``), so a re-launched job — possibly with a different
+machine set after a failure — resumes exactly.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): np.asarray(leaf) for path, leaf in flat}
+
+
+def _unflatten(template: Any, arrays: dict[str, np.ndarray]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}"
+            )
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def config_hash(obj: Any) -> str:
+    return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int, name: str) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}_{name}")
+
+    def save(self, step: int, state: Any, metadata: dict | None = None) -> str:
+        arrays = _flatten(state)
+        tmp_fd, tmp_path = tempfile.mkstemp(dir=self.directory, suffix=".tmp")
+        os.close(tmp_fd)
+        np.savez(tmp_path, **{k: v for k, v in arrays.items()})
+        # np.savez appends .npz to a name without it; normalize
+        if not tmp_path.endswith(".npz") and os.path.exists(tmp_path + ".npz"):
+            os.replace(tmp_path + ".npz", tmp_path)
+        data_path = self._path(step, "state.npz")
+        os.replace(tmp_path, data_path)
+
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "arrays": sorted(arrays),
+            "bytes": int(sum(a.nbytes for a in arrays.values())),
+            **(metadata or {}),
+        }
+        mpath = self._path(step, "manifest.json")
+        tmp = mpath + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(tmp, mpath)
+        self._gc()
+        return data_path
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for fn in os.listdir(self.directory):
+            if fn.endswith("_manifest.json"):
+                out.append(int(fn.split("_")[1]))
+        return sorted(out)
+
+    def load(self, template: Any, step: int | None = None) -> tuple[Any, dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        with open(self._path(step, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(self._path(step, "state.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        return _unflatten(template, arrays), manifest
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            for name in ("state.npz", "manifest.json"):
+                try:
+                    os.remove(self._path(s, name))
+                except FileNotFoundError:
+                    pass

@@ -1,0 +1,18 @@
+"""Shape specs and helpers shared by the per-architecture config files.
+
+Every assigned architecture gets its own ``src/repro/configs/<id>.py`` with
+``config()`` (the exact published configuration) and ``smoke_config()``
+(a reduced same-family variant for CPU smoke tests).  The canonical shape
+definitions live in ``repro.shapes`` (import-light); this module re-exports
+them for config-file convenience.
+"""
+
+from __future__ import annotations
+
+from repro.shapes import (  # noqa: F401  (re-export)
+    SHAPES,
+    SUB_QUADRATIC,
+    ShapeSpec,
+    shape_applicable,
+    smoke_shape,
+)

@@ -1,0 +1,52 @@
+"""Core of the paper: bottleneck-time-minimizing task scheduling via SDP."""
+
+from repro.core.bqp import (
+    BQPData,
+    bottleneck_time,
+    bottleneck_time_batch,
+    brute_force_optimum,
+    build_bqp,
+)
+from repro.core.graphs import (
+    ComputeGraph,
+    TaskGraph,
+    gossip_task_graph,
+    random_compute_graph,
+    random_task_graph,
+)
+from repro.core.rounding import (
+    RoundingResult,
+    expected_bottleneck,
+    naive_rounding,
+    optimal_upper_bound,
+    randomized_rounding,
+    sdp_lower_bound,
+)
+from repro.core.scheduler import METHODS, Schedule, compare_methods, schedule
+from repro.core.sdp import SDPOptions, SDPSolution, solve_sdp
+
+__all__ = [
+    "BQPData",
+    "ComputeGraph",
+    "METHODS",
+    "RoundingResult",
+    "SDPOptions",
+    "SDPSolution",
+    "Schedule",
+    "TaskGraph",
+    "bottleneck_time",
+    "bottleneck_time_batch",
+    "brute_force_optimum",
+    "build_bqp",
+    "compare_methods",
+    "expected_bottleneck",
+    "gossip_task_graph",
+    "naive_rounding",
+    "optimal_upper_bound",
+    "randomized_rounding",
+    "random_compute_graph",
+    "random_task_graph",
+    "schedule",
+    "sdp_lower_bound",
+    "solve_sdp",
+]

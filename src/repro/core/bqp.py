@@ -1,0 +1,206 @@
+"""Binary Quadratic Program formulation of bottleneck-time minimization.
+
+Implements Eqs. (7)-(21) of the paper:
+
+  - per-edge quadratic forms ``Q_{i,i'} = D ⊗ (p δ_iᵀ) + C ⊗ (δ_i δ_{i'}ᵀ)``
+    over ``m = vec(M)`` (column-major, ``m[κ·N_T + τ] = M[τ, κ]``),
+  - the ±1 homogenized forms ``Q̃_{i,i'}`` and assignment matrices ``A_i``,
+  - exact bottleneck-time evaluation of any assignment (numpy and JAX,
+    batched) — used both by the schedulers and as the test oracle.
+
+Note: the paper writes the communication Kronecker term as
+``Cᵀ ⊗ I_iᵀ I_{i'}``; with column-major ``vec`` the form that reproduces
+``C[m(i), m(i')]`` is ``C ⊗ (δ_i δ_{i'}ᵀ)``.  We use the latter and verify
+against the direct evaluator in tests (the evaluator is the ground truth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graphs import ComputeGraph, Edge, TaskGraph
+
+
+# ---------------------------------------------------------------------------
+# Direct evaluation (ground truth)
+# ---------------------------------------------------------------------------
+
+
+def assignment_to_matrix(assignment: np.ndarray, num_machines: int) -> np.ndarray:
+    """(N_T,) machine indices -> one-hot (N_T, N_K)."""
+    a = np.asarray(assignment, dtype=np.int64)
+    M = np.zeros((a.shape[0], num_machines), dtype=np.float64)
+    M[np.arange(a.shape[0]), a] = 1.0
+    return M
+
+
+def task_times(
+    task_graph: TaskGraph, compute_graph: ComputeGraph, assignment: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-task (t_comp, t_comm) for an assignment vector (N_T,) of machine ids.
+
+    t_comp(i) = sum of work co-located with i / speed of m(i)     (Eq. 7)
+    t_comm(i) = max over successors i' of C[m(i), m(i')]          (Eq. 10)
+    """
+    a = np.asarray(assignment, dtype=np.int64)
+    p, e, C = task_graph.p, compute_graph.e, compute_graph.C
+    loads = np.zeros(compute_graph.num_machines)
+    np.add.at(loads, a, p)
+    t_comp = loads[a] / e[a]
+    t_comm = np.zeros(task_graph.num_tasks)
+    for (i, j) in task_graph.edges:
+        t_comm[i] = max(t_comm[i], C[a[i], a[j]])
+    return t_comp, t_comm
+
+
+def bottleneck_time(
+    task_graph: TaskGraph, compute_graph: ComputeGraph, assignment: np.ndarray
+) -> float:
+    """Eq. (2): max over tasks of compute + communicate time."""
+    t_comp, t_comm = task_times(task_graph, compute_graph, assignment)
+    return float(np.max(t_comp + t_comm))
+
+
+def bottleneck_time_batch(
+    task_graph: TaskGraph, compute_graph: ComputeGraph, assignments: np.ndarray
+) -> np.ndarray:
+    """Vectorized bottleneck over a batch (B, N_T) of assignment vectors."""
+    a = np.asarray(assignments, dtype=np.int64)
+    if a.ndim == 1:
+        a = a[None]
+    B, n_t = a.shape
+    p, e, C = task_graph.p, compute_graph.e, compute_graph.C
+    n_k = compute_graph.num_machines
+    onehot = np.zeros((B, n_t, n_k))
+    onehot[np.arange(B)[:, None], np.arange(n_t)[None, :], a] = 1.0
+    loads = np.einsum("bti,t->bi", onehot, p)          # (B, N_K)
+    t_comp = np.take_along_axis(loads / e[None], a, axis=1)  # (B, N_T)
+    t = t_comp.copy()
+    if task_graph.edges:
+        src = np.array([i for (i, _) in task_graph.edges])
+        dst = np.array([j for (_, j) in task_graph.edges])
+        delays = C[a[:, src], a[:, dst]]               # (B, |E|)
+        comm = np.zeros_like(t_comp)
+        np.maximum.at(comm, (np.arange(B)[:, None], src[None, :].repeat(B, 0)), delays)
+        t = t_comp + comm
+    return np.max(t, axis=1)
+
+
+def brute_force_optimum(
+    task_graph: TaskGraph, compute_graph: ComputeGraph
+) -> tuple[np.ndarray, float]:
+    """Exact optimum by enumeration (tests only; N_K ** N_T assignments)."""
+    n_t, n_k = task_graph.num_tasks, compute_graph.num_machines
+    total = n_k**n_t
+    if total > 2_000_000:
+        raise ValueError(f"brute force too large: {n_k}^{n_t}")
+    idx = np.arange(total)
+    assignments = np.empty((total, n_t), dtype=np.int64)
+    for t in range(n_t):
+        assignments[:, t] = idx % n_k
+        idx = idx // n_k
+    times = bottleneck_time_batch(task_graph, compute_graph, assignments)
+    best = int(np.argmin(times))
+    return assignments[best], float(times[best])
+
+
+# ---------------------------------------------------------------------------
+# BQP / SDP matrices
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BQPData:
+    """All matrices of the homogenized ±1 formulation (Eqs. 20-21).
+
+    Attributes:
+      n: N_T * N_K (dimension of m / x).
+      edges: constraint edge list (task-graph edges + self-loops for sinks).
+      Q: (|edges|, n, n) symmetrized 0/1-domain quadratic forms Q_{i,i'}.
+      Q_tilde: (|edges|, n+1, n+1) homogenized ±1-domain forms (Eq. 21).
+      A: (N_T, n+1, n+1) homogenized assignment constraint matrices (Eq. 21).
+      q_scale: normalization factor applied to Q_tilde for the SDP solver
+        (``Q_tilde_scaled = Q_tilde / q_scale``); bottleneck values in the
+        original units are ``t * q_scale``.
+    """
+
+    n_tasks: int
+    n_machines: int
+    edges: tuple[Edge, ...]
+    Q: np.ndarray
+    Q_tilde: np.ndarray
+    A: np.ndarray
+    q_scale: float
+
+    @property
+    def n(self) -> int:
+        return self.n_tasks * self.n_machines
+
+
+def build_bqp(task_graph: TaskGraph, compute_graph: ComputeGraph) -> BQPData:
+    n_t, n_k = task_graph.num_tasks, compute_graph.num_machines
+    n = n_t * n_k
+    p, e, C = task_graph.p, compute_graph.e, compute_graph.C
+    D = np.diag(1.0 / e)
+    edges = task_graph.constraint_edges()
+
+    eye = np.eye(n_t)
+    Q = np.empty((len(edges), n, n))
+    for k, (i, j) in enumerate(edges):
+        comp = np.kron(D, np.outer(p, eye[i]))           # D ⊗ (p δ_iᵀ)
+        comm = np.kron(C, np.outer(eye[i], eye[j]))      # C ⊗ (δ_i δ_jᵀ)
+        q = comp + comm
+        Q[k] = 0.5 * (q + q.T)                           # symmetrize (Remark 1)
+
+    # Homogenization (Eq. 19/21): with symmetric Q the bordered form must
+    # contribute 2u·(1ᵀQx), so the border is Q1 — the paper's printed Q1/2
+    # only yields u·(1ᵀQx) and fails the x̃ᵀQ̃x̃ == 4·mᵀQm identity (verified
+    # against the direct evaluator in tests).
+    ones = np.ones(n)
+    Q_tilde = np.empty((len(edges), n + 1, n + 1))
+    for k in range(len(edges)):
+        q1 = Q[k] @ ones
+        Q_tilde[k, :n, :n] = Q[k]
+        Q_tilde[k, :n, n] = q1
+        Q_tilde[k, n, :n] = q1
+        Q_tilde[k, n, n] = ones @ q1
+
+    # H row i selects variable (task i, machine κ) for all κ (column-major vec).
+    A = np.zeros((n_t, n + 1, n + 1))
+    for i in range(n_t):
+        h = np.zeros(n)
+        h[i::n_t] = 1.0
+        A[i, :n, n] = h / 2.0
+        A[i, n, :n] = h / 2.0
+        A[i, n, n] = n_k - 2.0
+
+    q_scale = float(np.max(np.abs(Q_tilde))) or 1.0
+    return BQPData(
+        n_tasks=n_t,
+        n_machines=n_k,
+        edges=edges,
+        Q=Q,
+        Q_tilde=Q_tilde,
+        A=A,
+        q_scale=q_scale,
+    )
+
+
+def quadratic_bottleneck(bqp: BQPData, m_vec: np.ndarray) -> float:
+    """Evaluate max_e mᵀ Q_e m for a 0/1 vectorized assignment (test oracle)."""
+    vals = np.einsum("i,eij,j->e", m_vec, bqp.Q, m_vec)
+    return float(np.max(vals))
+
+
+def assignment_to_vec(assignment: np.ndarray, n_machines: int) -> np.ndarray:
+    """Machine-index vector -> column-major vec(M) in {0,1}^n."""
+    M = assignment_to_matrix(assignment, n_machines)
+    return M.flatten(order="F")
+
+
+def vec_to_assignment(m_vec: np.ndarray, n_tasks: int, n_machines: int) -> np.ndarray:
+    """vec(M) -> machine-index vector (argmax per task row)."""
+    M = m_vec.reshape((n_machines, n_tasks)).T
+    return np.argmax(M, axis=1)

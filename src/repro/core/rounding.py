@@ -1,0 +1,203 @@
+"""Randomized rounding of the SDP solution + the paper's bounds.
+
+Implements:
+  - ``randomized_rounding``: sample z ~ N(0, Y*), take sign(z), fold the
+    homogenization variable u, repair/filter to feasible assignments, pick
+    the best (paper §3, Aspremont-Boyd style).  Two backends: a clear
+    numpy reference and a JAX ``vmap``/``jit`` implementation that evaluates
+    tens of thousands of samples in one fused call (§Perf item).
+  - ``naive_rounding``: per-task argmax of the relaxed solution (the paper's
+    "SDP with naive rounding" baseline).
+  - ``expected_bottleneck``: Eq. (22)-(23) arcsin formula.
+  - ``sdp_lower_bound`` / ``optimal_upper_bound``: Eq. (24) and (27).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.bqp import BQPData, bottleneck_time_batch
+from repro.core.graphs import ComputeGraph, TaskGraph
+
+
+@dataclasses.dataclass
+class RoundingResult:
+    assignment: np.ndarray          # (N_T,) machine indices, best sample
+    bottleneck: float               # exact bottleneck time of ``assignment``
+    num_feasible: int               # samples surviving the feasibility filter
+    num_samples: int
+    expected_bottleneck: float      # Eq. (22)-(23)
+    lower_bound: float              # Eq. (24)  (<= OPT)
+    upper_bound: float              # Eq. (27)  (>= OPT, see note in DESIGN.md)
+
+
+def _sample_signs(
+    Y: np.ndarray, num_samples: int, rng: np.random.Generator
+) -> np.ndarray:
+    """Draw sign(z), z ~ N(0, Y), as ±1 matrix (num_samples, n+1)."""
+    # Eigen square root is robust to the slightly indefinite Y that a
+    # first-order solver returns.
+    w, V = np.linalg.eigh(0.5 * (Y + Y.T))
+    root = V * np.sqrt(np.clip(w, 0.0, None))
+    g = rng.standard_normal((num_samples, Y.shape[0]))
+    z = g @ root.T
+    s = np.sign(z)
+    s[s == 0] = 1.0
+    return s, z
+
+
+def signs_to_assignments(
+    signs: np.ndarray, z: np.ndarray, n_tasks: int, n_machines: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """±1 samples -> (assignments (B, N_T), strict_feasible (B,) bool).
+
+    Folds u (last coordinate), reshapes column-major, and repairs:
+      - multiple machines selected for a task: keep the one with the largest
+        continuous score z (paper footnote 9 allows dropping duplicates);
+      - zero machines selected: strictly infeasible (flagged), repaired to
+        the argmax-z machine so every sample yields *some* assignment.
+    """
+    u = signs[:, -1:]
+    x = signs[:, :-1] * u                          # fold homogenization
+    zx = z[:, :-1] * u
+    B = x.shape[0]
+    # column-major vec: index κ·N_T + τ  ->  (machine κ, task τ)
+    sel = (x.reshape(B, n_machines, n_tasks) > 0)  # (B, K, T)
+    score = zx.reshape(B, n_machines, n_tasks)     # continuous scores
+    masked = np.where(sel, score, -np.inf)
+    any_sel = sel.any(axis=1)                      # (B, T)
+    strict = any_sel.all(axis=1)
+    # repair: fall back to raw score where nothing was selected
+    choice = np.where(any_sel[:, None, :], masked, score)
+    assignments = np.argmax(choice, axis=1)        # (B, T)
+    return assignments, strict
+
+
+def randomized_rounding(
+    bqp: BQPData,
+    task_graph: TaskGraph,
+    compute_graph: ComputeGraph,
+    Y: np.ndarray,
+    *,
+    num_samples: int = 2000,
+    rng: np.random.Generator | None = None,
+    strict: bool = False,
+    backend: str = "numpy",
+) -> RoundingResult:
+    rng = rng or np.random.default_rng(0)
+    signs, z = _sample_signs(Y, num_samples, rng)
+    assignments, strict_mask = signs_to_assignments(
+        signs, z, bqp.n_tasks, bqp.n_machines
+    )
+    if strict:
+        if not strict_mask.any():
+            # Paper discards infeasible samples; if none survive, fall back
+            # to repaired samples (never fail).
+            candidate = assignments
+        else:
+            candidate = assignments[strict_mask]
+    else:
+        candidate = assignments
+
+    if backend == "jax":
+        times = np.asarray(
+            _bottleneck_batch_jax(task_graph, compute_graph, candidate)
+        )
+    else:
+        times = bottleneck_time_batch(task_graph, compute_graph, candidate)
+    best = int(np.argmin(times))
+
+    return RoundingResult(
+        assignment=candidate[best],
+        bottleneck=float(times[best]),
+        num_feasible=int(strict_mask.sum()),
+        num_samples=num_samples,
+        expected_bottleneck=expected_bottleneck(bqp, Y),
+        lower_bound=sdp_lower_bound(bqp, Y),
+        upper_bound=optimal_upper_bound(bqp, Y),
+    )
+
+
+def naive_rounding(bqp: BQPData, Y: np.ndarray) -> np.ndarray:
+    """Paper's 'SDP with naive rounding': round the relaxed solution.
+
+    The relaxed x is read off the u-column of the Gram matrix
+    (Y[:n, -1] ≈ E[x·u]); per task we pick the machine with the largest
+    relaxed indicator (equivalent to rounding to the closest feasible
+    integer point).
+    """
+    x_relaxed = Y[:-1, -1]
+    m_relaxed = (x_relaxed + 1.0) / 2.0
+    M = m_relaxed.reshape(bqp.n_machines, bqp.n_tasks)  # column-major
+    return np.argmax(M, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Paper analysis: expectation and bounds
+# ---------------------------------------------------------------------------
+
+
+def expected_bottleneck(bqp: BQPData, Y: np.ndarray) -> float:
+    """Eq. (22)-(23): max_e (1/4) E[ẑᵀ Q̃_e ẑ] via the arcsin identity."""
+    asin = np.arcsin(np.clip(Y, -1.0, 1.0))
+    vals = np.einsum("eij,ij->e", bqp.Q_tilde, asin) * (2.0 / np.pi)
+    return float(np.max(vals) / 4.0)
+
+
+def sdp_lower_bound(bqp: BQPData, Y: np.ndarray) -> float:
+    """Eq. (24): the SDP objective max_e <Q̃_e, Y*>/4 lower-bounds OPT."""
+    vals = np.einsum("eij,ij->e", bqp.Q_tilde, Y)
+    return float(np.max(vals) / 4.0)
+
+
+def optimal_upper_bound(bqp: BQPData, Y: np.ndarray) -> float:
+    """Eq. (26)-(27): OPT <= max_e (1/4) Σ Q̃_e ∘ (0.112 + 0.878 Y).
+
+    (The paper's Eq. 27 omits the 1/4 of Eq. 25; we keep it so the bound is
+    in bottleneck-time units and comparable with Fig. 4/5.)
+    """
+    lin = 0.112 + 0.878 * np.clip(Y, -1.0, 1.0)
+    vals = np.einsum("eij,ij->e", bqp.Q_tilde, lin)
+    return float(np.max(vals) / 4.0)
+
+
+# ---------------------------------------------------------------------------
+# JAX-vectorized bottleneck evaluation (beyond-paper §Perf optimization)
+# ---------------------------------------------------------------------------
+
+_JAX_CACHE: dict = {}
+
+
+def _bottleneck_batch_jax(
+    task_graph: TaskGraph, compute_graph: ComputeGraph, assignments: np.ndarray
+):
+    """Batched bottleneck evaluation on device via one jitted call."""
+    import jax
+    import jax.numpy as jnp
+
+    key = (id(task_graph), id(compute_graph))
+    fn = _JAX_CACHE.get(key)
+    if fn is None:
+        p = jnp.asarray(task_graph.p, dtype=jnp.float32)
+        e = jnp.asarray(compute_graph.e, dtype=jnp.float32)
+        C = jnp.asarray(compute_graph.C, dtype=jnp.float32)
+        n_k = compute_graph.num_machines
+        if task_graph.edges:
+            src = jnp.asarray([i for (i, _) in task_graph.edges])
+            dst = jnp.asarray([j for (_, j) in task_graph.edges])
+        else:
+            src = dst = jnp.zeros((0,), dtype=jnp.int32)
+
+        def one(a):
+            onehot = jax.nn.one_hot(a, n_k, dtype=jnp.float32)   # (T, K)
+            loads = onehot.T @ p                                  # (K,)
+            t_comp = (loads / e)[a]                               # (T,)
+            delays = C[a[src], a[dst]]                            # (|E|,)
+            comm = jnp.zeros_like(t_comp).at[src].max(delays)
+            return jnp.max(t_comp + comm)
+
+        fn = jax.jit(jax.vmap(one))
+        _JAX_CACHE[key] = fn
+    return fn(jnp.asarray(assignments))

@@ -1,0 +1,156 @@
+"""Unified scheduling API — the paper's technique as a first-class feature.
+
+``schedule(task_graph, compute_graph, method=...)`` returns a ``Schedule``
+with the assignment, its exact bottleneck time, and method-specific
+diagnostics (SDP bounds, sample statistics, solver residuals).
+
+Methods:
+  - ``sdp``         : the paper — SDP relaxation + randomized rounding
+  - ``sdp_naive``   : SDP relaxation + naive (argmax) rounding
+  - ``sdp_ls``      : beyond-paper — ``sdp`` refined by 1-move local search
+  - ``heft``        : HEFT on the §4.1.1 DAG rewrite
+  - ``tp_heft``     : throughput-HEFT greedy period minimization
+  - ``greedy`` / ``random`` / ``round_robin`` / ``sorted`` : simple baselines
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.core import bqp as bqp_mod
+from repro.core.graphs import ComputeGraph, TaskGraph
+from repro.core.rounding import (
+    naive_rounding,
+    randomized_rounding,
+)
+from repro.core.sdp import SDPOptions, solve_sdp
+
+METHODS = (
+    "sdp",
+    "sdp_naive",
+    "sdp_ls",
+    "heft",
+    "tp_heft",
+    "greedy",
+    "random",
+    "round_robin",
+    "sorted",
+)
+
+
+@dataclasses.dataclass
+class Schedule:
+    assignment: np.ndarray
+    bottleneck: float
+    method: str
+    info: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def machine_of(self, task: int) -> int:
+        return int(self.assignment[task])
+
+
+def schedule(
+    task_graph: TaskGraph,
+    compute_graph: ComputeGraph,
+    method: str = "sdp",
+    *,
+    seed: int = 0,
+    num_samples: int = 4000,
+    sdp_options: SDPOptions | None = None,
+    rounding_backend: str = "jax",
+    _sdp_cache: dict | None = None,
+) -> Schedule:
+    """Compute a task->machine assignment minimizing bottleneck time."""
+    rng = np.random.default_rng(seed)
+    info: dict[str, Any] = {}
+
+    if method in ("sdp", "sdp_naive", "sdp_ls"):
+        cache = _sdp_cache if _sdp_cache is not None else {}
+        if "sol" not in cache:
+            cache["bqp"] = bqp_mod.build_bqp(task_graph, compute_graph)
+            cache["sol"] = solve_sdp(cache["bqp"], sdp_options)
+        data, sol = cache["bqp"], cache["sol"]
+        info.update(
+            sdp_iterations=sol.iterations,
+            sdp_residual=sol.residual,
+            sdp_converged=sol.converged,
+            sdp_seconds=sol.solve_seconds,
+            lower_bound=sol.lower_bound,
+        )
+        if method == "sdp_naive":
+            assignment = naive_rounding(data, sol.Y)
+        else:
+            res = randomized_rounding(
+                data,
+                task_graph,
+                compute_graph,
+                sol.Y,
+                num_samples=num_samples,
+                rng=rng,
+                backend=rounding_backend,
+            )
+            info.update(
+                num_feasible=res.num_feasible,
+                expected_bottleneck=res.expected_bottleneck,
+                upper_bound=res.upper_bound,
+                lower_bound=res.lower_bound,
+            )
+            assignment = res.assignment
+            if method == "sdp_ls":
+                from repro.sched.baselines import local_search_refine
+
+                assignment = local_search_refine(
+                    task_graph, compute_graph, assignment
+                )
+    elif method == "heft":
+        from repro.sched.heft import heft_assignment
+
+        assignment = heft_assignment(task_graph, compute_graph)
+    elif method == "tp_heft":
+        from repro.sched.tp_heft import tp_heft_assignment
+
+        assignment = tp_heft_assignment(task_graph, compute_graph)
+    elif method == "greedy":
+        from repro.sched.baselines import greedy_bottleneck_assignment
+
+        assignment = greedy_bottleneck_assignment(task_graph, compute_graph)
+    elif method == "random":
+        from repro.sched.baselines import random_assignment
+
+        assignment = random_assignment(task_graph, compute_graph, rng)
+    elif method == "round_robin":
+        from repro.sched.baselines import round_robin_assignment
+
+        assignment = round_robin_assignment(task_graph, compute_graph)
+    elif method == "sorted":
+        from repro.sched.baselines import sorted_assignment
+
+        assignment = sorted_assignment(task_graph, compute_graph)
+    else:
+        raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+    t = bqp_mod.bottleneck_time(task_graph, compute_graph, assignment)
+    return Schedule(
+        assignment=np.asarray(assignment, dtype=np.int64),
+        bottleneck=t,
+        method=method,
+        info=info,
+    )
+
+
+def compare_methods(
+    task_graph: TaskGraph,
+    compute_graph: ComputeGraph,
+    methods: tuple[str, ...] = ("heft", "tp_heft", "sdp_naive", "sdp"),
+    _sdp_cache: dict | None = None,
+    **kw,
+) -> dict[str, Schedule]:
+    """Run several schedulers on one instance, sharing one SDP solve."""
+    cache: dict = _sdp_cache if _sdp_cache is not None else {}
+    out = {}
+    for m in methods:
+        out[m] = schedule(task_graph, compute_graph, m, _sdp_cache=cache, **kw)
+    return out

@@ -1,0 +1,74 @@
+"""The paper's CNN (§4.2): two conv layers + three fully-connected layers.
+
+Pure-JAX functional model for the gossip-FL MNIST / CIFAR-10 experiments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_cnn_params(rng, input_shape=(28, 28, 1), num_classes: int = 10) -> dict:
+    h, w, c = input_shape
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+
+    def conv_init(key, shape):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return jax.random.normal(key, shape) * np.sqrt(2.0 / fan_in)
+
+    def fc_init(key, shape):
+        return jax.random.normal(key, shape) * np.sqrt(2.0 / shape[0])
+
+    h2, w2 = h // 2, w // 2
+    h4, w4 = h2 // 2, w2 // 2
+    flat = h4 * w4 * 64
+    return {
+        "conv1": {"w": conv_init(k1, (3, 3, c, 32)), "b": jnp.zeros(32)},
+        "conv2": {"w": conv_init(k2, (3, 3, 32, 64)), "b": jnp.zeros(64)},
+        "fc1": {"w": fc_init(k3, (flat, 128)), "b": jnp.zeros(128)},
+        "fc2": {"w": fc_init(k4, (128, 64)), "b": jnp.zeros(64)},
+        "fc3": {"w": fc_init(k5, (64, num_classes)), "b": jnp.zeros(num_classes)},
+    }
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + p["b"])
+
+
+def _pool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x (B, H, W, C) -> (B, num_classes) logits."""
+    x = x - 0.5                     # center [0, 1] inputs
+    x = _pool(_conv(x, params["conv1"]))
+    x = _pool(_conv(x, params["conv2"]))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+def cnn_loss(params: dict, batch: dict) -> jnp.ndarray:
+    logits = cnn_forward(params, batch["x"])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def cnn_accuracy(params: dict, x: np.ndarray, y: np.ndarray, batch: int = 512) -> float:
+    correct = 0
+    fwd = jax.jit(cnn_forward)
+    for i in range(0, len(y), batch):
+        logits = fwd(params, jnp.asarray(x[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(y[i : i + batch])))
+    return correct / len(y)

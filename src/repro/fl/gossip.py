@@ -1,0 +1,132 @@
+"""Gossip-based federated learning (paper §2.1 / §4.2).
+
+Users = vertices of the task graph.  Each round every user trains on its
+next data chunk, ships its parameters to its out-neighbors, and aggregates
+the models it received (weighted average including its own).  Optional
+delta-compression (top-k / int8) with error feedback shrinks the gossip
+message — and therefore the scheduler's C matrix.
+
+The *execution timing* of a round on networked machines is what the
+scheduler optimizes; ``repro.fl.simulator`` turns an assignment into
+bottleneck time while this module performs the actual learning.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import TaskGraph
+from repro.data.synthetic import ImageDataset
+from repro.train.optim import SGDM
+
+
+@dataclasses.dataclass
+class GossipConfig:
+    local_steps: int = 4          # minibatch steps per round (one chunk)
+    batch_size: int = 64
+    lr: float = 0.05
+    momentum: float = 0.9
+    aggregate_self_weight: float = 0.5   # weight of own model in the average
+    compressor: Any = None        # repro.train.compression.TopK / Int8 / None
+
+
+class GossipTrainer:
+    """Holds per-user replicas and runs gossip rounds."""
+
+    def __init__(
+        self,
+        task_graph: TaskGraph,
+        init_params: Callable[[jax.Array], Any],
+        loss_fn: Callable[[Any, dict], jnp.ndarray],
+        shards: list[ImageDataset],
+        cfg: GossipConfig | None = None,
+        seed: int = 0,
+    ):
+        self.g = task_graph
+        self.cfg = cfg or GossipConfig()
+        self.n = task_graph.num_tasks
+        assert len(shards) == self.n
+        self.shards = shards
+        # All users start from a COMMON initialization (standard FL — early
+        # averaging of independently-initialized models is destructive).
+        key0 = jax.random.PRNGKey(seed)
+        common = init_params(key0)
+        self.params = [jax.tree.map(jnp.copy, common) for _ in range(self.n)]
+        self.opt = SGDM(learning_rate=self.cfg.lr, momentum=self.cfg.momentum)
+        self.opt_state = [self.opt.init(p) for p in self.params]
+        self.residual = [None] * self.n
+        self._rng = np.random.default_rng(seed)
+        self._cursor = [0] * self.n
+        self._loss_fn = loss_fn
+        self._grad = jax.jit(jax.value_and_grad(loss_fn))
+        self.round = 0
+
+    # -- local training ----------------------------------------------------
+    def _local_round(self, i: int) -> float:
+        cfg = self.cfg
+        shard = self.shards[i]
+        losses = []
+        for _ in range(cfg.local_steps):
+            lo = self._cursor[i]
+            hi = lo + cfg.batch_size
+            if hi > len(shard.y):                # new epoch, reshuffle
+                perm = self._rng.permutation(len(shard.y))
+                shard.x[:] = shard.x[perm]
+                shard.y[:] = shard.y[perm]
+                self._cursor[i] = 0
+                lo, hi = 0, cfg.batch_size
+            batch = {
+                "x": jnp.asarray(shard.x[lo:hi]),
+                "y": jnp.asarray(shard.y[lo:hi]),
+            }
+            self._cursor[i] = hi
+            loss, grads = self._grad(self.params[i], batch)
+            self.params[i], self.opt_state[i], _ = self.opt.update(
+                grads, self.opt_state[i], self.params[i]
+            )
+            losses.append(float(loss))
+        return float(np.mean(losses))
+
+    # -- gossip exchange ----------------------------------------------------
+    def _messages(self) -> list[Any]:
+        """What each user broadcasts this round (possibly compressed delta)."""
+        comp = self.cfg.compressor
+        if comp is None:
+            return self.params
+        out = []
+        for i in range(self.n):
+            delta = self.params[i] if self.residual[i] is None else jax.tree.map(
+                lambda p, r: p + r, self.params[i], self.residual[i]
+            )
+            compressed, resid = comp.compress(delta)
+            self.residual[i] = resid
+            out.append(comp.decompress(compressed))   # receiver view
+        return out
+
+    def step_round(self) -> dict:
+        """One gossip round: local training + exchange + aggregate."""
+        losses = [self._local_round(i) for i in range(self.n)]
+        msgs = self._messages()
+        incoming: list[list[Any]] = [[] for _ in range(self.n)]
+        for (i, j) in self.g.edges:
+            incoming[j].append(msgs[i])
+
+        new_params = []
+        w_self = self.cfg.aggregate_self_weight
+        for i in range(self.n):
+            if not incoming[i]:
+                new_params.append(self.params[i])
+                continue
+            w_nb = (1.0 - w_self) / len(incoming[i])
+            agg = jax.tree.map(lambda p: w_self * p, self.params[i])
+            for m in incoming[i]:
+                agg = jax.tree.map(lambda a, q: a + w_nb * q, agg, m)
+            new_params.append(agg)
+        self.params = new_params
+        self.round += 1
+        return {"round": self.round, "mean_loss": float(np.mean(losses))}

@@ -1,0 +1,95 @@
+"""Execution-time simulation of gossip rounds on networked machines.
+
+Bottleneck time of one round under an assignment is exactly the paper's
+Eq. (2) (``repro.core.bqp.bottleneck_time``).  The simulator adds:
+
+  - multi-round timelines (cumulative wall-clock per round),
+  - machine failures (machine disappears at a given round),
+  - stragglers (a machine's effective speed drops by a factor),
+  - communication/computation overlap (beyond-paper: the gossip send of
+    round r overlaps the local compute of round r+1, so round time is
+    max(comp, comm) instead of comp + comm per task).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.bqp import task_times
+from repro.core.graphs import ComputeGraph, TaskGraph
+
+
+@dataclasses.dataclass
+class SimEvent:
+    round: int
+    kind: str            # "fail" | "slowdown"
+    machine: int
+    factor: float = 1.0  # for slowdown: speed multiplier
+
+
+def round_time(
+    task_graph: TaskGraph,
+    compute_graph: ComputeGraph,
+    assignment: np.ndarray,
+    overlap: bool = False,
+) -> float:
+    t_comp, t_comm = task_times(task_graph, compute_graph, assignment)
+    if overlap:
+        return float(np.max(np.maximum(t_comp, t_comm)))
+    return float(np.max(t_comp + t_comm))
+
+
+def apply_event(compute_graph: ComputeGraph, ev: SimEvent) -> ComputeGraph:
+    e = compute_graph.e.copy()
+    C = compute_graph.C.copy()
+    if ev.kind == "slowdown":
+        e[ev.machine] *= ev.factor
+        return ComputeGraph(e=e, C=C)
+    if ev.kind == "fail":
+        keep = [j for j in range(len(e)) if j != ev.machine]
+        return ComputeGraph(e=e[keep], C=C[np.ix_(keep, keep)])
+    raise ValueError(ev.kind)
+
+
+def timeline(
+    task_graph: TaskGraph,
+    compute_graph: ComputeGraph,
+    schedule_fn,
+    num_rounds: int,
+    events: list[SimEvent] = (),
+    overlap: bool = False,
+) -> dict:
+    """Cumulative time per round with re-scheduling on events.
+
+    ``schedule_fn(task_graph, compute_graph) -> assignment`` is called at
+    round 0 and after every event (elastic re-scheduling).
+    """
+    cg = compute_graph
+    assignment = schedule_fn(task_graph, cg)
+    times, cum, reschedules = [], 0.0, []
+    ev_by_round = {}
+    for ev in events:
+        ev_by_round.setdefault(ev.round, []).append(ev)
+    machine_ids = list(range(cg.num_machines))   # live machine labels
+    for r in range(num_rounds):
+        if r in ev_by_round:
+            for ev in ev_by_round[r]:
+                if ev.kind == "fail":
+                    local = machine_ids.index(ev.machine)
+                    cg = apply_event(cg, SimEvent(r, "fail", local))
+                    machine_ids.pop(local)
+                else:
+                    local = machine_ids.index(ev.machine)
+                    cg = apply_event(cg, SimEvent(r, "slowdown", local, ev.factor))
+            assignment = schedule_fn(task_graph, cg)
+            reschedules.append(r)
+        cum += round_time(task_graph, cg, assignment, overlap=overlap)
+        times.append(cum)
+    return {
+        "cumulative_time": np.asarray(times),
+        "final_assignment": assignment,
+        "reschedule_rounds": reschedules,
+        "final_machines": machine_ids,
+    }

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret
+mode on CPU; see EXAMPLE.md for the kernel/ops/ref structure)."""
+
+from repro.kernels.ops import (
+    decode_attention,
+    flash_attention,
+    gossip_mix,
+    rmsnorm,
+)
+
+__all__ = ["decode_attention", "flash_attention", "gossip_mix", "rmsnorm"]

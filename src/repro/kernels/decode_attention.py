@@ -1,0 +1,109 @@
+"""Pallas TPU decode-attention kernel: one query token vs a long KV cache.
+
+This is the memory-bound serve_step hot-spot: per step it streams the
+whole cache (B·S·Hkv·D·2 bytes) through VMEM at HBM bandwidth.  Grid is
+(B, nK) with kv innermost; all H query heads are processed per block so
+the cache is read exactly once.  Block working set: k/v (bk, Hkv, D) +
+acc (H, D) f32 — bk=512, Hkv=8, D=128 ≈ 1.3 MB.
+
+Validated against ``ref.decode_attention_ref`` in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, bk: int, nk: int, g: int,
+):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale             # (H, D)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, Hkv, D)
+    v = v_ref[0].astype(jnp.float32)
+    h, d = q.shape
+    hkv = k.shape[1]
+    qg = q.reshape(hkv, g, d)
+    # logits (Hkv, g, bk)
+    s = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )
+    valid_len = len_ref[0]
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (hkv, g, bk), 2)
+    s = jnp.where(kpos < valid_len, s, NEG_INF)
+
+    m_prev = m_ref[...].reshape(hkv, g)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...].reshape(hkv, g) * corr + jnp.sum(p, axis=2)
+    # pv: (Hkv, g, D)
+    pv = jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )
+    acc = acc_ref[...].reshape(hkv, g, d) * corr[..., None] + pv
+    m_ref[...] = m_new.reshape(h)
+    l_ref[...] = l_new.reshape(h)
+    acc_ref[...] = acc.reshape(h, d)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(
+    q: jnp.ndarray,        # (B, H, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,
+    valid_len: jnp.ndarray,  # (B,) int32
+    *,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    bk = min(block_k, s)
+    assert s % bk == 0, (s, bk)
+    nk = s // bk
+    scale = 1.0 / math.sqrt(d)
+    valid_len = valid_len.astype(jnp.int32).reshape(b, 1)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, bk=bk, nk=nk, g=g
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda ib, ik: (ib, 0, 0)),
+            pl.BlockSpec((1, bk, hkv, d), lambda ib, ik: (ib, ik, 0, 0)),
+            pl.BlockSpec((1, bk, hkv, d), lambda ib, ik: (ib, ik, 0, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ik: (ib, 0), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda ib, ik: (ib, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, valid_len)

@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On TPU these dispatch the compiled kernels; everywhere else they run the
+kernel body in interpret mode (bit-accurate Python execution) so CPU tests
+validate the exact kernel logic.  Set ``REPRO_FORCE_REF=1`` to bypass
+kernels entirely (pure-jnp oracles).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.gossip_mix import gossip_mix_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _force_ref() -> bool:
+    return os.environ.get("REPRO_FORCE_REF", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    q_offset: int = 0):
+    """(B, S, H, D) x (B, S, Hkv, D) -> (B, S, H, D) (model layout)."""
+    del q_offset  # kernel grid assumes aligned self-attention
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if _force_ref():
+        out = ref.flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+    else:
+        out = flash_attention_fwd(
+            qt, kt, vt, causal=causal, window=window, interpret=_interpret()
+        )
+    return jnp.swapaxes(out, 1, 2)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, valid_len):
+    """(B, H, D) vs (B, S, Hkv, D) cache -> (B, H, D)."""
+    if _force_ref():
+        return ref.decode_attention_ref(q, k_cache, v_cache, valid_len)
+    return decode_attention_fwd(
+        q, k_cache, v_cache, valid_len, interpret=_interpret()
+    )
+
+
+@jax.jit
+def rmsnorm(x, scale):
+    """(..., D) fused RMSNorm."""
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    if _force_ref():
+        out = ref.rmsnorm_ref(x2, scale)
+    else:
+        out = rmsnorm_fwd(x2, scale, interpret=_interpret())
+    return out.reshape(shape)
+
+
+@jax.jit
+def gossip_mix(stacked, weights):
+    """(N, L) neighbor params + (N,) weights -> (L,) aggregated params."""
+    if _force_ref():
+        return ref.gossip_mix_ref(stacked, weights)
+    return gossip_mix_fwd(stacked, weights, interpret=_interpret())

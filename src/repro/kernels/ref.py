@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the test ground truth)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,      # (B, H, S, D)
+    k: jnp.ndarray,      # (B, Hkv, S, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) * scale
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,        # (B, H, D)
+    k_cache: jnp.ndarray,  # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,
+    valid_len: jnp.ndarray,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32) * scale
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
+    mask = jnp.arange(s)[None] < jnp.reshape(valid_len, (-1, 1))
+    logits = jnp.where(mask[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def gossip_mix_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    return (
+        weights.astype(jnp.float32) @ stacked.astype(jnp.float32)
+    ).astype(stacked.dtype)

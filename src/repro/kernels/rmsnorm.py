@@ -1,0 +1,45 @@
+"""Pallas fused RMSNorm kernel: one HBM round-trip per row block.
+
+x (R, D) -> x * rsqrt(mean(x², -1) + eps) * (1 + scale).  Row blocks of
+``block_rows`` keep (block_rows, D) in VMEM (D ≤ 12288 f32 = 48 KB/row).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * (1.0 + w)).astype(o_ref.dtype)
+
+
+def rmsnorm_fwd(
+    x: jnp.ndarray,      # (R, D)
+    scale: jnp.ndarray,  # (D,)
+    *,
+    eps: float = 1e-6,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    r, d = x.shape
+    br = min(block_rows, r)
+    assert r % br == 0, (r, br)
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)

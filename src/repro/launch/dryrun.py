@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count="
+    f"{os.environ.get('REPRO_DRYRUN_DEVICES', '512')} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This proves the distribution config is coherent without hardware: the SPMD
+partitioner must accept our shardings, the compiled memory budget must fit,
+and the collective schedule is extracted for the roofline report
+(EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod-only|--singlepod-only]
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import collective_stats, roofline_terms
+from repro.launch.mesh import make_production_mesh, mesh_summary
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    make_rules,
+    param_shardings,
+)
+from repro.models import build_model
+from repro.models.flops import model_flops, param_counts
+from repro.shapes import SHAPES, shape_applicable
+from repro.train.optim import AdamW, AdamWState
+from repro.train.trainer import (
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _attach(shapes, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes,
+        shardings,
+    )
+
+
+def state_shardings(state_shapes, rules):
+    ps = param_shardings(state_shapes["params"], rules)
+    mirror = lambda tree: jax.tree.map(lambda _, s: s, tree, ps)
+    opt = state_shapes["opt"]
+    return {
+        "params": ps,
+        "opt": AdamWState(
+            step=NamedSharding(rules.mesh, P()),
+            m=mirror(opt.m),
+            v=mirror(opt.v),
+        ),
+    }
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, sharding_overrides=None,
+               cfg_overrides=None):
+    """Build and lower the step function for one cell. Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    spec = SHAPES[shape_name]
+    if spec.kind in ("prefill", "decode"):
+        # serving checkpoints are bf16 (no fp32 master / optimizer state)
+        cfg = cfg.replace(param_dtype=jnp.bfloat16)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    api = build_model(cfg)
+    rules = make_rules(cfg, mesh, **(sharding_overrides or {}))
+
+    batch_shapes = api.input_specs(spec)
+    batch_sds = _attach(batch_shapes, batch_shardings(batch_shapes, rules))
+
+    if spec.kind == "train":
+        opt = AdamW(learning_rate=1e-4)
+        step = make_train_step(api, opt, rules)
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(api, opt, jax.random.PRNGKey(0))
+        )
+        state_sds = _attach(state_shapes, state_shardings(state_shapes, rules))
+        lowered = jax.jit(step, donate_argnums=0).lower(state_sds, batch_sds)
+    elif spec.kind == "prefill":
+        step = make_prefill_step(api, rules)
+        p_shapes = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+        p_sds = _attach(p_shapes, param_shardings(p_shapes, rules))
+        lowered = jax.jit(step).lower(p_sds, batch_sds)
+    else:  # decode
+        step = make_decode_step(api, rules)
+        p_shapes = jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+        p_sds = _attach(p_shapes, param_shardings(p_shapes, rules))
+        cache_shapes = api.cache_specs(spec)
+        cache_sds = _attach(cache_shapes, cache_shardings(cache_shapes, rules))
+        lowered = jax.jit(step, donate_argnums=1).lower(p_sds, cache_sds, batch_sds)
+    return lowered, {"cfg": cfg, "spec": spec}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             *, sharding_overrides=None, tag: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_summary(mesh),
+        "devices": int(n_dev),
+        "status": "ok",
+    }
+    t0 = time.perf_counter()
+    try:
+        lowered, meta = lower_cell(
+            arch, shape_name, mesh, sharding_overrides=sharding_overrides
+        )
+        rec["lower_s"] = round(time.perf_counter() - t0, 2)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t1, 2)
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0] if cost else {}
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        rec["hlo_flops_per_device"] = flops
+        rec["hlo_bytes_per_device"] = bytes_acc
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "alias_size_in_bytes",
+                "generated_code_size_in_bytes",
+            ):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+            args = rec.get("argument_size_in_bytes", 0)
+            alias = rec.get("alias_size_in_bytes", 0)
+            out = rec.get("output_size_in_bytes", 0)
+            tmp = rec.get("temp_size_in_bytes", 0)
+            rec["hbm_peak_bytes_per_device"] = args + tmp + max(out - alias, 0)
+
+        text = compiled.as_text()
+        # loop-aware accounting (scan bodies × trip counts) — the raw
+        # cost_analysis numbers above undercount scanned layers by ~L×.
+        from repro.launch.hlo_stats import analyze_hlo
+
+        stats = analyze_hlo(text)
+        rec["la_flops_per_device"] = stats.flops
+        rec["la_bytes_per_device"] = stats.bytes
+        rec["la_link_bytes_per_device"] = stats.link_bytes
+        rec["collectives"] = {
+            "counts": stats.coll_counts,
+            "payload_bytes": stats.coll_payload,
+            "link_bytes": stats.link_bytes,
+        }
+
+        mf = model_flops(meta["cfg"], meta["spec"])
+        rec["model_flops_total"] = mf["model_flops"]
+        rec["params_total"] = mf["total"]
+        rec["params_active"] = mf["active"]
+        rec["model_flops_per_device"] = mf["model_flops"] / n_dev
+        rec["useful_flops_ratio"] = (
+            rec["model_flops_per_device"] / stats.flops if stats.flops else 0.0
+        )
+        rec.update(
+            roofline_terms(stats.flops, stats.bytes, stats.link_bytes)
+        )
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        jax.clear_caches()
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        mesh_tag = "multipod" if multi_pod else "pod"
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_tag}{suffix}.json"
+        )
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true", help="2x16x16 mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multipod]
+    for a in archs:
+        for s in shapes:
+            if not shape_applicable(a, s):
+                continue
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_fail = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, mp, args.out)
+        if rec["status"] == "ok":
+            print(
+                f"OK   {a:20s} {s:12s} {rec['mesh']:28s} "
+                f"lower {rec['lower_s']:6.1f}s compile {rec['compile_s']:6.1f}s "
+                f"flops/dev {rec['hlo_flops_per_device']:.3e} "
+                f"coll {rec['collectives']['link_bytes']:.3e}B "
+                f"dominant={rec['dominant']}",
+                flush=True,
+            )
+        else:
+            n_fail += 1
+            print(f"FAIL {a:20s} {s:12s} multipod={mp}: {rec['error']}", flush=True)
+    print(f"\n{len(cells) - n_fail}/{len(cells)} cells OK")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Elastic runtime: failures and stragglers trigger SDP re-scheduling.
+
+The paper's scheduler runs once; at production scale machines fail and
+slow down, so we keep (G_task, G_compute) live:
+
+  - ``on_failure(machine)`` removes the machine and re-solves;
+  - ``observe_round(times)`` EMA-updates machine speeds from measured
+    per-machine round times and re-solves when the predicted bottleneck
+    improves by more than ``reschedule_threshold``;
+  - every re-solve can warm-start from the surviving assignment (the
+    rounding stage seeds its candidate pool with it).
+
+This is the scheduling part of fault tolerance; state recovery is
+``repro.ckpt`` (checkpoint/restore around the failure).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.bqp import bottleneck_time
+from repro.core.graphs import ComputeGraph, TaskGraph
+from repro.core.scheduler import Schedule, schedule
+
+
+@dataclasses.dataclass
+class ElasticScheduler:
+    task_graph: TaskGraph
+    compute_graph: ComputeGraph
+    method: str = "sdp"
+    seed: int = 0
+    reschedule_threshold: float = 0.10   # fractional bottleneck improvement
+    ema_alpha: float = 0.3
+
+    def __post_init__(self):
+        self.machine_ids = list(range(self.compute_graph.num_machines))
+        self.current: Schedule = schedule(
+            self.task_graph, self.compute_graph, self.method, seed=self.seed
+        )
+        self.history: list[dict] = [
+            {"event": "init", "bottleneck": self.current.bottleneck}
+        ]
+
+    # -- failures ----------------------------------------------------------
+    def on_failure(self, machine_id: int) -> Schedule:
+        local = self.machine_ids.index(machine_id)
+        keep = [j for j in range(len(self.machine_ids)) if j != local]
+        cg = self.compute_graph
+        self.compute_graph = ComputeGraph(
+            e=cg.e[keep], C=cg.C[np.ix_(keep, keep)]
+        )
+        self.machine_ids.pop(local)
+        self.current = schedule(
+            self.task_graph, self.compute_graph, self.method, seed=self.seed
+        )
+        self.history.append(
+            {
+                "event": f"fail:{machine_id}",
+                "bottleneck": self.current.bottleneck,
+                "machines": len(self.machine_ids),
+            }
+        )
+        return self.current
+
+    # -- stragglers ----------------------------------------------------------
+    def observe_round(self, per_machine_time: np.ndarray) -> Schedule | None:
+        """Update speed estimates from measured times; maybe re-schedule.
+
+        ``per_machine_time[j]`` is the measured busy time of machine j this
+        round; implied speed = assigned work / time.
+        """
+        cg = self.compute_graph
+        loads = np.zeros(cg.num_machines)
+        np.add.at(loads, self.current.assignment, self.task_graph.p)
+        implied = np.where(
+            per_machine_time > 0, loads / np.maximum(per_machine_time, 1e-12), cg.e
+        )
+        implied = np.where(loads > 0, implied, cg.e)   # idle machines: keep
+        new_e = (1 - self.ema_alpha) * cg.e + self.ema_alpha * implied
+        self.compute_graph = ComputeGraph(e=new_e, C=cg.C)
+
+        current_t = bottleneck_time(
+            self.task_graph, self.compute_graph, self.current.assignment
+        )
+        candidate = schedule(
+            self.task_graph, self.compute_graph, self.method, seed=self.seed
+        )
+        if candidate.bottleneck < current_t * (1 - self.reschedule_threshold):
+            self.current = candidate
+            self.history.append(
+                {"event": "migrate", "bottleneck": candidate.bottleneck}
+            )
+            return candidate
+        self.history.append({"event": "keep", "bottleneck": current_t})
+        return None

@@ -1,0 +1,131 @@
+"""Post-SPMD HLO analysis: collective bytes, per-device roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes of the *per-device* module;
+collective traffic is not included, so we parse the compiled HLO text and
+sum operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute, converted to per-device link bytes with
+ring-algorithm factors:
+
+    all-reduce      2·(g-1)/g · bytes
+    all-gather        (g-1)/g · full (gathered) bytes
+    reduce-scatter    (g-1)/g · full (input) bytes
+    all-to-all        (g-1)/g · bytes
+    collective-permute          bytes
+
+v5e hardware constants are the roofline denominators.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (≈ per direction)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_ARR_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{(.*?)\}")
+
+
+def _array_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _ARR_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_op: dict            # raw payload bytes per op kind (per device)
+    link_bytes: float            # ring-model per-device link bytes (total)
+
+    def to_json(self):
+        return {
+            "counts": dict(self.counts),
+            "bytes_by_op": {k: float(v) for k, v in self.bytes_by_op.items()},
+            "link_bytes": float(self.link_bytes),
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    counts: dict = defaultdict(int)
+    raw: dict = defaultdict(float)
+    link = 0.0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        out_bytes = _array_bytes(m.group("out"))
+        g = _group_size(line)
+        counts[op] += 1
+        if op == "all-gather":
+            payload = out_bytes                      # gathered result
+            factor = (g - 1) / g
+        elif op == "reduce-scatter":
+            payload = out_bytes * g                  # pre-scatter input
+            factor = (g - 1) / g
+        elif op == "all-reduce":
+            payload = out_bytes
+            factor = 2 * (g - 1) / g
+        elif op == "all-to-all":
+            payload = out_bytes
+            factor = (g - 1) / g
+        else:                                        # collective-permute
+            payload = out_bytes
+            factor = 1.0
+        raw[op] += payload
+        link += payload * factor
+    return CollectiveStats(counts=dict(counts), bytes_by_op=dict(raw),
+                           link_bytes=link)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [groups, group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _SRC_TGT_RE.search(line)
+    if m:
+        return 2
+    return 2
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    link_bytes_per_device: float,
+) -> dict:
+    compute = flops_per_device / PEAK_FLOPS
+    memory = bytes_per_device / HBM_BW
+    collective = link_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms

@@ -1,0 +1,285 @@
+"""Loop-aware accounting over compiled (post-SPMD) HLO text.
+
+XLA's ``cost_analysis()`` visits each computation once, so a
+``jax.lax.scan`` over L layers under-counts FLOPs/bytes/collectives by
+~L×.  The compiled HLO text, however, carries exact trip counts
+(``backend_config={"known_trip_count":{"n":"36"}}``), so we re-account:
+
+  cost(entry) = Σ own ops + Σ fusion/call children + Σ trip(while) · cost(body)
+
+Per-op accounting:
+  - FLOPs: ``dot`` ops (2 · |out| · Π contracting dims) and ``convolution``
+    (2 · |out| · kernel reduction) — matmuls dominate every model here;
+    elementwise flops are ignored (validated ≲10% vs cost_analysis on
+    unrolled modules).
+  - HBM bytes: Σ (output + operand bytes) of top-level (non-fused) ops,
+    skipping shape-only ops (tuple/parameter/bitcast/get-tuple-element/...).
+  - Collectives: same ring-model link-byte accounting as hlo_analysis, now
+    multiplied by enclosing loop trip counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s*([a-z][\w\-]*)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DOT_OPERANDS_RE = re.compile(r"\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_BYTES_OPS = {
+    "tuple", "get-tuple-element", "parameter", "bitcast", "constant",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done", "bitcast-convert",
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start",
+}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(txt: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    kind: str
+    out_txt: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list
+    shapes: dict            # op name -> output shape text
+
+
+def _parse_computations(text: str) -> dict[str, "_Computation"]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if "/*" in line:
+            line = re.sub(r"/\*.*?\*/", "", line)
+        stripped = line.rstrip()
+        if (
+            stripped.endswith("{")
+            and "->" in line
+            and not line.startswith(" ")
+            and "=" not in line.split("->")[0].split("(")[0]
+        ):
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr:
+                cur = _Computation(hdr.group(1), [], {})
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}" or line.strip().startswith("}"):
+            # keep cur until the next header; nested braces don't occur
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, out_txt, kind = m.group(1), m.group(2), m.group(3)
+        cur.ops.append(_Op(name=name, kind=kind, out_txt=out_txt, line=line))
+        cur.shapes[name] = out_txt
+    return comps
+
+
+def _dot_flops(op: _Op, shapes: dict) -> float:
+    out_elems = 1
+    dims = _shape_dims(op.out_txt)
+    if dims:
+        for d in dims[0][1]:
+            out_elems *= d
+    lhs_m = _DOT_OPERANDS_RE.search(op.line[op.line.index(op.kind) :])
+    contract = _LHS_CONTRACT_RE.search(op.line)
+    k = 1
+    if lhs_m and contract:
+        lhs_shape_txt = shapes.get(lhs_m.group(1), "")
+        ldims = _shape_dims(lhs_shape_txt)
+        if ldims:
+            lshape = ldims[0][1]
+            for ci in contract.group(1).split(","):
+                if ci != "" and int(ci) < len(lshape):
+                    k *= lshape[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: _Op, shapes: dict) -> float:
+    out_elems = 1
+    dims = _shape_dims(op.out_txt)
+    if dims:
+        for d in dims[0][1]:
+            out_elems *= d
+    m = _DOT_OPERANDS_RE.search(op.line[op.line.index(op.kind) :])
+    k = 1
+    if m:
+        rhs = _shape_dims(shapes.get(m.group(2), ""))
+        if rhs:
+            for d in rhs[0][1][:-1]:
+                k *= d
+    return 2.0 * out_elems * k
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _collective_link_bytes(op: _Op) -> tuple[str, float, float]:
+    """(kind, payload_bytes, link_bytes) for one collective op."""
+    kind = op.kind.replace("-start", "")
+    out_bytes = _shape_bytes(op.out_txt)
+    g = _group_size(op.line)
+    if kind == "all-gather":
+        payload, factor = out_bytes, (g - 1) / g
+    elif kind == "reduce-scatter":
+        payload, factor = out_bytes * g, (g - 1) / g
+    elif kind == "all-reduce":
+        payload, factor = out_bytes, 2 * (g - 1) / g
+    elif kind == "all-to-all":
+        payload, factor = out_bytes, (g - 1) / g
+    else:  # collective-permute
+        payload, factor = out_bytes, 1.0
+    return kind, payload, payload * factor
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    link_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+    coll_payload: dict = dataclasses.field(default_factory=dict)
+
+    def scaled(self, k: float) -> "HloStats":
+        return HloStats(
+            flops=self.flops * k,
+            bytes=self.bytes * k,
+            link_bytes=self.link_bytes * k,
+            coll_counts={a: v * k for a, v in self.coll_counts.items()},
+            coll_payload={a: v * k for a, v in self.coll_payload.items()},
+        )
+
+    def add(self, other: "HloStats"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.link_bytes += other.link_bytes
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v
+        for k, v in other.coll_payload.items():
+            self.coll_payload[k] = self.coll_payload.get(k, 0) + v
+
+    def to_json(self):
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "link_bytes": self.link_bytes,
+            "coll_counts": self.coll_counts,
+            "coll_payload": self.coll_payload,
+        }
+
+
+def analyze_hlo(text: str, entry: str | None = None) -> HloStats:
+    comps = _parse_computations(text)
+    if not comps:
+        return HloStats()
+    if entry is None:
+        # entry computation: the one marked ENTRY, else the largest
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+        entry = m.group(1) if m else max(comps, key=lambda c: len(comps[c].ops))
+
+    memo: dict[str, HloStats] = {}
+
+    def cost(cname: str, stack: tuple = ()) -> HloStats:
+        if cname in memo:
+            return memo[cname]
+        if cname not in comps or cname in stack:
+            return HloStats()
+        comp = comps[cname]
+        total = HloStats()
+        for op in comp.ops:
+            if op.kind == "while":
+                trip_m = _TRIP_RE.search(op.line)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                refs = dict(
+                    re.findall(r"(body|condition)=%?([\w.\-]+)", op.line)
+                )
+                if "body" in refs:
+                    total.add(cost(refs["body"], stack + (cname,)).scaled(trip))
+                if "condition" in refs:
+                    total.add(cost(refs["condition"], stack + (cname,)).scaled(trip))
+                total.bytes += _shape_bytes(op.out_txt)
+                continue
+            if op.kind in ("fusion", "call", "conditional", "async-start",
+                           "custom-call", "map", "reduce", "sort", "scatter",
+                           "select-and-scatter", "reduce-window"):
+                for sub in _CALLS_RE.findall(op.line):
+                    total.add(cost(sub, stack + (cname,)))
+            if op.kind == "dot":
+                total.flops += _dot_flops(op, comp.shapes)
+            elif op.kind == "convolution":
+                total.flops += _conv_flops(op, comp.shapes)
+            if op.kind in _COLLECTIVES:
+                kind, payload, link = _collective_link_bytes(op)
+                total.link_bytes += link
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+                total.coll_payload[kind] = total.coll_payload.get(kind, 0) + payload
+            # HBM traffic: top-level materialized ops only
+            if op.kind not in _SKIP_BYTES_OPS and "fused_computation" not in cname:
+                total.bytes += _shape_bytes(op.out_txt)
+                tail = op.line[op.line.index(op.kind) :]
+                for operand in _OPERAND_RE.findall(tail)[:8]:
+                    if operand in comp.shapes:
+                        total.bytes += _shape_bytes(comp.shapes[operand])
+        memo[cname] = total
+        return total
+
+    # fused computations are reached via their fusion op's `calls=`; their
+    # internal ops contribute flops but not HBM bytes (handled above).
+    return cost(entry)

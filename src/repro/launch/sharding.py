@@ -1,0 +1,294 @@
+"""Sharding rules: FSDP x TP x SP layouts for every assigned architecture.
+
+Layout summary (see DESIGN.md §5):
+  - batch dims shard over the data axes (('pod', 'data') multi-pod);
+  - params: "heavy" dim FSDP-sharded over 'data' (ZeRO-3 — optimizer state
+    follows for free), head/ffn/vocab dims tensor-parallel over 'model';
+  - residual stream between blocks is sequence-sharded over 'model'
+    (Megatron-style sequence parallelism) so saved activations stay small;
+  - decode KV caches shard *sequence* over 'model' (kv_heads of most archs
+    are 8 < 16) and run a distributed flash-softmax inside ``shard_map``;
+  - whisper (12 heads, not 16-divisible): attention params replicated over
+    'model', MLP/vocab still TP-sharded (``shard_heads=False``).
+
+``MeshRules.constrain`` is the only entry point models use, so models stay
+mesh-agnostic; ``state_shardings``/``batch_shardings`` produce the jit
+in/out shardings for the launcher and the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import re
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+@dataclasses.dataclass
+class MeshRules:
+    """Activation-sharding constraints + distributed decode attention."""
+
+    mesh: Mesh
+    cfg: ModelConfig
+    fsdp_axis: str = "data"
+    tp_axis: str = "model"
+    sequence_parallel: bool = True
+    seq_shard_decode: bool = True
+
+    @property
+    def dp(self) -> tuple[str, ...]:
+        return tuple(a for a in self.mesh.axis_names if a != self.tp_axis)
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.dp:
+            out *= self.mesh.shape[a]
+        return out
+
+    @property
+    def shard_heads(self) -> bool:
+        return _divisible(self.cfg.num_heads, self.tp_size)
+
+    def _ns(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, kind: str):
+        spec = self.spec_for(kind, x.shape)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self._ns(spec))
+
+    def spec_for(self, kind: str, shape: tuple[int, ...]) -> P | None:
+        dp, tp = self.dp, self.tp_axis
+        if kind == "hidden":                      # (B, S, D)
+            if self.sequence_parallel and _divisible(shape[1], self.tp_size):
+                return P(dp, tp, None)
+            return P(dp, None, None)
+        if kind == "hidden_decode":               # (B, 1, D)
+            return P(dp, None, None)
+        if kind == "heads":                       # (B, S, H, hd)
+            if self.shard_heads and _divisible(shape[2], self.tp_size):
+                return P(dp, None, tp, None)
+            return P(dp, None, None, None)
+        if kind == "kv_heads":                    # (B, S, Hkv, hd)
+            if self.shard_heads and _divisible(shape[2], self.tp_size):
+                return P(dp, None, tp, None)
+            return P(dp, None, None, None)
+        if kind == "ffn":                         # (B, S, F)
+            if _divisible(shape[2], self.tp_size):
+                return P(dp, None, tp)
+            return P(dp, None, None)
+        if kind == "logits":                      # (B, S, V)
+            return P(dp, None, tp)
+        if kind == "logits_decode":               # (B, V)
+            return P(dp, tp)
+        if kind == "cache":                       # (B, S, Hkv, hd) seq-sharded
+            b_spec = dp if _divisible(shape[0], self.dp_size) else None
+            if self.seq_shard_decode and _divisible(shape[1], self.tp_size):
+                return P(b_spec, tp, None, None)
+            return P(b_spec, None, None, None)
+        if kind == "moe_tokens":                  # (B, E, C, D)
+            e_spec = tp if _divisible(shape[1], self.tp_size) else None
+            return P(dp if _divisible(shape[0], self.dp_size) else None,
+                     e_spec, None, None)
+        if kind == "moe_hidden":                  # (B, E, C, F)
+            b_spec = dp if _divisible(shape[0], self.dp_size) else None
+            if _divisible(shape[1], self.tp_size):
+                return P(b_spec, tp, None, None)
+            if _divisible(shape[3], self.tp_size):
+                return P(b_spec, None, None, tp)
+            return P(b_spec, None, None, None)
+        return None
+
+    # -- distributed decode attention -------------------------------------
+    def sharded_decode_attention(self, q, k_cache, v_cache, valid):
+        """q (B,H,hd) replicated over tp; caches seq-sharded over tp."""
+        from jax import shard_map
+
+        from repro.models.attention import (
+            decode_attention_local,
+            decode_attention_seq_sharded,
+        )
+
+        if not _divisible(k_cache.shape[1], self.tp_size):
+            return decode_attention_local(
+                q, k_cache, v_cache, jnp.sum(valid, axis=1)
+            )
+        dp, tp = self.dp, self.tp_axis
+        b = dp if _divisible(q.shape[0], self.dp_size) else None
+        fn = functools.partial(decode_attention_seq_sharded, axis_name=tp)
+        return shard_map(
+            fn,
+            mesh=self.mesh,
+            in_specs=(
+                P(b, None, None),
+                P(b, tp, None, None),
+                P(b, tp, None, None),
+                P(b, tp),
+            ),
+            out_specs=P(b, None, None),
+            check_vma=False,
+        )(q, k_cache, v_cache, valid)
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs (pattern-matched on tree paths)
+# ---------------------------------------------------------------------------
+
+
+def _param_spec(path: str, shape: tuple[int, ...], rules: MeshRules) -> P:
+    """PartitionSpec for one parameter leaf, by name + shape."""
+    cfg, tp, fsdp = rules.cfg, rules.tp_axis, rules.fsdp_axis
+    tps = rules.tp_size
+    fs = rules.mesh.shape[fsdp]
+    # stacked-per-layer leaves carry a leading group dim; tree paths render
+    # as "['params']['groups'][0]['attn']['wq']"
+    stacked = "groups" in path or "_layers" in path
+    nd = len(shape)
+    core = shape[1:] if stacked else shape
+
+    def build(spec_core: tuple) -> P:
+        spec_core = tuple(spec_core) + (None,) * (len(core) - len(spec_core))
+        return P(*(((None,) + spec_core) if stacked else spec_core))
+
+    def ok(axis_len, size):
+        return _divisible(axis_len, size)
+
+    heads_shardable = rules.shard_heads
+    kv_shardable = heads_shardable and _divisible(cfg.num_kv_heads, tps)
+
+    if re.search(r"\bembed\b", path):
+        return build((tp if ok(core[0], tps) else None,
+                      fsdp if ok(core[1], fs) else None))
+    if "lm_head" in path:
+        return build((fsdp if ok(core[0], fs) else None,
+                      tp if ok(core[1], tps) else None))
+    if re.search(r"w[qk]|wv", path) and nd - int(stacked) == 2:
+        out_ok = ok(core[1], tps)
+        if re.search(r"w[kv]", path):
+            out_ok = out_ok and kv_shardable
+        else:
+            out_ok = out_ok and heads_shardable
+        return build((fsdp if ok(core[0], fs) else None, tp if out_ok else None))
+    if "wo" in path:
+        return build((tp if (heads_shardable and ok(core[0], tps)) else None,
+                      fsdp if ok(core[1], fs) else None))
+    if re.search(r"w_gate|w_up", path) and len(core) == 3:   # MoE (E, D, F)
+        if ok(core[0], tps):
+            return build((tp, fsdp if ok(core[1], fs) else None, None))
+        return build((None, fsdp if ok(core[1], fs) else None,
+                      tp if ok(core[2], tps) else None))
+    if "w_down" in path and len(core) == 3:                  # MoE (E, F, D)
+        if ok(core[0], tps):
+            return build((tp, None, fsdp if ok(core[2], fs) else None))
+        return build((None, tp if ok(core[1], tps) else None,
+                      fsdp if ok(core[2], fs) else None))
+    if re.search(r"w_gate|w_up", path):
+        return build((fsdp if ok(core[0], fs) else None,
+                      tp if ok(core[1], tps) else None))
+    if "w_down" in path:
+        return build((tp if ok(core[0], tps) else None,
+                      fsdp if ok(core[1], fs) else None))
+    if "router" in path:
+        return build((fsdp if ok(core[0], fs) else None, None))
+    # SSM: keep fused in_proj replicated on the out dim (mixed segments);
+    # shard the heavy input dim FSDP-style.  out_proj shards d_inner over tp.
+    if "in_proj" in path and len(core) == 2:
+        return build((fsdp if ok(core[0], fs) else None,
+                      tp if ("in_proj_" in path and ok(core[1], tps)) else None))
+    if "out_proj" in path:
+        return build((tp if ok(core[0], tps) else None,
+                      fsdp if ok(core[1], fs) else None))
+    if re.search(r"gate_[ax]_w", path):
+        return build((fsdp if ok(core[0], fs) else None,
+                      tp if ok(core[1], tps) else None))
+    # 1-D scales / biases / conv kernels: replicated
+    return build(())
+
+
+def param_pspecs(params: Any, rules: MeshRules):
+    """Pytree of PartitionSpec matching ``params``."""
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        return _param_spec(pstr, leaf.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def param_shardings(params: Any, rules: MeshRules):
+    return jax.tree.map(
+        lambda s: NamedSharding(rules.mesh, s), param_pspecs(params, rules)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(batch_specs: Any, rules: MeshRules):
+    """Shard every batch input over the data axes on dim 0 (positions have
+    a leading 3-axis for M-RoPE; enc_frames etc. follow the same rule).
+    Batches smaller than the data axes (e.g. long_500k batch=1) replicate."""
+    dp = rules.dp
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.ndim >= 2 and leaf.shape[0] == 3:      # (3, B, S) positions
+            b_ok = _divisible(leaf.shape[1], rules.dp_size)
+            return P(None, dp if b_ok else None, *(None,) * (leaf.ndim - 2))
+        b_ok = _divisible(leaf.shape[0], rules.dp_size)
+        return P(dp if b_ok else None, *(None,) * (leaf.ndim - 1))
+
+    return jax.tree.map(
+        lambda l: NamedSharding(rules.mesh, spec(l)), batch_specs
+    )
+
+
+def cache_shardings(cache_specs: Any, rules: MeshRules):
+    """KV caches: (.., B, S, Hkv, hd) -> batch over dp, seq over tp when the
+    leaf is 4-D+ and divisible; SSM/LRU states: batch over dp only."""
+    dp, tp = rules.dp, rules.tp_axis
+    tps = rules.tp_size
+
+    def visit(path, leaf):
+        pstr = jax.tree_util.keystr(path)
+        nd = leaf.ndim
+        stacked = "groups" in pstr or leaf.ndim >= 5
+        off = 1 if stacked else 0
+        spec = [None] * nd
+        if nd > off and _divisible(leaf.shape[off], rules.dp_size):
+            spec[off] = dp
+        is_kv = re.search(r"\['(k|v|enc_k|enc_v)'\]", pstr)
+        if (
+            rules.seq_shard_decode
+            and is_kv
+            and nd >= off + 2
+            and _divisible(leaf.shape[off + 1], tps)
+        ):
+            spec[off + 1] = tp
+        return NamedSharding(rules.mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_specs)
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, **kw) -> MeshRules:
+    return MeshRules(mesh=mesh, cfg=cfg, **kw)

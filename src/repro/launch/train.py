@@ -1,0 +1,97 @@
+"""Production training launcher.
+
+On real hardware this runs under the production mesh; on this CPU
+container use ``--smoke`` (reduced config, no mesh) — the full configs are
+exercised via ``repro.launch.dryrun``.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b --smoke \
+        --steps 50 --seq 128 --batch 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager, config_hash
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.data.synthetic import LMStream
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.sharding import batch_shardings, make_rules
+from repro.models import build_model
+from repro.train.optim import AdamW, cosine_warmup_schedule
+from repro.train.trainer import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-8b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", choices=["none", "debug", "pod", "multipod"],
+                    default="none")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.family in ("vlm", "encdec"):
+        raise SystemExit(
+            f"{args.arch} needs a frontend stub batch; use dryrun/smoke tests"
+        )
+    api = build_model(cfg)
+
+    rules = None
+    if args.mesh != "none":
+        mesh = (
+            make_debug_mesh() if args.mesh == "debug"
+            else make_production_mesh(multi_pod=args.mesh == "multipod")
+        )
+        rules = make_rules(cfg, mesh)
+        print(f"mesh: {mesh}")
+
+    opt = AdamW(
+        learning_rate=cosine_warmup_schedule(args.lr, 20, args.steps),
+    )
+    state = init_train_state(api, opt, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"{args.arch}{' (smoke)' if args.smoke else ''}: "
+          f"{n_params/1e6:.1f}M params, {args.steps} steps")
+
+    start = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir)
+        if args.resume and mgr.latest_step() is not None:
+            state, manifest = mgr.load(state)
+            start = manifest["step"]
+            print(f"resumed at step {start}")
+
+    step_fn = jax.jit(make_train_step(api, opt, rules), donate_argnums=0)
+    stream = LMStream(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch
+    )
+    t0 = time.perf_counter()
+    for i in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(i).items()}
+        state, metrics = step_fn(state, batch)
+        if (i + 1) % 10 == 0 or i == start:
+            print(f"step {i+1:4d}  loss {float(metrics['loss']):.4f}", flush=True)
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, state,
+                     metadata={"data_step": i + 1,
+                               "config": config_hash(cfg)})
+    print(f"done in {time.perf_counter()-t0:.0f}s; "
+          f"final loss {float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Pure-JAX model zoo for the assigned architectures."""
+
+from repro.models.api import ModelAPI, build_model
+from repro.models.common import ModelConfig
+from repro.models.flops import model_flops, param_counts
+
+__all__ = ["ModelAPI", "ModelConfig", "build_model", "model_flops", "param_counts"]

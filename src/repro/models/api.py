@@ -1,0 +1,191 @@
+"""Uniform model API: build any assigned architecture behind one interface.
+
+``build_model(cfg)`` returns a ``ModelAPI`` whose members are pure
+functions suitable for ``jax.jit``:
+
+  - ``init_params(rng)``
+  - ``loss_fn(params, batch)``            (training)
+  - ``forward(params, batch)``            (prefill: logits, no loss/opt)
+  - ``init_cache(batch, seq_len)``        (decode state)
+  - ``decode_step(params, cache, batch)`` (one serve step)
+  - ``input_specs(shape)``                (ShapeDtypeStruct stand-ins,
+                                           no device allocation — dry-run)
+
+Batch layouts per family are documented in ``input_specs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.shapes import ShapeSpec
+from repro.models import transformer as tf
+from repro.models import whisper as wh
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable            # (params, batch, rules=None) -> scalar
+    forward: Callable            # (params, batch, rules=None) -> logits
+    init_cache: Callable         # (batch, seq_len) -> cache pytree
+    decode_step: Callable        # (params, cache, batch, rules=None) -> (logits, cache)
+    input_specs: Callable        # (ShapeSpec) -> batch pytree of SDS
+    cache_specs: Callable        # (ShapeSpec) -> cache pytree of SDS
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _whisper_seqs(spec: ShapeSpec) -> tuple[int, int]:
+    """Encoder frames get the full seq_len; decoder gets seq_len // 4
+    (whisper's audio:text ratio is ≈3-4:1; see DESIGN.md)."""
+    return spec.seq_len, max(spec.seq_len // 4, 64)
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return _build_whisper(cfg)
+    return _build_lm(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM families (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+
+def _build_lm(cfg: ModelConfig) -> ModelAPI:
+    uses_embeds = cfg.family in ("vlm",)
+
+    def init_params(rng):
+        return tf.init_lm_params(rng, cfg)
+
+    def loss_fn(params, batch, rules=None):
+        return tf.lm_loss(params, batch, cfg, rules)
+
+    def forward(params, batch, rules=None):
+        return tf.lm_forward(
+            params,
+            batch.get("tokens"),
+            cfg,
+            rules,
+            positions=batch.get("positions"),
+            inputs_embeds=batch.get("inputs_embeds"),
+        )
+
+    def init_cache(batch, seq_len):
+        return tf.init_decode_cache(cfg, batch, seq_len)
+
+    def decode_step(params, cache, batch, rules=None):
+        return tf.lm_decode_step(
+            params,
+            cache,
+            batch.get("tokens"),
+            batch["pos"],
+            cfg,
+            rules,
+            inputs_embeds=batch.get("inputs_embeds"),
+        )
+
+    def input_specs(spec: ShapeSpec):
+        b, s = spec.global_batch, spec.seq_len
+        if spec.kind in ("train", "prefill"):
+            out: dict[str, Any] = {}
+            if uses_embeds:
+                out["inputs_embeds"] = _sds((b, s, cfg.d_model), cfg.dtype)
+                out["positions"] = _sds((3, b, s), jnp.int32)
+            else:
+                out["tokens"] = _sds((b, s), jnp.int32)
+            if spec.kind == "train":
+                out["labels"] = _sds((b, s), jnp.int32)
+            return out
+        # decode: one new token, cache of seq_len
+        out = {"pos": _sds((b,), jnp.int32)}
+        if uses_embeds:
+            out["inputs_embeds"] = _sds((b, 1, cfg.d_model), cfg.dtype)
+        else:
+            out["tokens"] = _sds((b,), jnp.int32)
+        return out
+
+    def cache_specs(spec: ShapeSpec):
+        return jax.eval_shape(
+            lambda: init_cache(spec.global_batch, spec.seq_len)
+        )
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=init_params,
+        loss_fn=loss_fn,
+        forward=forward,
+        init_cache=init_cache,
+        decode_step=decode_step,
+        input_specs=input_specs,
+        cache_specs=cache_specs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Whisper (enc-dec)
+# ---------------------------------------------------------------------------
+
+
+def _build_whisper(cfg: ModelConfig) -> ModelAPI:
+    def init_params(rng):
+        return wh.init_whisper_params(rng, cfg)
+
+    def loss_fn(params, batch, rules=None):
+        return wh.whisper_loss(params, batch, cfg, rules)
+
+    def forward(params, batch, rules=None):
+        return wh.whisper_forward(
+            params, batch["enc_frames"], batch["dec_tokens"], cfg, rules
+        )
+
+    def init_cache(batch, seq_len, enc_len=None):
+        return wh.init_whisper_cache(
+            cfg, batch, seq_len, enc_len or max(seq_len // 4, 64)
+        )
+
+    def decode_step(params, cache, batch, rules=None):
+        return wh.whisper_decode_step(
+            params, cache, batch["tokens"], batch["pos"], cfg, rules
+        )
+
+    def input_specs(spec: ShapeSpec):
+        b = spec.global_batch
+        s_enc, s_dec = _whisper_seqs(spec)
+        if spec.kind in ("train", "prefill"):
+            out = {
+                "enc_frames": _sds((b, s_enc, cfg.d_model), cfg.dtype),
+                "dec_tokens": _sds((b, s_dec), jnp.int32),
+            }
+            if spec.kind == "train":
+                out["labels"] = _sds((b, s_dec), jnp.int32)
+            return out
+        return {"tokens": _sds((b,), jnp.int32), "pos": _sds((b,), jnp.int32)}
+
+    def cache_specs(spec: ShapeSpec):
+        # decode cache: self-attn cache of seq_len + cross KV of seq_len//16
+        enc_len = max(spec.seq_len // 16, 64)
+        return jax.eval_shape(
+            lambda: init_cache(spec.global_batch, spec.seq_len, enc_len)
+        )
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=init_params,
+        loss_fn=loss_fn,
+        forward=forward,
+        init_cache=init_cache,
+        decode_step=decode_step,
+        input_specs=input_specs,
+        cache_specs=cache_specs,
+    )

@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-gated linear recurrent unit:
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    a_t = exp(-c · softplus(Λ) · r_t)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluates the linear recurrence with
+``jax.lax.associative_scan`` (log-depth); decode is the O(1) step.  The
+block wraps the LRU with a conv1d branch and a GeLU gate branch (Griffin's
+recurrent block).  Sub-quadratic by construction -> used for long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def init_rglru_params(key, cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.resolved_lru_width
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    pd = cfg.param_dtype
+    return {
+        "in_proj_x": dense_init(k1, (d, w), dtype=pd),
+        "in_proj_gate": dense_init(k2, (d, w), dtype=pd),
+        "conv_w": dense_init(k3, (cfg.conv_width, w), dtype=pd),
+        "conv_b": jnp.zeros((w,), dtype=pd),
+        "gate_a_w": dense_init(k4, (w, w), dtype=pd),
+        "gate_a_b": jnp.zeros((w,), dtype=pd),
+        "gate_x_w": dense_init(k5, (w, w), dtype=pd),
+        "gate_x_b": jnp.zeros((w,), dtype=pd),
+        "lambda_p": jnp.full((w,), 0.65, dtype=pd),
+        "out_proj": dense_init(k6, (w, d), dtype=pd),
+    }
+
+
+def _rg_lru(params, x, h0=None, decode: bool = False):
+    """x (B,S,W) -> (out (B,S,W), h_final (B,W))."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        xf @ params["gate_a_w"].astype(jnp.float32) + params["gate_a_b"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        xf @ params["gate_x_w"].astype(jnp.float32) + params["gate_x_b"].astype(jnp.float32)
+    )
+    log_a = -_C * jax.nn.softplus(params["lambda_p"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)                                        # (B,S,W)
+    gated = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * xf)
+
+    if decode:
+        h_prev = jnp.zeros_like(gated[:, 0]) if h0 is None else h0
+        h = a[:, 0] * h_prev + gated[:, 0]
+        return h[:, None].astype(x.dtype), h
+
+    if h0 is not None:
+        # fold the carried-in state into the first step
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _a_sc, h_sc = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h_sc.astype(x.dtype), h_sc[:, -1]
+
+
+def rglru_block(
+    params: dict, x: jnp.ndarray, cfg: ModelConfig,
+    conv_state=None, lru_state=None, decode: bool = False,
+):
+    """Griffin recurrent block. x (B,S,D) -> (y, (conv_state, lru_state))."""
+    from repro.models.ssm import _causal_conv
+
+    branch = x @ params["in_proj_x"].astype(x.dtype)           # (B,S,W)
+    gate = jax.nn.gelu(x @ params["in_proj_gate"].astype(x.dtype))
+    branch, new_conv = _causal_conv(
+        branch, params["conv_w"].astype(x.dtype),
+        params["conv_b"].astype(x.dtype), conv_state,
+    )
+    lru_out, new_lru = _rg_lru(params, branch, lru_state, decode=decode)
+    y = (lru_out * gate) @ params["out_proj"].astype(x.dtype)
+    return y, (new_conv, new_lru)

@@ -1,0 +1,175 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk "attention-like"
+quadratic term + inter-chunk linear state recurrence (``lax.scan`` over
+chunks).  Decode is the O(1) recurrent update on the (B, H, P, N) state —
+this is what makes ``long_500k`` tractable for this arch.
+
+Shapes: d_inner = expand·d_model, heads H = d_inner/headdim P, state N.
+Single B/C group (n_groups=1), scalar-per-head A, per-step softplus dt.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig, dense_init, rms_norm
+
+
+def init_ssm_params(key, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    kin, kout, kconv, kdt = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+    d_in_proj = 2 * di + 2 * n + h          # z, x, B, C, dt
+    conv_ch = di + 2 * n                     # conv over (x, B, C)
+    return {
+        "in_proj": dense_init(kin, (d, d_in_proj), dtype=pd),
+        "conv_w": dense_init(kconv, (cfg.conv_width, conv_ch), dtype=pd),
+        "conv_b": jnp.zeros((conv_ch,), dtype=pd),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ).astype(pd),
+        "D": jnp.ones((h,), dtype=pd),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.linspace(1e-3, 1e-1, h))), dtype=pd
+        ),
+        "norm_scale": jnp.zeros((di,), dtype=pd),
+        "out_proj": dense_init(kout, (di, d), dtype=pd),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable 'segment sum': out[..., i, j] = sum_{j < t <= i} x[..., t].
+
+    Returns -inf above the diagonal (causal decay mask in log space).
+    """
+    l = x.shape[-1]
+    x_cum = jnp.cumsum(x, axis=-1)
+    diff = x_cum[..., :, None] - x_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,      # (B, S, H, P) discretization-ready inputs
+    dt: jnp.ndarray,     # (B, S, H) positive step sizes
+    A: jnp.ndarray,      # (H,) negative decay rates
+    Bm: jnp.ndarray,     # (B, S, N)
+    Cm: jnp.ndarray,     # (B, S, N)
+    chunk: int,
+    h0: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+
+    xd = (x * dt[..., None]).astype(jnp.float32)             # discretized input
+    dA = (dt * A[None, None, :]).astype(jnp.float32)          # (B, S, H) log decay
+    # chunked views
+    xc = xd.reshape(b, c, chunk, h, p)
+    dAc = dA.reshape(b, c, chunk, h).transpose(0, 1, 3, 2)    # (B, C, H, L)
+    Bc = Bm.reshape(b, c, chunk, n).astype(jnp.float32)
+    Cc = Cm.reshape(b, c, chunk, n).astype(jnp.float32)
+
+    dA_cum = jnp.cumsum(dAc, axis=-1)                         # (B, C, H, L)
+
+    # 1. intra-chunk (quadratic, "attention-like"):
+    Lmask = jnp.exp(_segsum(dAc))                             # (B, C, H, L, L)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)            # (B, C, L, L)
+    y_diag = jnp.einsum("bchlm,bclm,bcmhp->bclhp", Lmask, scores, xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(dA_cum[..., -1:] - dA_cum)         # (B, C, H, L)
+    states = jnp.einsum("bclh,bcln,bclhp->bchpn",
+                        decay_states.transpose(0, 1, 3, 2), Bc, xc)
+
+    # 3. inter-chunk recurrence over chunk index
+    chunk_decay = jnp.exp(dA_cum[..., -1])                    # (B, C, H)
+
+    def step(hprev, inp):
+        st, dec = inp                                          # (B,H,P,N), (B,H)
+        hnew = hprev * dec[..., None, None] + st
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+    hfin, hprevs = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                       # (B, C, H, P, N)
+
+    # 4. contribution of carried-in state to each position
+    state_decay = jnp.exp(dA_cum)                             # (B, C, H, L)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", Cc, hprevs, state_decay)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, hfin
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x (B,S,C), w (W,C). Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), dtype=x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return jax.nn.silu(y + b[None, None, :]), new_state
+
+
+def mamba2_block(
+    params: dict, x: jnp.ndarray, cfg: ModelConfig,
+    conv_state=None, ssm_state=None, decode: bool = False,
+):
+    """Full Mamba-2 mixer. x (B,S,D) -> (y (B,S,D), (conv_state, ssm_state))."""
+    b, s, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)            # (B,S,·)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out, new_conv_state = _causal_conv(
+        conv_in, params["conv_w"].astype(x.dtype),
+        params["conv_b"].astype(x.dtype), conv_state,
+    )
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                          # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (H,)
+    xh = xs.reshape(b, s, h, p)
+
+    if decode:
+        # single-step recurrence; s == 1
+        dA = jnp.exp(dt[:, 0] * A[None])                       # (B,H)
+        upd = jnp.einsum(
+            "bhp,bn->bhpn", (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+            Bm[:, 0].astype(jnp.float32),
+        )
+        new_ssm = ssm_state * dA[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cm[:, 0].astype(jnp.float32))
+        y = y[:, None]                                         # (B,1,H,P)
+    else:
+        y, new_ssm = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, ssm_state)
+
+    y = y + xh.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_scale"])
+    out = y @ params["out_proj"].astype(y.dtype)
+    return out, (new_conv_state, new_ssm)

@@ -1,0 +1,533 @@
+"""Decoder LM assembly for all decoder-style assigned architectures.
+
+One parameterized stack covers: dense GQA transformers (qwen3, nemo,
+granite, mistral-large), MoE (mixtral, olmoe), Mamba-2 (ssm), RecurrentGemma
+(rglru/local_attn hybrid) and the VLM backbone (qwen2-vl, M-RoPE +
+precomputed patch embeddings).
+
+Structure: ``cfg.block_pattern`` defines a repeating *group* of sub-blocks
+(e.g. ("rglru", "rglru", "local_attn")).  ``num_layers`` is split into
+``num_layers // len(pattern)`` scanned groups (stacked params,
+``jax.lax.scan``) plus an unscanned remainder — HLO size is depth-
+independent, which keeps 88-layer dry-run compiles fast.  Each group is
+rematerialized (``jax.checkpoint``) when ``cfg.remat``.
+
+Everything is mesh-agnostic: sharding enters only through the optional
+``ShardingRules`` (launch/sharding.py) via ``with_sharding_constraint``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.common import (
+    ModelConfig,
+    apply_mrope,
+    apply_rope,
+    dense_init,
+    embed_init,
+    rms_norm,
+    softmax_cross_entropy,
+    swiglu,
+)
+from repro.models.moe import init_moe_params, moe_ffn
+from repro.models.rglru import init_rglru_params, rglru_block
+from repro.models.ssm import init_ssm_params, mamba2_block
+
+
+# ---------------------------------------------------------------------------
+# Sharding hooks (no-ops unless launch/sharding.py provides rules)
+# ---------------------------------------------------------------------------
+
+
+class NullRules:
+    """Default: no sharding constraints (single-device smoke tests)."""
+
+    mesh = None
+    shard_heads = True
+    seq_shard_decode = False
+
+    def constrain(self, x, kind: str):
+        return x
+
+
+def _shard(rules, x, kind):
+    return rules.constrain(x, kind) if rules is not None else x
+
+
+# ---------------------------------------------------------------------------
+# Sub-block parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attn_params(key, cfg: ModelConfig) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+    p = {
+        "wq": dense_init(kq, (d, h * hd), dtype=pd),
+        "wk": dense_init(kk, (d, hkv * hd), dtype=pd),
+        "wv": dense_init(kv, (d, hkv * hd), dtype=pd),
+        "wo": dense_init(ko, (h * hd, d), dtype=pd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype=pd)
+        p["k_norm"] = jnp.zeros((hd,), dtype=pd)
+    return p
+
+
+def init_mlp_params(key, cfg: ModelConfig) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    return {
+        "w_gate": dense_init(kg, (d, f), dtype=pd),
+        "w_up": dense_init(ku, (d, f), dtype=pd),
+        "w_down": dense_init(kd, (f, d), dtype=pd),
+    }
+
+
+def init_block_params(key, cfg: ModelConfig, kind: str) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    pd = cfg.param_dtype
+    d = cfg.d_model
+    if kind in ("attn", "local_attn"):
+        ffn_kind = "moe" if cfg.num_experts else "mlp"
+        ffn = (
+            init_moe_params(k2, cfg) if cfg.num_experts else init_mlp_params(k2, cfg)
+        )
+        return {
+            "ln1": jnp.zeros((d,), dtype=pd),
+            "attn": init_attn_params(k1, cfg),
+            "ln2": jnp.zeros((d,), dtype=pd),
+            ffn_kind: ffn,
+        }
+    if kind == "ssm":
+        return {"ln1": jnp.zeros((d,), dtype=pd), "mixer": init_ssm_params(k1, cfg)}
+    if kind == "rglru":
+        return {
+            "ln1": jnp.zeros((d,), dtype=pd),
+            "rec": init_rglru_params(k1, cfg),
+            "ln2": jnp.zeros((d,), dtype=pd),
+            "mlp": init_mlp_params(k2, cfg),
+        }
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Sub-block application
+# ---------------------------------------------------------------------------
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, rules) -> jnp.ndarray:
+    h = swiglu(x @ p["w_gate"].astype(x.dtype), x @ p["w_up"].astype(x.dtype))
+    h = _shard(rules, h, "ffn")
+    out = h @ p["w_down"].astype(h.dtype)
+    # partial sums over the tp-sharded F dim land directly in the
+    # sequence-sharded layout -> GSPMD emits reduce-scatter, not
+    # all-reduce (halves link bytes; §Perf P9)
+    return _shard(rules, out, "hidden")
+
+
+def _qkv(p, x, cfg: ModelConfig, rules, positions):
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = _shard(rules, q, "heads")
+    k = _shard(rules, k, "kv_heads")
+    v = _shard(rules, v, "kv_heads")
+    return q, k, v
+
+
+def attn_apply_train(
+    p, x, cfg: ModelConfig, rules, *, window: int, positions, causal: bool = True
+):
+    """Training / prefill self-attention (no cache interaction)."""
+    q, k, v = _qkv(p, x, cfg, rules, positions)
+    out = attn_mod.attention(
+        q, k, v, causal=causal, window=window,
+        q_block=cfg.attn_chunk, kv_chunk=cfg.attn_chunk,
+    )
+    out = _shard(rules, out, "heads")
+    b, s, _, _ = out.shape
+    out = out.reshape(b, s, cfg.num_heads * cfg.resolved_head_dim)
+    proj = out @ p["wo"].astype(out.dtype)
+    return _shard(rules, proj, "hidden")    # reduce-scatter (see mlp_apply)
+
+
+def attn_apply_decode(
+    p, x, cfg: ModelConfig, rules, *, window: int, cache: dict,
+    pos: jnp.ndarray, positions: jnp.ndarray | None = None,
+):
+    """Single-token decode with cache update.
+
+    ``cache`` holds k/v of shape (B, S_cache, Hkv, hd); ``pos`` (B,) is the
+    absolute position of the incoming token (``positions`` carries the
+    RoPE/M-RoPE view of it).  Sliding-window archs use a ring buffer of
+    size min(window, S_cache).
+    """
+    b = x.shape[0]
+    s_cache = cache["k"].shape[1]
+    if positions is None:
+        positions = pos[:, None]                               # (B, 1)
+    q, k, v = _qkv(p, x, cfg, rules, positions)
+    slot = pos % s_cache if window else jnp.minimum(pos, s_cache - 1)
+
+    def upd(buf, new):
+        return jax.vmap(
+            lambda bf, nw, sl: jax.lax.dynamic_update_slice(bf, nw, (sl, 0, 0))
+        )(buf, new, slot)
+
+    k_cache = upd(cache["k"], k)
+    v_cache = upd(cache["v"], v)
+    k_cache = _shard(rules, k_cache, "cache")
+    v_cache = _shard(rules, v_cache, "cache")
+
+    # validity: slots holding tokens within the attention span of ``pos``
+    idx = jnp.arange(s_cache)[None, :]
+    if window:
+        valid = idx < jnp.minimum(pos[:, None] + 1, s_cache)
+    else:
+        valid = idx <= pos[:, None]
+    q1 = q[:, 0]                                               # (B, H, hd)
+
+    if rules is not None and getattr(rules, "seq_shard_decode", False) and rules.mesh is not None:
+        out = rules.sharded_decode_attention(q1, k_cache, v_cache, valid)
+    else:
+        out = attn_mod.decode_attention_local(
+            q1, k_cache, v_cache, jnp.sum(valid, axis=1)
+        )
+    out = out.reshape(b, 1, cfg.num_heads * cfg.resolved_head_dim)
+    out = out @ p["wo"].astype(out.dtype)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def block_apply(
+    kind: str,
+    p: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    rules,
+    *,
+    positions,
+    cache=None,
+    pos=None,
+    decode: bool = False,
+):
+    """One sub-block with pre-norm residual wiring.
+
+    Returns (x, new_cache, aux_loss).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else cfg.window
+        h = rms_norm(x, p["ln1"])
+        if decode:
+            a, new_attn_cache = attn_apply_decode(
+                p["attn"], h, cfg, rules, window=window, cache=cache, pos=pos,
+                positions=positions,
+            )
+        else:
+            a = attn_apply_train(
+                p["attn"], h, cfg, rules, window=window, positions=positions
+            )
+            new_attn_cache = cache
+        x = _shard(rules, x + a, "hidden")
+        h2 = rms_norm(x, p["ln2"])
+        if cfg.num_experts:
+            f, aux = moe_ffn(p["moe"], h2, cfg, rules)
+        else:
+            f = mlp_apply(p["mlp"], h2, rules)
+        x = _shard(rules, x + f, "hidden")
+        return x, new_attn_cache, aux
+    if kind == "ssm":
+        h = rms_norm(x, p["ln1"])
+        conv_state = cache["conv"] if cache else None
+        ssm_state = cache["ssm"] if cache else None
+        y, (new_conv, new_ssm) = mamba2_block(
+            p["mixer"], h, cfg, conv_state, ssm_state, decode=decode
+        )
+        x = _shard(rules, x + y, "hidden")
+        new_cache = {"conv": new_conv, "ssm": new_ssm} if cache else None
+        return x, new_cache, aux
+    if kind == "rglru":
+        h = rms_norm(x, p["ln1"])
+        conv_state = cache["conv"] if cache else None
+        lru_state = cache["lru"] if cache else None
+        y, (new_conv, new_lru) = rglru_block(
+            p["rec"], h, cfg, conv_state, lru_state, decode=decode
+        )
+        x = _shard(rules, x + y, "hidden")
+        h2 = rms_norm(x, p["ln2"])
+        x = _shard(rules, x + mlp_apply(p["mlp"], h2, rules), "hidden")
+        new_cache = {"conv": new_conv, "lru": new_lru} if cache else None
+        return x, new_cache, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Full LM
+# ---------------------------------------------------------------------------
+
+
+def _layer_plan(cfg: ModelConfig) -> tuple[int, tuple[str, ...]]:
+    """(num scanned groups, remainder kinds)."""
+    pat = cfg.block_pattern
+    groups = cfg.num_layers // len(pat)
+    rem = cfg.num_layers - groups * len(pat)
+    return groups, tuple(pat[:rem])
+
+
+def init_lm_params(key, cfg: ModelConfig) -> dict:
+    ke, kh, kb, kr = jax.random.split(key, 4)
+    groups, rem = _layer_plan(cfg)
+    pat = cfg.block_pattern
+    pd = cfg.param_dtype
+
+    def one_group(k):
+        ks = jax.random.split(k, len(pat))
+        return tuple(
+            init_block_params(ks[i], cfg, kind) for i, kind in enumerate(pat)
+        )
+
+    group_keys = jax.random.split(kb, max(groups, 1))
+    stacked = jax.vmap(one_group)(group_keys[:groups]) if groups else None
+    rem_keys = jax.random.split(kr, max(len(rem), 1))
+    remainder = tuple(
+        init_block_params(rem_keys[i], cfg, kind) for i, kind in enumerate(rem)
+    )
+    params = {
+        "embed": embed_init(ke, (cfg.padded_vocab, cfg.d_model), dtype=pd),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype=pd),
+        "groups": stacked,
+        "remainder": remainder,
+    }
+    if not cfg.tied_embeddings:
+        params["lm_head"] = dense_init(
+            kh, (cfg.d_model, cfg.padded_vocab), dtype=pd
+        )
+    return params
+
+
+def _lm_head(params, x, cfg: ModelConfig):
+    if cfg.tied_embeddings:
+        return x @ params["embed"].astype(x.dtype).T
+    return x @ params["lm_head"].astype(x.dtype)
+
+
+def _embed(params, tokens, cfg, inputs_embeds=None):
+    if inputs_embeds is not None:
+        return inputs_embeds.astype(cfg.dtype)
+    return jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+
+
+def lm_forward(
+    params: dict,
+    tokens: jnp.ndarray | None,
+    cfg: ModelConfig,
+    rules=None,
+    *,
+    positions: jnp.ndarray | None = None,
+    inputs_embeds: jnp.ndarray | None = None,
+    return_aux: bool = False,
+):
+    """Training forward: (B, S) tokens -> (B, S, V) logits
+    (+ MoE aux loss when ``return_aux``)."""
+    x = _embed(params, tokens, cfg, inputs_embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        base = jnp.arange(s, dtype=jnp.int32)[None]
+        positions = jnp.broadcast_to(
+            base[None] if cfg.mrope else base, (3, b, s) if cfg.mrope else (b, s)
+        )
+    x = _shard(rules, x, "hidden")
+    pat = cfg.block_pattern
+    groups, rem = _layer_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def group_fn(x, gp):
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(pat):
+            x, _, aux = block_apply(
+                kind, gp[i], x, cfg, rules, positions=positions
+            )
+            aux_sum = aux_sum + aux
+        return x, aux_sum
+
+    if groups:
+        body = jax.checkpoint(group_fn) if cfg.remat else group_fn
+
+        def scan_body(carry, gp):
+            x, aux_acc = carry
+            x, aux_sum = body(x, gp)
+            return (x, aux_acc + aux_sum), None
+
+        if cfg.scan_layers:
+            (x, aux_total), _ = jax.lax.scan(
+                scan_body, (x, aux_total), params["groups"]
+            )
+        else:
+            for g in range(groups):
+                gp = jax.tree.map(lambda a: a[g], params["groups"])
+                x, aux_sum = body(x, gp)
+                aux_total = aux_total + aux_sum
+    for i, kind in enumerate(rem):
+        x, _, aux = block_apply(
+            kind, params["remainder"][i], x, cfg, rules, positions=positions
+        )
+        aux_total = aux_total + aux
+    x = rms_norm(x, params["final_norm"])
+    logits = _lm_head(params, x, cfg)
+    logits = _shard(rules, logits, "logits")
+    return (logits, aux_total) if return_aux else logits
+
+
+AUX_LOSS_COEF = 0.01
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig, rules=None):
+    logits, aux = lm_forward(
+        params,
+        batch.get("tokens"),
+        cfg,
+        rules,
+        positions=batch.get("positions"),
+        inputs_embeds=batch.get("inputs_embeds"),
+        return_aux=True,
+    )
+    ce = softmax_cross_entropy(logits, batch["labels"])
+    if cfg.num_experts:
+        return ce + AUX_LOSS_COEF * aux
+    return ce
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve) path
+# ---------------------------------------------------------------------------
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Allocate the per-layer decode state, stacked per scanned group."""
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    groups, rem = _layer_plan(cfg)
+    pat = cfg.block_pattern
+
+    def block_cache(kind):
+        if kind == "attn":
+            s = seq_len if not cfg.window else min(seq_len, cfg.window)
+            return {
+                "k": jnp.zeros((batch, s, hkv, hd), cfg.dtype),
+                "v": jnp.zeros((batch, s, hkv, hd), cfg.dtype),
+            }
+        if kind == "local_attn":
+            s = min(seq_len, cfg.local_window)
+            return {
+                "k": jnp.zeros((batch, s, hkv, hd), cfg.dtype),
+                "v": jnp.zeros((batch, s, hkv, hd), cfg.dtype),
+            }
+        if kind == "ssm":
+            return {
+                "conv": jnp.zeros(
+                    (batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                    cfg.dtype,
+                ),
+                "ssm": jnp.zeros(
+                    (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32,
+                ),
+            }
+        if kind == "rglru":
+            w = cfg.resolved_lru_width
+            return {
+                "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.dtype),
+                "lru": jnp.zeros((batch, w), jnp.float32),
+            }
+        raise ValueError(kind)
+
+    def group_cache(_):
+        return tuple(block_cache(k) for k in pat)
+
+    stacked = (
+        jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[group_cache(g) for g in range(groups)],
+        )
+        if groups
+        else None
+    )
+    remainder = tuple(block_cache(k) for k in rem)
+    return {"groups": stacked, "remainder": remainder}
+
+
+def lm_decode_step(
+    params: dict,
+    cache: dict,
+    tokens: jnp.ndarray,        # (B,) int32 — the newest token
+    pos: jnp.ndarray,           # (B,) int32 — its absolute position
+    cfg: ModelConfig,
+    rules=None,
+    inputs_embeds: jnp.ndarray | None = None,   # (B, 1, D) for stub frontends
+):
+    """One decode step: returns ((B, V) logits, new cache)."""
+    x = _embed(params, tokens[:, None] if tokens is not None else None, cfg,
+               inputs_embeds)
+    x = _shard(rules, x, "hidden_decode")
+    pat = cfg.block_pattern
+    groups, rem = _layer_plan(cfg)
+    if cfg.mrope:
+        positions = jnp.broadcast_to(pos[None, :, None], (3,) + pos.shape + (1,))
+    else:
+        positions = pos[:, None]
+
+    def group_fn(x, gp_and_cache):
+        gp, gc = gp_and_cache
+        new_caches = []
+        for i, kind in enumerate(pat):
+            x, nc, _ = block_apply(
+                kind, gp[i], x, cfg, rules,
+                positions=positions, cache=gc[i], pos=pos, decode=True,
+            )
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    new_cache = {"groups": None, "remainder": ()}
+    if groups:
+        def scan_body(x, gp_gc):
+            x, nc = group_fn(x, gp_gc)
+            return x, nc
+
+        x, new_group_cache = jax.lax.scan(
+            scan_body, x, (params["groups"], cache["groups"])
+        )
+        new_cache["groups"] = new_group_cache
+    new_rem = []
+    for i, kind in enumerate(rem):
+        x, nc, _ = block_apply(
+            kind, params["remainder"][i], x, cfg, rules,
+            positions=positions, cache=cache["remainder"][i], pos=pos,
+            decode=True,
+        )
+        new_rem.append(nc)
+    new_cache["remainder"] = tuple(new_rem)
+
+    x = rms_norm(x, params["final_norm"])
+    logits = _lm_head(params, x, cfg)[:, 0]
+    logits = _shard(rules, logits, "logits_decode")
+    return logits, new_cache

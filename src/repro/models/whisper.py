@@ -1,0 +1,224 @@
+"""Whisper-small backbone: encoder-decoder transformer (arXiv:2212.04356).
+
+The audio frontend (log-mel + conv subsampling) is a STUB per the
+assignment: ``input_specs()`` provides precomputed frame embeddings
+(B, S_enc, d_model).  The backbone is faithful: 12-layer bidirectional
+encoder, 12-layer decoder with causal self-attention + cross-attention,
+MHA (kv == heads), learned-free sinusoidal positions (the published model
+uses learned absolute embeddings for the decoder; sinusoidal avoids a
+32k-position table for the prefill_32k shape exercise — noted deviation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models.common import (
+    ModelConfig,
+    dense_init,
+    embed_init,
+    rms_norm,
+    softmax_cross_entropy,
+)
+from repro.models.transformer import (
+    NullRules,
+    _shard,
+    init_attn_params,
+    init_mlp_params,
+    mlp_apply,
+)
+
+
+def _sinusoid(seq: int, d: int, dtype) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    angle = pos / np.power(10000.0, dim / d)
+    out = np.zeros((seq, d), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out, dtype=dtype)
+
+
+def _init_xattn_params(key, cfg: ModelConfig) -> dict:
+    return init_attn_params(key, cfg)
+
+
+def init_whisper_params(key, cfg: ModelConfig) -> dict:
+    n_enc = cfg.num_encoder_layers or cfg.num_layers
+    ke, kd, kh, kem = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), pd),
+            "attn": init_attn_params(k1, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), pd),
+            "mlp": init_mlp_params(k2, cfg),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": jnp.zeros((cfg.d_model,), pd),
+            "attn": init_attn_params(k1, cfg),
+            "ln_x": jnp.zeros((cfg.d_model,), pd),
+            "xattn": _init_xattn_params(k2, cfg),
+            "ln2": jnp.zeros((cfg.d_model,), pd),
+            "mlp": init_mlp_params(k3, cfg),
+        }
+
+    enc_keys = jax.random.split(ke, n_enc)
+    dec_keys = jax.random.split(kd, cfg.num_layers)
+    return {
+        "embed": embed_init(kem, (cfg.padded_vocab, cfg.d_model), dtype=pd),
+        "enc_layers": jax.vmap(enc_layer)(enc_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), pd),
+        "dec_layers": jax.vmap(dec_layer)(dec_keys),
+        "dec_norm": jnp.zeros((cfg.d_model,), pd),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.padded_vocab), dtype=pd),
+    }
+
+
+def _self_attn(p, x, cfg, rules, *, causal, positions=None):
+    from repro.models.transformer import attn_apply_train
+
+    return attn_apply_train(
+        p, x, cfg, rules, window=0,
+        positions=positions if positions is not None
+        else jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+        causal=causal,
+    )
+
+
+def _cross_attn(p, x, enc_kv, cfg: ModelConfig, rules):
+    """x (B,Sd,D) queries against precomputed encoder (k, v)."""
+    b, s, _ = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    q = _shard(rules, q, "heads")
+    k, v = enc_kv
+    out = attn_mod.attention(q, k, v, causal=False, q_block=cfg.attn_chunk,
+                             kv_chunk=cfg.attn_chunk)
+    out = out.reshape(b, s, h * hd)
+    return out @ p["wo"].astype(out.dtype)
+
+
+def _enc_kv(p, enc_out, cfg, rules):
+    b, s, _ = enc_out.shape
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, s, hkv, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, s, hkv, hd)
+    return _shard(rules, k, "kv_heads"), _shard(rules, v, "kv_heads")
+
+
+def whisper_encode(params, enc_frames: jnp.ndarray, cfg: ModelConfig, rules=None):
+    """enc_frames: precomputed (B, S_enc, D) frame embeddings (frontend stub)."""
+    x = enc_frames.astype(cfg.dtype) + _sinusoid(
+        enc_frames.shape[1], cfg.d_model, cfg.dtype
+    )
+    x = _shard(rules, x, "hidden")
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        x = _shard(rules, x + _self_attn(lp["attn"], h, cfg, rules, causal=False),
+                   "hidden")
+        h = rms_norm(x, lp["ln2"])
+        x = _shard(rules, x + mlp_apply(lp["mlp"], h, rules), "hidden")
+        return x, None
+
+    fn = jax.checkpoint(lambda x, lp: body(x, lp)) if cfg.remat else body
+    x, _ = jax.lax.scan(lambda c, lp: fn(c, lp), x, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def whisper_forward(
+    params, enc_frames: jnp.ndarray, dec_tokens: jnp.ndarray,
+    cfg: ModelConfig, rules=None,
+) -> jnp.ndarray:
+    """Teacher-forced training forward -> (B, S_dec, V) logits."""
+    enc_out = whisper_encode(params, enc_frames, cfg, rules)
+    x = jnp.take(params["embed"], dec_tokens, axis=0).astype(cfg.dtype)
+    x = x + _sinusoid(x.shape[1], cfg.d_model, cfg.dtype)
+    x = _shard(rules, x, "hidden")
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln1"])
+        x = _shard(rules, x + _self_attn(lp["attn"], h, cfg, rules, causal=True),
+                   "hidden")
+        h = rms_norm(x, lp["ln_x"])
+        kv = _enc_kv(lp["xattn"], enc_out, cfg, rules)
+        x = _shard(rules, x + _cross_attn(lp["xattn"], h, kv, cfg, rules), "hidden")
+        h = rms_norm(x, lp["ln2"])
+        x = _shard(rules, x + mlp_apply(lp["mlp"], h, rules), "hidden")
+        return x, None
+
+    fn = jax.checkpoint(lambda x, lp: body(x, lp)) if cfg.remat else body
+    x, _ = jax.lax.scan(lambda c, lp: fn(c, lp), x, params["dec_layers"])
+    x = rms_norm(x, params["dec_norm"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return _shard(rules, logits, "logits")
+
+
+def whisper_loss(params, batch, cfg: ModelConfig, rules=None):
+    logits = whisper_forward(
+        params, batch["enc_frames"], batch["dec_tokens"], cfg, rules
+    )
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_whisper_cache(cfg: ModelConfig, batch: int, seq_len: int, enc_len: int):
+    """Self-attn KV cache + precomputed cross-attn encoder KV per layer."""
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch, seq_len, hkv, hd), cfg.dtype),
+        "v": jnp.zeros((L, batch, seq_len, hkv, hd), cfg.dtype),
+        "enc_k": jnp.zeros((L, batch, enc_len, hkv, hd), cfg.dtype),
+        "enc_v": jnp.zeros((L, batch, enc_len, hkv, hd), cfg.dtype),
+    }
+
+
+def whisper_decode_step(
+    params, cache, tokens: jnp.ndarray, pos: jnp.ndarray,
+    cfg: ModelConfig, rules=None,
+):
+    """One decoder token against cached self-attn KV + encoder KV."""
+    from repro.models.transformer import attn_apply_decode
+
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.dtype)
+    x = x + _sinusoid(1, cfg.d_model, cfg.dtype)  # position stub for 1 token
+    x = _shard(rules, x, "hidden_decode")
+
+    def body(x, lp_and_cache):
+        lp, kc, vc, ek, ev = lp_and_cache
+        h = rms_norm(x, lp["ln1"])
+        a, nc = attn_apply_decode(
+            lp["attn"], h, cfg, rules, window=0,
+            cache={"k": kc, "v": vc}, pos=pos,
+        )
+        x = x + a
+        h = rms_norm(x, lp["ln_x"])
+        x = x + _cross_attn(lp["xattn"], h, (ek, ev), cfg, rules)
+        h = rms_norm(x, lp["ln2"])
+        x = x + mlp_apply(lp["mlp"], h, rules)
+        return x, (nc["k"], nc["v"])
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"],
+         cache["enc_k"], cache["enc_v"]),
+    )
+    x = rms_norm(x, params["dec_norm"])
+    logits = (x @ params["lm_head"].astype(x.dtype))[:, 0]
+    new_cache = dict(cache, k=nk, v=nv)
+    return logits, new_cache

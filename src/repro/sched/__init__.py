@@ -1,0 +1,22 @@
+"""Classical scheduling baselines (HEFT family + simple heuristics)."""
+
+from repro.sched.baselines import (
+    greedy_bottleneck_assignment,
+    local_search_refine,
+    random_assignment,
+    round_robin_assignment,
+    sorted_assignment,
+)
+from repro.sched.heft import build_heft_dag, heft_assignment
+from repro.sched.tp_heft import tp_heft_assignment
+
+__all__ = [
+    "build_heft_dag",
+    "greedy_bottleneck_assignment",
+    "heft_assignment",
+    "local_search_refine",
+    "random_assignment",
+    "round_robin_assignment",
+    "sorted_assignment",
+    "tp_heft_assignment",
+]

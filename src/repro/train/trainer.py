@@ -1,0 +1,126 @@
+"""Train/serve step builders shared by the launcher, dry-run, and tests.
+
+``TrainState`` is a plain dict pytree {"params", "opt"} so partition specs
+mirror cleanly (ZeRO-3: optimizer moments inherit the param shardings).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import ModelAPI
+from repro.train.optim import AdamW, AdamWState
+
+
+def init_train_state(api: ModelAPI, optimizer: AdamW, rng) -> dict:
+    params = api.init_params(rng)
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def make_train_step(api: ModelAPI, optimizer: AdamW, rules=None,
+                    microbatches: int | None = None) -> Callable:
+    """(state, batch) -> (state, metrics).  Pure; jit with donate_argnums=0.
+
+    ``microbatches`` > 1 enables gradient accumulation: the global batch is
+    split along its batch dim and scanned, bounding saved activations to
+    one microbatch (required to fit the 88-layer/123B cells in HBM).
+    """
+    mb = microbatches if microbatches is not None else api.cfg.train_microbatches
+    cfg = api.cfg
+
+    def cast(params):
+        """Mixed precision: bf16 compute copies of the f32 masters, cast
+        once per step so FSDP all-gathers move bf16 (2x fewer bytes).  The
+        cast is linear, so grads w.r.t. the bf16 copies are the master
+        grads up to bf16 rounding (standard mixed-precision training)."""
+        if not cfg.cast_params_once:
+            return params
+        return jax.tree.map(
+            lambda p: p.astype(cfg.dtype)
+            if p.dtype == jnp.float32
+            else p,
+            params,
+        )
+
+    def loss_of(params, batch):
+        return api.loss_fn(params, batch, rules)
+
+    if mb <= 1:
+        def train_step(state, batch):
+            loss, grads = jax.value_and_grad(loss_of)(cast(state["params"]), batch)
+            new_params, new_opt, gnorm = optimizer.update(
+                grads, state["opt"], state["params"]
+            )
+            metrics = {
+                "loss": loss.astype(jnp.float32),
+                "grad_norm": gnorm.astype(jnp.float32),
+                "step": new_opt.step,
+            }
+            return {"params": new_params, "opt": new_opt}, metrics
+
+        return train_step
+
+    def split(x):
+        # positions carry a leading (3,) M-RoPE axis; scan axis must lead
+        if x.ndim >= 2 and x.shape[0] == 3:
+            r = x.reshape((3, mb, x.shape[1] // mb) + x.shape[2:])
+            return jnp.swapaxes(r, 0, 1)
+        return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+    def unsplit(x):
+        if x.ndim >= 3 and x.shape[1] == 3:
+            return jnp.swapaxes(x, 0, 1)
+        return x
+
+    def train_step(state, batch):
+        micro = jax.tree.map(split, batch)
+        params_c = cast(state["params"])
+
+        def body(carry, mbatch):
+            grads_acc, loss_acc = carry
+            mbatch = jax.tree.map(unsplit, mbatch)
+            loss, grads = jax.value_and_grad(loss_of)(params_c, mbatch)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grads_acc, grads
+            )
+            return (grads_acc, loss_acc + loss.astype(jnp.float32)), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+        )
+        (grads, loss), _ = jax.lax.scan(
+            body, (zeros, jnp.zeros((), jnp.float32)), micro
+        )
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        loss = loss / mb
+        new_params, new_opt, gnorm = optimizer.update(
+            grads, state["opt"], state["params"]
+        )
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm.astype(jnp.float32),
+            "step": new_opt.step,
+        }
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(api: ModelAPI, rules=None) -> Callable:
+    def prefill_step(params, batch):
+        return api.forward(params, batch, rules)
+
+    return prefill_step
+
+
+def make_decode_step(api: ModelAPI, rules=None) -> Callable:
+    """(params, cache, batch) -> (logits, cache).  Donate the cache."""
+
+    def decode_step(params, cache, batch):
+        return api.decode_step(params, cache, batch, rules)
+
+    return decode_step

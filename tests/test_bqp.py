@@ -1,0 +1,102 @@
+"""BQP formulation: Q matrices must agree with the direct evaluator."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ComputeGraph,
+    TaskGraph,
+    bottleneck_time,
+    bottleneck_time_batch,
+    brute_force_optimum,
+    build_bqp,
+    random_compute_graph,
+    random_task_graph,
+)
+from repro.core.bqp import (
+    assignment_to_vec,
+    quadratic_bottleneck,
+    task_times,
+    vec_to_assignment,
+)
+
+
+@pytest.fixture
+def instance():
+    rng = np.random.default_rng(7)
+    tg = random_task_graph(rng, 7, degree_low=1, degree_high=3)
+    cg = random_compute_graph(rng, 3)
+    return tg, cg
+
+
+def test_quadratic_matches_direct(instance):
+    tg, cg = instance
+    data = build_bqp(tg, cg)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        a = rng.integers(0, cg.num_machines, size=tg.num_tasks)
+        m = assignment_to_vec(a, cg.num_machines)
+        tc, _ = task_times(tg, cg, a)
+        direct = max(tc[i] + cg.C[a[i], a[j]] for (i, j) in data.edges)
+        assert np.isclose(quadratic_bottleneck(data, m), direct)
+
+
+def test_homogenized_identity(instance):
+    """(1/4)·x̃ᵀQ̃x̃ == mᵀQm for every feasible assignment (Eq. 16/19)."""
+    tg, cg = instance
+    data = build_bqp(tg, cg)
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        a = rng.integers(0, cg.num_machines, size=tg.num_tasks)
+        m = assignment_to_vec(a, cg.num_machines)
+        xt = np.concatenate([2 * m - 1, [1.0]])
+        for k in range(len(data.edges)):
+            v1 = m @ data.Q[k] @ m
+            v2 = 0.25 * xt @ data.Q_tilde[k] @ xt
+            assert np.isclose(v1, v2), (k, v1, v2)
+
+
+def test_assignment_constraints_hold(instance):
+    tg, cg = instance
+    data = build_bqp(tg, cg)
+    a = np.zeros(tg.num_tasks, dtype=np.int64)
+    m = assignment_to_vec(a, cg.num_machines)
+    xt = np.concatenate([2 * m - 1, [1.0]])
+    X = np.outer(xt, xt)
+    for i in range(tg.num_tasks):
+        assert abs(np.sum(data.A[i] * X)) < 1e-9
+
+
+def test_batch_evaluator_matches_scalar(instance):
+    tg, cg = instance
+    rng = np.random.default_rng(3)
+    batch = rng.integers(0, cg.num_machines, size=(32, tg.num_tasks))
+    times = bottleneck_time_batch(tg, cg, batch)
+    for i in range(32):
+        assert np.isclose(times[i], bottleneck_time(tg, cg, batch[i]))
+
+
+def test_vec_roundtrip(instance):
+    tg, cg = instance
+    a = np.array([0, 1, 2, 0, 1, 2, 1])
+    m = assignment_to_vec(a, cg.num_machines)
+    assert np.array_equal(vec_to_assignment(m, tg.num_tasks, cg.num_machines), a)
+
+
+def test_sink_tasks_still_constrained():
+    """A task with no successors must still bound the bottleneck (Eq. 7)."""
+    tg = TaskGraph(p=np.array([10.0, 0.1]), edges=((1, 0),))
+    cg = ComputeGraph(e=np.array([1.0, 1.0]), C=np.zeros((2, 2)))
+    # task 0 (heavy) has no outgoing edge; bottleneck must still see it
+    t = bottleneck_time(tg, cg, np.array([0, 1]))
+    assert t >= 10.0
+    data = build_bqp(tg, cg)
+    assert any(i == 0 for (i, _) in data.edges)
+
+
+def test_brute_force_is_minimum(instance):
+    tg, cg = instance
+    a_star, t_star = brute_force_optimum(tg, cg)
+    rng = np.random.default_rng(5)
+    rand = rng.integers(0, cg.num_machines, size=(200, tg.num_tasks))
+    assert np.all(bottleneck_time_batch(tg, cg, rand) >= t_star - 1e-12)

@@ -1,0 +1,82 @@
+"""Loop-aware HLO accounting: validate the parser against known workloads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_stats import analyze_hlo
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_matmul_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    text = _compile_text(lambda a, b: a @ b, a, b)
+    st = analyze_hlo(text)
+    want = 2 * 128 * 256 * 512
+    assert abs(st.flops - want) / want < 0.01, (st.flops, want)
+
+
+def test_scan_multiplies_by_trip_count():
+    """A matmul inside a 10-step scan must count 10x."""
+    w = jnp.zeros((10, 64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def fn(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    text = _compile_text(fn, x, w)
+    st = analyze_hlo(text)
+    want = 10 * 2 * 8 * 64 * 64
+    assert abs(st.flops - want) / want < 0.05, (st.flops, want)
+
+
+def test_unrolled_equals_scanned_flops():
+    w = jnp.zeros((6, 32, 32), jnp.float32)
+    x = jnp.zeros((4, 32), jnp.float32)
+
+    def scanned(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        return jax.lax.scan(body, x, w)[0]
+
+    def unrolled(x, w):
+        for i in range(6):
+            x = x @ w[i]
+        return x
+
+    s1 = analyze_hlo(_compile_text(scanned, x, w))
+    s2 = analyze_hlo(_compile_text(unrolled, x, w))
+    assert abs(s1.flops - s2.flops) / max(s2.flops, 1) < 0.05
+
+
+def test_cost_analysis_agreement_no_scan():
+    """Without loops, our dot counter should be close to XLA's."""
+    a = jnp.zeros((64, 128), jnp.float32)
+    w1 = jnp.zeros((128, 256), jnp.float32)
+    w2 = jnp.zeros((256, 32), jnp.float32)
+
+    def fn(a, w1, w2):
+        return jax.nn.relu(a @ w1) @ w2
+
+    compiled = jax.jit(fn).lower(a, w1, w2).compile()
+    st = analyze_hlo(compiled.as_text())
+    xla = compiled.cost_analysis()
+    if isinstance(xla, (list, tuple)):
+        xla = xla[0]
+    want = float(xla.get("flops", 0.0))
+    if want:
+        assert abs(st.flops - want) / want < 0.15, (st.flops, want)
+
+
+def test_bytes_positive_and_collectives_empty_on_single_device():
+    a = jnp.zeros((128, 128), jnp.float32)
+    st = analyze_hlo(_compile_text(lambda a: a @ a, a))
+    assert st.bytes > 128 * 128 * 4
+    assert st.link_bytes == 0

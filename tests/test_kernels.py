@@ -1,0 +1,96 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(assignment requirement c)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels import ref as kref
+from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.gossip_mix import gossip_mix_fwd
+from repro.kernels.rmsnorm import rmsnorm_fwd
+
+rng = np.random.default_rng(0)
+
+
+def t(shape, dt=jnp.float32):
+    return jnp.asarray(rng.standard_normal(shape), dt)
+
+
+FLASH_CASES = [
+    (1, 256, 4, 2, 64, True, 0, jnp.float32),
+    (2, 512, 4, 1, 32, True, 128, jnp.float32),
+    (1, 256, 2, 2, 128, False, 0, jnp.float32),
+    (1, 256, 4, 4, 64, True, 0, jnp.bfloat16),
+    (2, 128, 8, 2, 64, True, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d,causal,window,dt", FLASH_CASES)
+def test_flash_kernel_vs_ref(b, s, h, hkv, d, causal, window, dt):
+    q, k, v = t((b, h, s, d), dt), t((b, hkv, s, d), dt), t((b, hkv, s, d), dt)
+    got = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, block_q=128, block_k=128,
+        interpret=True,
+    )
+    want = kref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    atol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=atol
+    )
+
+
+DECODE_CASES = [
+    (2, 512, 8, 2, 64, jnp.float32),
+    (1, 1024, 4, 4, 32, jnp.float32),
+    (2, 256, 4, 1, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,s,h,hkv,d,dt", DECODE_CASES)
+def test_decode_kernel_vs_ref(b, s, h, hkv, d, dt):
+    q, kc, vc = t((b, h, d), dt), t((b, s, hkv, d), dt), t((b, s, hkv, d), dt)
+    vl = jnp.asarray(rng.integers(1, s, size=b), jnp.int32)
+    got = decode_attention_fwd(q, kc, vc, vl, block_k=128, interpret=True)
+    want = kref.decode_attention_ref(q, kc, vc, vl)
+    atol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=atol
+    )
+
+
+@pytest.mark.parametrize("r,d,dt", [(256, 768, jnp.float32),
+                                    (512, 1024, jnp.bfloat16),
+                                    (128, 4096, jnp.float32)])
+def test_rmsnorm_kernel_vs_ref(r, d, dt):
+    x = t((r, d), dt)
+    w = t((d,)) * 0.1
+    got = rmsnorm_fwd(x, w, block_rows=64, interpret=True)
+    want = kref.rmsnorm_ref(x, w)
+    atol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=atol
+    )
+
+
+@pytest.mark.parametrize("n,l", [(4, 65536), (9, 131072), (2, 8192)])
+def test_gossip_mix_kernel_vs_ref(n, l):
+    st = t((n, l))
+    w = jnp.abs(t((n,)))
+    w = w / jnp.sum(w)
+    got = gossip_mix_fwd(st, w, block_len=8192, interpret=True)
+    want = kref.gossip_mix_ref(st, w)
+    np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+def test_ops_wrappers_roundtrip():
+    """Public ops accept model layout (B, S, H, D)."""
+    q, k, v = t((1, 256, 4, 2 * 32)).reshape(1, 256, 4, 64), \
+        t((1, 256, 2, 64)), t((1, 256, 2, 64))
+    out = ops.flash_attention(q, k, v, causal=True)
+    assert out.shape == q.shape
+    x = t((4, 128, 256))
+    w = t((256,)) * 0.1
+    assert ops.rmsnorm(x, w).shape == x.shape

@@ -1,0 +1,101 @@
+"""Hypothesis property tests on scheduling invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ComputeGraph, TaskGraph, bottleneck_time
+from repro.core.bqp import bottleneck_time_batch, build_bqp, task_times
+from repro.core.rounding import signs_to_assignments
+
+
+@st.composite
+def instances(draw):
+    n_t = draw(st.integers(2, 8))
+    n_k = draw(st.integers(2, 4))
+    p = draw(
+        st.lists(st.floats(0.01, 50.0), min_size=n_t, max_size=n_t)
+    )
+    e = draw(st.lists(st.floats(0.1, 20.0), min_size=n_k, max_size=n_k))
+    edges = draw(
+        st.lists(
+            st.tuples(st.integers(0, n_t - 1), st.integers(0, n_t - 1)),
+            max_size=n_t * 2,
+        )
+    )
+    edges = tuple(sorted({(i, j) for (i, j) in edges if i != j}))
+    c_seed = draw(st.integers(0, 2**31 - 1))
+    C = np.random.default_rng(c_seed).uniform(0, 5, size=(n_k, n_k))
+    np.fill_diagonal(C, 0.0)
+    tg = TaskGraph(p=np.asarray(p), edges=edges)
+    cg = ComputeGraph(e=np.asarray(e), C=C)
+    a = np.asarray(
+        draw(st.lists(st.integers(0, n_k - 1), min_size=n_t, max_size=n_t))
+    )
+    return tg, cg, a
+
+
+@given(instances())
+@settings(max_examples=60, deadline=None)
+def test_batch_matches_scalar(inst):
+    tg, cg, a = inst
+    assert np.isclose(
+        bottleneck_time(tg, cg, a), bottleneck_time_batch(tg, cg, a[None])[0]
+    )
+
+
+@given(instances(), st.floats(1.1, 4.0))
+@settings(max_examples=40, deadline=None)
+def test_speedup_monotone(inst, factor):
+    """Uniformly faster machines can't increase the bottleneck (fixed A)."""
+    tg, cg, a = inst
+    t0 = bottleneck_time(tg, cg, a)
+    faster = ComputeGraph(e=cg.e * factor, C=cg.C)
+    assert bottleneck_time(tg, faster, a) <= t0 + 1e-9
+
+
+@given(instances())
+@settings(max_examples=40, deadline=None)
+def test_extra_edge_monotone(inst):
+    """Adding a dependency can only increase the bottleneck (fixed A)."""
+    tg, cg, a = inst
+    t0 = bottleneck_time(tg, cg, a)
+    cand = [(i, j) for i in range(tg.num_tasks) for j in range(tg.num_tasks)
+            if i != j and (i, j) not in tg.edges]
+    if not cand:
+        return
+    tg2 = TaskGraph(p=tg.p, edges=tg.edges + (cand[0],))
+    assert bottleneck_time(tg2, cg, a) >= t0 - 1e-9
+
+
+@given(instances())
+@settings(max_examples=40, deadline=None)
+def test_comp_time_equals_machine_load(inst):
+    tg, cg, a = inst
+    t_comp, _ = task_times(tg, cg, a)
+    loads = np.zeros(cg.num_machines)
+    np.add.at(loads, a, tg.p)
+    for i in range(tg.num_tasks):
+        assert np.isclose(t_comp[i], loads[a[i]] / cg.e[a[i]])
+
+
+@given(st.integers(2, 6), st.integers(2, 4), st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_rounding_repair_always_feasible(n_t, n_k, seed):
+    """Any ±1 sample maps to a feasible one-machine-per-task assignment."""
+    rng = np.random.default_rng(seed)
+    z = rng.standard_normal((16, n_t * n_k + 1))
+    signs = np.sign(z)
+    signs[signs == 0] = 1
+    assignments, _ = signs_to_assignments(signs, z, n_t, n_k)
+    assert assignments.shape == (16, n_t)
+    assert np.all((0 <= assignments) & (assignments < n_k))
+
+
+@given(instances())
+@settings(max_examples=30, deadline=None)
+def test_bqp_scale_invariance(inst):
+    """Scaling all Q̃ by q_scale must leave quadratic bottlenecks consistent."""
+    tg, cg, a = inst
+    data = build_bqp(tg, cg)
+    assert data.q_scale > 0
+    assert np.isfinite(data.Q_tilde).all()

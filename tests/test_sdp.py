@@ -1,0 +1,96 @@
+"""SDP relaxation + randomized rounding: the paper's bound sandwich."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SDPOptions,
+    brute_force_optimum,
+    build_bqp,
+    expected_bottleneck,
+    naive_rounding,
+    optimal_upper_bound,
+    randomized_rounding,
+    random_compute_graph,
+    random_task_graph,
+    sdp_lower_bound,
+    solve_sdp,
+)
+from repro.core.bqp import bottleneck_time
+
+
+@pytest.fixture(scope="module")
+def solved():
+    rng = np.random.default_rng(42)
+    tg = random_task_graph(rng, 6, degree_low=1, degree_high=3)
+    cg = random_compute_graph(rng, 3)
+    data = build_bqp(tg, cg)
+    sol = solve_sdp(data, SDPOptions(max_iters=4000, tol=1e-7))
+    _, t_star = brute_force_optimum(tg, cg)
+    return tg, cg, data, sol, t_star
+
+
+def test_solution_is_valid_covariance(solved):
+    _, _, _, sol, _ = solved
+    Y = sol.Y
+    assert np.allclose(np.diag(Y), 1.0, atol=1e-6)
+    w = np.linalg.eigvalsh(0.5 * (Y + Y.T))
+    assert w.min() > -1e-6
+
+
+def test_bound_sandwich(solved):
+    """Eq. 24/27: SDP lower bound <= OPT <= best rounded <= paper UB region."""
+    tg, cg, data, sol, t_star = solved
+    res = randomized_rounding(
+        data, tg, cg, sol.Y, num_samples=4000,
+        rng=np.random.default_rng(0), backend="numpy",
+    )
+    assert res.lower_bound <= t_star * 1.05 + 1e-6   # first-order slack
+    assert t_star <= res.bottleneck + 1e-9
+    assert res.bottleneck <= res.expected_bottleneck * 1.5 + 1e-6
+
+
+def test_rounding_near_optimal_small(solved):
+    tg, cg, data, sol, t_star = solved
+    res = randomized_rounding(
+        data, tg, cg, sol.Y, num_samples=4000,
+        rng=np.random.default_rng(0), backend="numpy",
+    )
+    assert res.bottleneck <= t_star * 1.35 + 1e-9
+
+
+def test_naive_rounding_feasible(solved):
+    tg, cg, data, sol, _ = solved
+    a = naive_rounding(data, sol.Y)
+    assert a.shape == (tg.num_tasks,)
+    assert np.all((0 <= a) & (a < cg.num_machines))
+    assert np.isfinite(bottleneck_time(tg, cg, a))
+
+
+def test_expected_value_formula_matches_monte_carlo(solved):
+    """Appendix A arcsin identity vs empirical sign-sample average."""
+    tg, cg, data, sol, _ = solved
+    rng = np.random.default_rng(9)
+    w, V = np.linalg.eigh(sol.Y)
+    root = V * np.sqrt(np.clip(w, 0, None))
+    z = rng.standard_normal((200_000, sol.Y.shape[0])) @ root.T
+    s = np.sign(z)
+    k = np.argmax([np.sum(np.abs(q)) for q in data.Q_tilde])
+    emp = np.mean(np.einsum("ni,ij,nj->n", s, data.Q_tilde[k], s)) / 4.0
+    asin = (2 / np.pi) * np.sum(
+        data.Q_tilde[k] * np.arcsin(np.clip(sol.Y, -1, 1))
+    ) / 4.0
+    assert np.isclose(emp, asin, rtol=0.05)
+
+
+def test_jax_rounding_backend_matches_numpy(solved):
+    tg, cg, data, sol, _ = solved
+    r_np = randomized_rounding(
+        data, tg, cg, sol.Y, num_samples=1000,
+        rng=np.random.default_rng(3), backend="numpy",
+    )
+    r_jx = randomized_rounding(
+        data, tg, cg, sol.Y, num_samples=1000,
+        rng=np.random.default_rng(3), backend="jax",
+    )
+    assert np.isclose(r_np.bottleneck, r_jx.bottleneck, rtol=1e-4)

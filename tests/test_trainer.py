@@ -1,0 +1,73 @@
+"""Trainer: LM training decreases loss; microbatching ≡ full batch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data.synthetic import LMStream
+from repro.models import build_model
+from repro.train.optim import AdamW
+from repro.train.trainer import init_train_state, make_train_step
+
+
+def test_lm_training_learns():
+    cfg = get_smoke_config("qwen3-8b").replace(vocab_size=64)
+    api = build_model(cfg)
+    opt = AdamW(learning_rate=3e-3, weight_decay=0.0)
+    state = init_train_state(api, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(api, opt))
+    stream = LMStream(vocab_size=64, seq_len=64, global_batch=8, seed=0)
+    losses = []
+    for i in range(30):
+        b = stream.batch(i)
+        state, metrics = step(
+            state, {k: jnp.asarray(v) for k, v in b.items()}
+        )
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::10]
+    assert int(state["opt"].step) == 30
+
+
+def test_microbatched_step_matches_full():
+    # f32 activations so the only difference is reduction order
+    cfg = get_smoke_config("granite-3-2b").replace(
+        vocab_size=64, dtype=jnp.float32
+    )
+    api = build_model(cfg)
+    opt = AdamW(learning_rate=1e-3, weight_decay=0.0, grad_clip=0.0)
+    state0 = init_train_state(api, opt, jax.random.PRNGKey(1))
+    stream = LMStream(vocab_size=64, seq_len=32, global_batch=8, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in stream.batch(0).items()}
+
+    s_full, m_full = jax.jit(make_train_step(api, opt, microbatches=1))(
+        jax.tree.map(jnp.copy, state0), batch
+    )
+    s_micro, m_micro = jax.jit(make_train_step(api, opt, microbatches=4))(
+        jax.tree.map(jnp.copy, state0), batch
+    )
+    # CE means differ slightly (per-microbatch token counts equal here), so
+    # parameters after one step must match closely
+    for a, b in zip(
+        jax.tree.leaves(s_full["params"]), jax.tree.leaves(s_micro["params"])
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=5e-4, rtol=5e-3,
+        )
+
+
+def test_vlm_microbatch_split_handles_mrope_positions():
+    cfg = get_smoke_config("qwen2-vl-72b").replace(vocab_size=64)
+    api = build_model(cfg)
+    opt = AdamW(learning_rate=1e-3)
+    state = init_train_state(api, opt, jax.random.PRNGKey(2))
+    b, s = 4, 32
+    batch = {
+        "inputs_embeds": jnp.ones((b, s, cfg.d_model), cfg.dtype),
+        "positions": jnp.tile(jnp.arange(s)[None, None], (3, b, 1)),
+        "labels": jnp.ones((b, s), jnp.int32),
+    }
+    step = jax.jit(make_train_step(api, opt, microbatches=2))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
