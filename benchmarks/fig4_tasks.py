@@ -3,6 +3,11 @@
 Paper headline: SDP+randomized rounding reduces bottleneck time by
 63-91% vs HEFT and 41-84% vs TP-HEFT across N_T.  We report the same
 curves (mean over seeds) plus the Eq. 27 upper bound.
+
+Beyond-paper: ``scaling`` extends the same comparison past the paper's
+N_T <= 30 into the {32, 64, 128}-task regime that the matrix-free
+``FactoredBQP`` representation unlocks (the dense stacks for N_T=128
+would need gigabytes; see BENCH_scheduler_scaling.json for the sweep).
 """
 
 from __future__ import annotations
@@ -10,6 +15,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import Timer, emit, paper_instance, run_methods
+from repro.core import SDPOptions, schedule
 
 
 def run(quick: bool = True) -> dict:
@@ -43,11 +49,45 @@ def run(quick: bool = True) -> dict:
     return rows
 
 
+def scaling(quick: bool = True) -> dict:
+    """SDP vs HEFT/TP-HEFT beyond the paper's sizes (N_T up to 128)."""
+    sizes = (32, 64) if quick else (32, 64, 128)
+    rows = {}
+    for n_t in sizes:
+        tg, cg = paper_instance(0, n_t)
+        n = n_t * cg.num_machines
+        # cap the iteration budget: the PSD projection is O(n³) per iter
+        iters = int(np.clip(60_000 // max(n, 1), 80, 1500))
+        with Timer() as t:
+            out = {
+                m: schedule(tg, cg, m, seed=0).bottleneck
+                for m in ("heft", "tp_heft")
+            }
+            s = schedule(
+                tg, cg, "sdp",
+                seed=0,
+                num_samples=512 if quick else 2048,
+                sdp_options=SDPOptions(max_iters=iters, check_every=10),
+            )
+            out["sdp"] = s.bottleneck
+        rows[n_t] = out
+        emit(
+            f"fig4_scaling_nt{n_t}",
+            t.seconds * 1e6,
+            f"rep={s.info['representation']};"
+            f"sdp={out['sdp']:.3f};heft={out['heft']:.3f};"
+            f"tp_heft={out['tp_heft']:.3f};"
+            f"reduction_vs_heft={1 - out['sdp'] / out['heft']:.0%}",
+        )
+    return rows
+
+
 def main(quick: bool = True):
     rows = run(quick)
     print("# N_T, " + ", ".join(rows[next(iter(rows))].keys()))
     for n, r in rows.items():
         print(f"# {n}, " + ", ".join(f"{v:.3f}" for v in r.values()))
+    rows.update(scaling(quick))
     return rows
 
 

@@ -1,21 +1,146 @@
 """Scheduler performance: SDP solve + rounding cost vs problem size.
 
 This is the control-plane cost of the paper's technique (runs once per
-topology change).  Also compares the numpy vs JAX-vectorized rounding
-backends (§Perf scheduler item).
+topology change).  Two parts:
+
+  - the original small-instance timing (numpy vs fused-JAX rounding
+    backends, §Perf scheduler item);
+  - a scaling sweep over N_T ∈ {8, 16, 32, 64, 128} (plus one
+    N_T=104, N_K=16 / n=1664 end-to-end run) that records build / solve /
+    round wall-clock and the peak tensor bytes of whichever representation
+    ``schedule`` auto-picks — written to ``BENCH_scheduler_scaling.json``
+    at the repo root.  The factored representation is what makes the tail
+    of this sweep representable at all: the dense (|E|, n, n) stacks for
+    N_T=128, N_K=8 would need ~3 GB (recorded per row as
+    ``dense_bytes_estimate``).
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
 
 from benchmarks.common import Timer, emit, paper_instance
-from repro.core import SDPOptions, build_bqp, randomized_rounding, solve_sdp
+from repro.core import (
+    SDPOptions,
+    build_bqp,
+    build_factored_bqp,
+    dense_bytes_estimate,
+    randomized_rounding,
+    solve_sdp,
+)
+from repro.core.scheduler import _pick_representation
+
+_JSON_PATH = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_scheduler_scaling.json"
+)
+
+SCALING_TASKS = (8, 16, 32, 64, 128)
 
 
-def main(quick: bool = True):
+def _sweep_point(
+    num_tasks: int,
+    num_machines: int,
+    *,
+    seed: int = 0,
+    max_iters: int,
+    num_samples: int,
+    backend: str = "jax",
+) -> dict:
+    tg, cg = paper_instance(seed, num_tasks, num_machines=num_machines)
+    rep = _pick_representation(tg, cg, "auto")
+
+    with Timer() as t_build:
+        if rep == "factored":
+            data = build_factored_bqp(tg, cg)
+        else:
+            data = build_bqp(tg, cg)
+    with Timer() as t_solve:
+        sol = solve_sdp(data, SDPOptions(max_iters=max_iters, check_every=10))
+    with Timer() as t_round:
+        res = randomized_rounding(
+            data, tg, cg, sol.Y,
+            num_samples=num_samples,
+            rng=np.random.default_rng(seed),
+            backend=backend,
+        )
+    return {
+        "n_tasks": num_tasks,
+        "n_machines": num_machines,
+        "n": num_tasks * num_machines,
+        # report what the solver actually used, not what auto would pick
+        "representation": sol.stats["representation"],
+        "constraint_edges": len(data.edges),
+        "build_seconds": t_build.seconds,
+        "solve_seconds": t_solve.seconds,
+        "round_seconds": t_round.seconds,
+        "sdp_iterations": sol.iterations,
+        "sdp_residual": sol.residual,
+        "peak_tensor_bytes": sol.stats["peak_tensor_bytes"],
+        "dense_bytes_estimate": dense_bytes_estimate(tg, cg),
+        "bottleneck": res.bottleneck,
+        "lower_bound": res.lower_bound,
+        "num_feasible": res.num_feasible,
+        "rounding_backend": backend,
+    }
+
+
+def scaling_sweep(quick: bool = True) -> dict:
+    """N_T sweep + one n>=1600 instance; returns (and writes) the record."""
+    rows = []
+    for n_t in SCALING_TASKS:
+        n = n_t * 8
+        # iteration budget shrinks with n: the PSD projection is O(n³)/iter
+        iters = int(np.clip(4000 // max(n // 32, 1), 30, 1500))
+        if quick:
+            iters = min(iters, 200)
+        rows.append(
+            _sweep_point(
+                n_t, 8, max_iters=iters,
+                num_samples=512 if quick else 2048,
+            )
+        )
+        r = rows[-1]
+        emit(
+            f"scheduler_scaling_nt{n_t}",
+            r["solve_seconds"] * 1e6,
+            f"rep={r['representation']};n={r['n']};"
+            f"build_s={r['build_seconds']:.3f};round_s={r['round_seconds']:.3f};"
+            f"peak_mb={r['peak_tensor_bytes']/1e6:.1f};"
+            f"dense_would_be_mb={r['dense_bytes_estimate']/1e6:.1f}",
+        )
+
+    large = None
+    if not quick:
+        # acceptance-scale instance: N_T >= 100, N_K >= 16 (n >= 1600)
+        large = _sweep_point(
+            104, 16, max_iters=30, num_samples=512, backend="jax"
+        )
+        emit(
+            "scheduler_scaling_large_n1664",
+            large["solve_seconds"] * 1e6,
+            f"rep={large['representation']};n={large['n']};"
+            f"bottleneck={large['bottleneck']:.3f};"
+            f"peak_mb={large['peak_tensor_bytes']/1e6:.1f};"
+            f"dense_would_be_mb={large['dense_bytes_estimate']/1e6:.1f}",
+        )
+
+    record = {
+        "generated_unix": time.time(),
+        "sweep": rows,
+        "large_instance": large,
+    }
+    if not quick:
+        # quick (CI-smoke) runs must not clobber the checked-in full record
+        _JSON_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    return record
+
+
+def small_instance_backends(quick: bool = True):
+    """Original small-instance benchmark: solve + rounding backend compare."""
     sizes = (10, 21) if quick else (10, 21, 30)
     iters = 1500 if quick else 4000
     for n in sizes:
@@ -45,6 +170,11 @@ def main(quick: bool = True):
             f"round_numpy_us={times['numpy']*1e6:.0f};"
             f"round_jax_us={times['jax']*1e6:.0f}",
         )
+
+
+def main(quick: bool = True):
+    small_instance_backends(quick)
+    scaling_sweep(quick)
 
 
 if __name__ == "__main__":

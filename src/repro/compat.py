@@ -1,0 +1,28 @@
+"""Version compatibility shims for JAX APIs used across the repo.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way.  Call sites in this repo use
+the modern spelling (``from repro.compat import shard_map`` with
+``check_vma=...``); this module translates for whichever JAX is installed.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # modern JAX
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg auto-translated."""
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

@@ -2,10 +2,13 @@
 
 from repro.core.bqp import (
     BQPData,
+    FactoredBQP,
     bottleneck_time,
     bottleneck_time_batch,
     brute_force_optimum,
     build_bqp,
+    build_factored_bqp,
+    dense_bytes_estimate,
 )
 from repro.core.graphs import (
     ComputeGraph,
@@ -22,13 +25,21 @@ from repro.core.rounding import (
     randomized_rounding,
     sdp_lower_bound,
 )
-from repro.core.scheduler import METHODS, Schedule, compare_methods, schedule
+from repro.core.scheduler import (
+    METHODS,
+    REPRESENTATIONS,
+    Schedule,
+    compare_methods,
+    schedule,
+)
 from repro.core.sdp import SDPOptions, SDPSolution, solve_sdp
 
 __all__ = [
     "BQPData",
     "ComputeGraph",
+    "FactoredBQP",
     "METHODS",
+    "REPRESENTATIONS",
     "RoundingResult",
     "SDPOptions",
     "SDPSolution",
@@ -38,7 +49,9 @@ __all__ = [
     "bottleneck_time_batch",
     "brute_force_optimum",
     "build_bqp",
+    "build_factored_bqp",
     "compare_methods",
+    "dense_bytes_estimate",
     "expected_bottleneck",
     "gossip_task_graph",
     "naive_rounding",

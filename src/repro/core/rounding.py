@@ -3,13 +3,21 @@
 Implements:
   - ``randomized_rounding``: sample z ~ N(0, Y*), take sign(z), fold the
     homogenization variable u, repair/filter to feasible assignments, pick
-    the best (paper §3, Aspremont-Boyd style).  Two backends: a clear
-    numpy reference and a JAX ``vmap``/``jit`` implementation that evaluates
-    tens of thousands of samples in one fused call (§Perf item).
+    the best (paper §3, Aspremont-Boyd style).  Two backends:
+      * ``numpy`` — the clear float64 reference implementation;
+      * ``jax``   — the whole pipeline (sampling, sign folding, repair,
+        batched bottleneck evaluation, arg-best selection) fused into ONE
+        jitted call, so tens of thousands of samples never leave device
+        (§Perf item; DESIGN.md §5).
   - ``naive_rounding``: per-task argmax of the relaxed solution (the paper's
     "SDP with naive rounding" baseline).
   - ``expected_bottleneck``: Eq. (22)-(23) arcsin formula.
   - ``sdp_lower_bound`` / ``optimal_upper_bound``: Eq. (24) and (27).
+
+All analysis functions accept either the dense ``BQPData`` oracle or the
+matrix-free ``FactoredBQP`` (DESIGN.md §2); with the factored form the
+arcsin/linear transforms touch only the dense (n+1)² Gram matrix Y — never
+an (|E|, n, n) stack.
 """
 
 from __future__ import annotations
@@ -18,8 +26,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.bqp import BQPData, bottleneck_time_batch
+from repro.core.bqp import BQPData, FactoredBQP, bottleneck_time_batch
 from repro.core.graphs import ComputeGraph, TaskGraph
+
+AnyBQP = BQPData | FactoredBQP
 
 
 @dataclasses.dataclass
@@ -33,14 +43,18 @@ class RoundingResult:
     upper_bound: float              # Eq. (27)  (>= OPT, see note in DESIGN.md)
 
 
+def _covariance_root(Y: np.ndarray) -> np.ndarray:
+    """Eigen square root, robust to the slightly indefinite Y that a
+    first-order solver returns."""
+    w, V = np.linalg.eigh(0.5 * (Y + Y.T))
+    return V * np.sqrt(np.clip(w, 0.0, None))
+
+
 def _sample_signs(
     Y: np.ndarray, num_samples: int, rng: np.random.Generator
 ) -> np.ndarray:
     """Draw sign(z), z ~ N(0, Y), as ±1 matrix (num_samples, n+1)."""
-    # Eigen square root is robust to the slightly indefinite Y that a
-    # first-order solver returns.
-    w, V = np.linalg.eigh(0.5 * (Y + Y.T))
-    root = V * np.sqrt(np.clip(w, 0.0, None))
+    root = _covariance_root(Y)
     g = rng.standard_normal((num_samples, Y.shape[0]))
     z = g @ root.T
     s = np.sign(z)
@@ -76,7 +90,7 @@ def signs_to_assignments(
 
 
 def randomized_rounding(
-    bqp: BQPData,
+    bqp: AnyBQP,
     task_graph: TaskGraph,
     compute_graph: ComputeGraph,
     Y: np.ndarray,
@@ -87,32 +101,39 @@ def randomized_rounding(
     backend: str = "numpy",
 ) -> RoundingResult:
     rng = rng or np.random.default_rng(0)
-    signs, z = _sample_signs(Y, num_samples, rng)
-    assignments, strict_mask = signs_to_assignments(
-        signs, z, bqp.n_tasks, bqp.n_machines
-    )
-    if strict:
-        if not strict_mask.any():
-            # Paper discards infeasible samples; if none survive, fall back
-            # to repaired samples (never fail).
-            candidate = assignments
-        else:
-            candidate = assignments[strict_mask]
-    else:
-        candidate = assignments
 
     if backend == "jax":
-        times = np.asarray(
-            _bottleneck_batch_jax(task_graph, compute_graph, candidate)
+        assignment, bottleneck, num_feasible = _rounding_fused_jax(
+            task_graph,
+            compute_graph,
+            bqp.n_tasks,
+            bqp.n_machines,
+            Y,
+            num_samples,
+            rng,
+            strict,
         )
     else:
+        signs, z = _sample_signs(Y, num_samples, rng)
+        assignments, strict_mask = signs_to_assignments(
+            signs, z, bqp.n_tasks, bqp.n_machines
+        )
+        if strict and strict_mask.any():
+            # Paper discards infeasible samples; if none survive, fall back
+            # to repaired samples (never fail).
+            candidate = assignments[strict_mask]
+        else:
+            candidate = assignments
         times = bottleneck_time_batch(task_graph, compute_graph, candidate)
-    best = int(np.argmin(times))
+        best = int(np.argmin(times))
+        assignment = candidate[best]
+        bottleneck = float(times[best])
+        num_feasible = int(strict_mask.sum())
 
     return RoundingResult(
-        assignment=candidate[best],
-        bottleneck=float(times[best]),
-        num_feasible=int(strict_mask.sum()),
+        assignment=assignment,
+        bottleneck=bottleneck,
+        num_feasible=num_feasible,
         num_samples=num_samples,
         expected_bottleneck=expected_bottleneck(bqp, Y),
         lower_bound=sdp_lower_bound(bqp, Y),
@@ -120,7 +141,7 @@ def randomized_rounding(
     )
 
 
-def naive_rounding(bqp: BQPData, Y: np.ndarray) -> np.ndarray:
+def naive_rounding(bqp: AnyBQP, Y: np.ndarray) -> np.ndarray:
     """Paper's 'SDP with naive rounding': round the relaxed solution.
 
     The relaxed x is read off the u-column of the Gram matrix
@@ -139,65 +160,137 @@ def naive_rounding(bqp: BQPData, Y: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def expected_bottleneck(bqp: BQPData, Y: np.ndarray) -> float:
+def _edge_inner(bqp: AnyBQP, F: np.ndarray) -> np.ndarray:
+    """<Q̃_e, F> for all constraint edges, dense oracle or matrix-free."""
+    if isinstance(bqp, FactoredBQP):
+        return bqp.inner(F)
+    return np.einsum("eij,ij->e", bqp.Q_tilde, F)
+
+
+def expected_bottleneck(bqp: AnyBQP, Y: np.ndarray) -> float:
     """Eq. (22)-(23): max_e (1/4) E[ẑᵀ Q̃_e ẑ] via the arcsin identity."""
     asin = np.arcsin(np.clip(Y, -1.0, 1.0))
-    vals = np.einsum("eij,ij->e", bqp.Q_tilde, asin) * (2.0 / np.pi)
+    vals = _edge_inner(bqp, asin) * (2.0 / np.pi)
     return float(np.max(vals) / 4.0)
 
 
-def sdp_lower_bound(bqp: BQPData, Y: np.ndarray) -> float:
+def sdp_lower_bound(bqp: AnyBQP, Y: np.ndarray) -> float:
     """Eq. (24): the SDP objective max_e <Q̃_e, Y*>/4 lower-bounds OPT."""
-    vals = np.einsum("eij,ij->e", bqp.Q_tilde, Y)
+    vals = _edge_inner(bqp, Y)
     return float(np.max(vals) / 4.0)
 
 
-def optimal_upper_bound(bqp: BQPData, Y: np.ndarray) -> float:
+def optimal_upper_bound(bqp: AnyBQP, Y: np.ndarray) -> float:
     """Eq. (26)-(27): OPT <= max_e (1/4) Σ Q̃_e ∘ (0.112 + 0.878 Y).
 
     (The paper's Eq. 27 omits the 1/4 of Eq. 25; we keep it so the bound is
     in bottleneck-time units and comparable with Fig. 4/5.)
     """
     lin = 0.112 + 0.878 * np.clip(Y, -1.0, 1.0)
-    vals = np.einsum("eij,ij->e", bqp.Q_tilde, lin)
+    vals = _edge_inner(bqp, lin)
     return float(np.max(vals) / 4.0)
 
 
 # ---------------------------------------------------------------------------
-# JAX-vectorized bottleneck evaluation (beyond-paper §Perf optimization)
+# Fused JAX rounding (beyond-paper §Perf optimization)
 # ---------------------------------------------------------------------------
+#
+# One jitted call per (instance, strict) pair: z = g·rootᵀ, sign fold,
+# duplicate/empty repair, batched bottleneck evaluation, and best-sample
+# selection all stay on device.  Gaussians g come from the caller's numpy
+# rng so the two backends draw identical samples.
 
 _JAX_CACHE: dict = {}
+_JAX_CACHE_MAX = 32
 
 
-def _bottleneck_batch_jax(
-    task_graph: TaskGraph, compute_graph: ComputeGraph, assignments: np.ndarray
+def _fused_rounding_fn(
+    task_graph: TaskGraph, compute_graph: ComputeGraph, n_tasks: int,
+    n_machines: int, strict: bool,
 ):
-    """Batched bottleneck evaluation on device via one jitted call."""
     import jax
     import jax.numpy as jnp
 
-    key = (id(task_graph), id(compute_graph))
+    # Key on instance *content*, not object identity: ids get reused after
+    # GC and would silently hand back a closure baked with another
+    # instance's workloads/speeds/edges.
+    key = (
+        task_graph.p.tobytes(),
+        task_graph.edges,
+        compute_graph.e.tobytes(),
+        compute_graph.C.tobytes(),
+        n_tasks,
+        n_machines,
+        strict,
+    )
     fn = _JAX_CACHE.get(key)
-    if fn is None:
-        p = jnp.asarray(task_graph.p, dtype=jnp.float32)
-        e = jnp.asarray(compute_graph.e, dtype=jnp.float32)
-        C = jnp.asarray(compute_graph.C, dtype=jnp.float32)
-        n_k = compute_graph.num_machines
-        if task_graph.edges:
-            src = jnp.asarray([i for (i, _) in task_graph.edges])
-            dst = jnp.asarray([j for (_, j) in task_graph.edges])
-        else:
-            src = dst = jnp.zeros((0,), dtype=jnp.int32)
+    if fn is not None:
+        return fn
+    if len(_JAX_CACHE) >= _JAX_CACHE_MAX:
+        _JAX_CACHE.clear()
 
-        def one(a):
-            onehot = jax.nn.one_hot(a, n_k, dtype=jnp.float32)   # (T, K)
-            loads = onehot.T @ p                                  # (K,)
-            t_comp = (loads / e)[a]                               # (T,)
-            delays = C[a[src], a[dst]]                            # (|E|,)
-            comm = jnp.zeros_like(t_comp).at[src].max(delays)
-            return jnp.max(t_comp + comm)
+    p = jnp.asarray(task_graph.p, dtype=jnp.float32)
+    e = jnp.asarray(compute_graph.e, dtype=jnp.float32)
+    C = jnp.asarray(compute_graph.C, dtype=jnp.float32)
+    if task_graph.edges:
+        src = jnp.asarray([i for (i, _) in task_graph.edges])
+        dst = jnp.asarray([j for (_, j) in task_graph.edges])
+    else:
+        src = dst = jnp.zeros((0,), dtype=jnp.int32)
 
-        fn = jax.jit(jax.vmap(one))
-        _JAX_CACHE[key] = fn
-    return fn(jnp.asarray(assignments))
+    def bottleneck_one(a):
+        onehot = jax.nn.one_hot(a, n_machines, dtype=jnp.float32)  # (T, K)
+        loads = onehot.T @ p                                        # (K,)
+        t_comp = (loads / e)[a]                                     # (T,)
+        delays = C[a[src], a[dst]]                                  # (|E|,)
+        comm = jnp.zeros_like(t_comp).at[src].max(delays)
+        return jnp.max(t_comp + comm)
+
+    @jax.jit
+    def rounding(root, g):
+        B = g.shape[0]
+        z = g @ root.T                                  # (B, n+1)
+        s = jnp.where(z >= 0, 1.0, -1.0)                # sign with 0 -> +1
+        u = s[:, -1:]
+        zx = (z[:, :-1] * u).reshape(B, n_machines, n_tasks)
+        sel = (s[:, :-1] * u).reshape(B, n_machines, n_tasks) > 0
+        masked = jnp.where(sel, zx, -jnp.inf)
+        any_sel = sel.any(axis=1)                       # (B, T)
+        strict_mask = any_sel.all(axis=1)               # (B,)
+        choice = jnp.where(any_sel[:, None, :], masked, zx)
+        assignments = jnp.argmax(choice, axis=1)        # (B, T)
+        times = jax.vmap(bottleneck_one)(assignments)   # (B,)
+        if strict:
+            times = jnp.where(
+                strict_mask.any(),
+                jnp.where(strict_mask, times, jnp.inf),
+                times,
+            )
+        best = jnp.argmin(times)
+        return assignments[best], times[best], strict_mask.sum()
+
+    _JAX_CACHE[key] = rounding
+    return rounding
+
+
+def _rounding_fused_jax(
+    task_graph: TaskGraph,
+    compute_graph: ComputeGraph,
+    n_tasks: int,
+    n_machines: int,
+    Y: np.ndarray,
+    num_samples: int,
+    rng: np.random.Generator,
+    strict: bool,
+) -> tuple[np.ndarray, float, int]:
+    fn = _fused_rounding_fn(
+        task_graph, compute_graph, n_tasks, n_machines, strict
+    )
+    root = _covariance_root(Y).astype(np.float32)
+    g = rng.standard_normal((num_samples, Y.shape[0])).astype(np.float32)
+    assignment, t_best, n_feasible = fn(root, g)
+    return (
+        np.asarray(assignment, dtype=np.int64),
+        float(t_best),
+        int(n_feasible),
+    )

@@ -11,6 +11,12 @@ Methods:
   - ``heft``        : HEFT on the §4.1.1 DAG rewrite
   - ``tp_heft``     : throughput-HEFT greedy period minimization
   - ``greedy`` / ``random`` / ``round_robin`` / ``sorted`` : simple baselines
+
+SDP methods pick the problem representation automatically: the dense
+``BQPData`` oracle for small instances, the matrix-free ``FactoredBQP``
+once the dense (|E|, n, n) stacks would cross ``_DENSE_BYTES_LIMIT``
+(DESIGN.md §2).  Override with ``representation=`` and observe the choice
+in ``Schedule.info["representation"]``.
 """
 
 from __future__ import annotations
@@ -40,6 +46,26 @@ METHODS = (
     "sorted",
 )
 
+REPRESENTATIONS = ("auto", "dense", "factored")
+
+# Auto mode switches to the matrix-free representation once the dense
+# Q/Q̃ stacks would exceed this many bytes (~100 MB ≈ N_T·N_K past ~300).
+_DENSE_BYTES_LIMIT = 100_000_000
+
+
+def _pick_representation(
+    task_graph: TaskGraph, compute_graph: ComputeGraph, representation: str
+) -> str:
+    if representation not in REPRESENTATIONS:
+        raise ValueError(
+            f"unknown representation {representation!r}; "
+            f"choose from {REPRESENTATIONS}"
+        )
+    if representation != "auto":
+        return representation
+    dense_bytes = bqp_mod.dense_bytes_estimate(task_graph, compute_graph)
+    return "factored" if dense_bytes > _DENSE_BYTES_LIMIT else "dense"
+
 
 @dataclasses.dataclass
 class Schedule:
@@ -61,6 +87,7 @@ def schedule(
     num_samples: int = 4000,
     sdp_options: SDPOptions | None = None,
     rounding_backend: str = "jax",
+    representation: str = "auto",
     _sdp_cache: dict | None = None,
 ) -> Schedule:
     """Compute a task->machine assignment minimizing bottleneck time."""
@@ -70,15 +97,24 @@ def schedule(
     if method in ("sdp", "sdp_naive", "sdp_ls"):
         cache = _sdp_cache if _sdp_cache is not None else {}
         if "sol" not in cache:
-            cache["bqp"] = bqp_mod.build_bqp(task_graph, compute_graph)
+            rep = _pick_representation(task_graph, compute_graph, representation)
+            if rep == "factored":
+                cache["bqp"] = bqp_mod.build_factored_bqp(
+                    task_graph, compute_graph
+                )
+            else:
+                cache["bqp"] = bqp_mod.build_bqp(task_graph, compute_graph)
+            cache["representation"] = rep
             cache["sol"] = solve_sdp(cache["bqp"], sdp_options)
         data, sol = cache["bqp"], cache["sol"]
         info.update(
+            representation=cache["representation"],
             sdp_iterations=sol.iterations,
             sdp_residual=sol.residual,
             sdp_converged=sol.converged,
             sdp_seconds=sol.solve_seconds,
             lower_bound=sol.lower_bound,
+            solver_stats=sol.stats,
         )
         if method == "sdp_naive":
             assignment = naive_rounding(data, sol.Y)

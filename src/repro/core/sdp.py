@@ -14,10 +14,19 @@ over the stacked variable  v = (vec(Y), t, s):
     f(v) = t + indicator{L v = b}       prox_f = affine projection of v - ρ·c
     g(v) = indicator{Y ⪰ 0, s >= 0}     prox_g = eigenvalue clip + relu
 
-The affine projection uses a dense constraint matrix L with the Gram matrix
-G = L Lᵀ Cholesky-factored once.  Everything runs float64 on host (numpy /
-LAPACK): the scheduler is control-plane code that runs once per topology
-change, off the training critical path (see DESIGN.md §4).
+Two constraint-operator representations (DESIGN.md §4):
+
+  - ``BQPData`` (dense oracle): rows assembled from the materialized Q̃
+    stacks, Gram inverse precomputed — the reference path for small n.
+  - ``FactoredBQP`` (matrix-free): CSR rows and the Gram matrix are
+    assembled directly from the Kronecker factors via
+    ``FactoredBQP.constraint_row`` — no dense L and no (|E|, n, n) stack
+    ever exists.  For large row counts the Gram solve uses a Cholesky
+    factorization instead of an explicit inverse.
+
+Everything runs float64 on host (numpy / LAPACK): the scheduler is
+control-plane code that runs once per topology change, off the training
+critical path (see DESIGN.md §4).
 
 The solver is generic enough to be exercised on MAXCUT-style test SDPs.
 """
@@ -29,7 +38,7 @@ import time
 
 import numpy as np
 
-from repro.core.bqp import BQPData
+from repro.core.bqp import BQPData, FactoredBQP
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,8 +52,13 @@ class SDPOptions:
     # §Perf (beyond-paper): the constraint rows are ~97% sparse (each Q̃_e
     # touches one task's column block + one machine block + borders), so the
     # affine projection runs on a CSR representation.  False reproduces the
-    # dense paper-faithful baseline (same iterates, slower matvec).
+    # dense paper-faithful baseline (same iterates, slower matvec); ignored
+    # for ``FactoredBQP`` inputs, which are always CSR.
     sparse: bool = True
+    # Above this many constraint rows the Gram solve switches from a
+    # precomputed inverse to a Cholesky factorization (better conditioned,
+    # and the triangular solves cost the same O(m²) as the inverse matvec).
+    cholesky_above: int = 768
 
 
 @dataclasses.dataclass
@@ -64,6 +78,9 @@ class SDPSolution:
     residual: float
     converged: bool
     solve_seconds: float
+    # representation / memory diagnostics (constraint rows m, CSR nnz,
+    # bytes of the largest tensor the solver materialized)
+    stats: dict = dataclasses.field(default_factory=dict)
 
 
 def _flatten_sym(mat: np.ndarray) -> np.ndarray:
@@ -101,15 +118,53 @@ class _CSR:
 
 
 class _AffineProjector:
-    """Projection onto {v : L v = b} with L built once from the BQP data."""
+    """Projection onto {v : L v = b} with L built once from the BQP data.
 
-    def __init__(self, bqp: BQPData, sparse: bool = True):
+    Accepts either the dense ``BQPData`` oracle (rows taken from the
+    materialized Q̃ stack) or the matrix-free ``FactoredBQP`` (CSR rows and
+    the Gram matrix assembled straight from the Kronecker factors).
+    """
+
+    def __init__(
+        self,
+        bqp: BQPData | FactoredBQP,
+        sparse: bool = True,
+        cholesky_above: int = 768,
+    ):
         n1 = bqp.n + 1                      # side of Y
         self.n1 = n1
         n_edges = len(bqp.edges)
         self.dim = n1 * n1 + 1 + n_edges    # Y_flat, t, s
         self.n_edges = n_edges
+        self.m = n1 + bqp.n_tasks + n_edges
+        self.stats: dict = {"constraint_rows": self.m}
 
+        if isinstance(bqp, FactoredBQP):
+            self._init_factored(bqp)
+        else:
+            self._init_dense(bqp, sparse)
+
+        G = self._gram()
+        G[np.diag_indices_from(G)] += 1e-10
+        self._chol = self.m > cholesky_above
+        if self._chol:
+            # Cholesky path for large m: two O(m²) triangular solves per
+            # iteration; avoids forming (and squaring the conditioning of)
+            # an explicit inverse.
+            import scipy.linalg as sla
+
+            self._G_factor = sla.cho_factor(G, lower=True)
+            self._cho_solve = sla.cho_solve
+        else:
+            # G is fixed across iterations: precompute G⁻¹ once (m ≤ a few
+            # hundred) — a dense matvec per iteration instead of two LU
+            # solves (§Perf: the solves were 40% of iteration time).
+            self._Ginv = np.linalg.inv(G)
+        self.stats["gram_bytes"] = int(G.nbytes)
+
+    # -- construction -------------------------------------------------------
+    def _init_dense(self, bqp: BQPData, sparse: bool):
+        n1 = self.n1
         rows: list[np.ndarray] = []
         b: list[float] = []
 
@@ -129,7 +184,7 @@ class _AffineProjector:
 
         # <Q̃_e, Y> - 4 t + s_e = 0   (normalized Q)
         qn = bqp.Q_tilde / bqp.q_scale
-        for k in range(n_edges):
+        for k in range(self.n_edges):
             r = np.zeros(self.dim)
             r[: n1 * n1] = _flatten_sym(qn[k])
             r[n1 * n1] = -4.0
@@ -137,26 +192,95 @@ class _AffineProjector:
             rows.append(r)
             b.append(0.0)
 
-        L = np.stack(rows)                            # (m, dim)
         self.b = np.asarray(b)
-        G = L @ L.T
-        G[np.diag_indices_from(G)] += 1e-10
-        # G is fixed across iterations: precompute G⁻¹ once (m ≤ a few
-        # hundred) — a dense matvec per iteration instead of two LU solves
-        # (§Perf: the solves were 40% of iteration time).
-        self._Ginv = np.linalg.inv(G)
         self._sparse = sparse
+        L = np.stack(rows)                            # (m, dim)
+        self._G = L @ L.T
+        # rows list + stacked L coexist here: that transient is the dense
+        # path's true build-time peak, recorded for the scaling benchmark.
+        self.stats["build_peak_bytes"] = int(2 * L.nbytes)
         if sparse:
             self.L = _CSR(rows, self.dim)             # dense L is discarded
         else:
             self.L = L
+        self.stats["representation"] = "dense"
+
+    def _init_factored(self, fbqp: FactoredBQP):
+        import scipy.sparse as sp
+
+        n1, n = self.n1, fbqp.n
+        n_t, n_k = fbqp.n_tasks, fbqp.n_machines
+        cols: list[np.ndarray] = []
+        vals: list[np.ndarray] = []
+        rows: list[np.ndarray] = []
+        b = np.zeros(self.m)
+
+        # diag(Y) = 1
+        diag_idx = np.arange(n1)
+        rows.append(diag_idx)
+        cols.append(diag_idx * n1 + diag_idx)
+        vals.append(np.ones(n1))
+        b[:n1] = 1.0
+
+        # <A_i, Y> = 0: border h/2 on row & column of u, corner n_k - 2.
+        # h selects (task i, machine κ) for all κ: vec indices i + κ·N_T.
+        for i in range(n_t):
+            h_idx = i + np.arange(n_k) * n_t
+            r = n1 + i
+            rows.append(np.full(2 * n_k + 1, r))
+            cols.append(
+                np.concatenate([h_idx * n1 + n, n * n1 + h_idx, [n * n1 + n]])
+            )
+            vals.append(
+                np.concatenate([np.full(2 * n_k, 0.5), [n_k - 2.0]])
+            )
+
+        # <Q̃_e, Y> - 4 t + s_e = 0 with Q̃_e rows straight from the factors
+        for k in range(self.n_edges):
+            q_cols, q_vals = fbqp.constraint_row(k)
+            r = n1 + n_t + k
+            rows.append(np.full(q_cols.size + 2, r))
+            cols.append(
+                np.concatenate([q_cols, [n1 * n1, n1 * n1 + 1 + k]])
+            )
+            vals.append(
+                np.concatenate([q_vals / fbqp.q_scale, [-4.0, 1.0]])
+            )
+
+        self.b = b
+        self.L = sp.csr_matrix(
+            (
+                np.concatenate(vals),
+                (np.concatenate(rows).astype(np.int64), np.concatenate(cols)),
+            ),
+            shape=(self.m, self.dim),
+        )
+        self._sparse = True
+        self.stats["representation"] = "factored"
+        self.stats["csr_nnz"] = int(self.L.nnz)
+
+    def _gram(self) -> np.ndarray:
+        if self.stats.get("representation") == "factored":
+            return np.asarray((self.L @ self.L.T).todense())
+        G = self._G
+        del self._G
+        return G
+
+    # -- application --------------------------------------------------------
+    def _solve_gram(self, resid: np.ndarray) -> np.ndarray:
+        if self._chol:
+            return self._cho_solve(self._G_factor, resid)
+        return self._Ginv @ resid
 
     def __call__(self, v: np.ndarray) -> np.ndarray:
+        if self.stats.get("representation") == "factored":
+            resid = self.L @ v - self.b
+            return v - self.L.T @ self._solve_gram(resid)
         if self._sparse:
             resid = self.L.matvec(v) - self.b
         else:
             resid = self.L @ v - self.b
-        y = self._Ginv @ resid
+        y = self._solve_gram(resid)
         if self._sparse:
             return v - self.L.rmatvec(y)
         return v - self.L.T @ y
@@ -176,11 +300,15 @@ def _project_cone(v: np.ndarray, n1: int, n_edges: int) -> np.ndarray:
     return out
 
 
-def solve_sdp(bqp: BQPData, options: SDPOptions | None = None) -> SDPSolution:
+def solve_sdp(
+    bqp: BQPData | FactoredBQP, options: SDPOptions | None = None
+) -> SDPSolution:
     """Douglas-Rachford splitting for the relaxed problem (20)."""
     opts = options or SDPOptions()
     t0 = time.perf_counter()
-    proj = _AffineProjector(bqp, sparse=opts.sparse)
+    proj = _AffineProjector(
+        bqp, sparse=opts.sparse, cholesky_above=opts.cholesky_above
+    )
     n1, n_edges, dim = proj.n1, proj.n_edges, proj.dim
 
     c = np.zeros(dim)
@@ -220,9 +348,25 @@ def solve_sdp(bqp: BQPData, options: SDPOptions | None = None) -> SDPSolution:
     # NOTE: a first-order iterate only *approximates* the SDP optimum, so
     # this is a certified lower bound only once ``converged`` — callers
     # (benchmarks) report it with the residual attached.
-    qn = bqp.Q_tilde / bqp.q_scale
-    t_from_y = float(np.max(np.einsum("eij,ij->e", qn, Y)) / 4.0)
+    if isinstance(bqp, FactoredBQP):
+        t_from_y = float(np.max(bqp.inner(Y)) / bqp.q_scale / 4.0)
+    else:
+        qn = bqp.Q_tilde / bqp.q_scale
+        t_from_y = float(np.max(np.einsum("eij,ij->e", qn, Y)) / 4.0)
     lower = max(t_val, 0.0) * bqp.q_scale
+
+    stats = dict(proj.stats)
+    # largest tensor the solve touched: the stacked DR variable dominates
+    # for factored instances; the constraint-matrix build and the Q̃ stack
+    # dominate dense ones.
+    peak = max(
+        3 * proj.dim * 8,
+        stats.get("gram_bytes", 0),
+        stats.get("build_peak_bytes", 0),
+    )
+    if isinstance(bqp, BQPData):
+        peak = max(peak, int(bqp.Q_tilde.nbytes + bqp.Q.nbytes))
+    stats["peak_tensor_bytes"] = int(peak)
 
     return SDPSolution(
         Y=Y,
@@ -232,4 +376,5 @@ def solve_sdp(bqp: BQPData, options: SDPOptions | None = None) -> SDPSolution:
         residual=residual,
         converged=residual < opts.tol,
         solve_seconds=time.perf_counter() - t0,
+        stats=stats,
     )

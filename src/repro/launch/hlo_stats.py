@@ -38,7 +38,11 @@ _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _CALLS_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-_DOT_OPERANDS_RE = re.compile(r"\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)")
+# Operands may carry their shape inline (`dot(f32[128,256]{1,0} %a, ...)`)
+# or be bare names (`dot(%a, %b)`); capture both forms per operand.
+_OPERAND_SPLIT_RE = re.compile(
+    r"(?:([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+)?%?([\w.\-]+)"
+)
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
@@ -125,23 +129,50 @@ def _parse_computations(text: str) -> dict[str, "_Computation"]:
     return comps
 
 
+def _operand_shape_dims(op: _Op, shapes: dict, pos: int) -> list[int]:
+    """Dims of the ``pos``-th operand of ``op`` (inline shape or name lookup)."""
+    # anchor on `kind(`: a bare `.index(kind)` can land on the op *name*
+    # (`%dot.1 = ... dot(...)`) or inside a tiled layout's T(8,128)
+    call = re.search(re.escape(op.kind) + r"\s*\(", op.line)
+    if call is None:
+        return []
+    tail = op.line[call.start() :]
+    lparen = tail.find("(")
+    # balanced scan: tiled layouts ({1,0:T(8,128)}) nest parens inside the
+    # operand list, so the first ')' is not necessarily the closing one
+    depth, rparen = 0, -1
+    for k in range(lparen, len(tail)):
+        if tail[k] == "(":
+            depth += 1
+        elif tail[k] == ")":
+            depth -= 1
+            if depth == 0:
+                rparen = k
+                break
+    if rparen < 0:
+        return []
+    operands = _OPERAND_SPLIT_RE.findall(tail[lparen + 1 : rparen])
+    if pos >= len(operands):
+        return []
+    inline_shape, name = operands[pos]
+    txt = inline_shape or shapes.get(name, "")
+    dims = _shape_dims(txt)
+    return dims[0][1] if dims else []
+
+
 def _dot_flops(op: _Op, shapes: dict) -> float:
     out_elems = 1
     dims = _shape_dims(op.out_txt)
     if dims:
         for d in dims[0][1]:
             out_elems *= d
-    lhs_m = _DOT_OPERANDS_RE.search(op.line[op.line.index(op.kind) :])
     contract = _LHS_CONTRACT_RE.search(op.line)
     k = 1
-    if lhs_m and contract:
-        lhs_shape_txt = shapes.get(lhs_m.group(1), "")
-        ldims = _shape_dims(lhs_shape_txt)
-        if ldims:
-            lshape = ldims[0][1]
-            for ci in contract.group(1).split(","):
-                if ci != "" and int(ci) < len(lshape):
-                    k *= lshape[int(ci)]
+    lshape = _operand_shape_dims(op, shapes, 0)
+    if lshape and contract:
+        for ci in contract.group(1).split(","):
+            if ci != "" and int(ci) < len(lshape):
+                k *= lshape[int(ci)]
     return 2.0 * out_elems * k
 
 
@@ -151,13 +182,10 @@ def _conv_flops(op: _Op, shapes: dict) -> float:
     if dims:
         for d in dims[0][1]:
             out_elems *= d
-    m = _DOT_OPERANDS_RE.search(op.line[op.line.index(op.kind) :])
+    rshape = _operand_shape_dims(op, shapes, 1)
     k = 1
-    if m:
-        rhs = _shape_dims(shapes.get(m.group(2), ""))
-        if rhs:
-            for d in rhs[0][1][:-1]:
-                k *= d
+    for d in rshape[:-1]:
+        k *= d
     return 2.0 * out_elems * k
 
 

@@ -119,7 +119,7 @@ class MeshRules:
     # -- distributed decode attention -------------------------------------
     def sharded_decode_attention(self, q, k_cache, v_cache, valid):
         """q (B,H,hd) replicated over tp; caches seq-sharded over tp."""
-        from jax import shard_map
+        from repro.compat import shard_map
 
         from repro.models.attention import (
             decode_attention_local,

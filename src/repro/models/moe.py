@@ -230,8 +230,9 @@ def moe_ffn_sharded(
         elementwise over F and w_down contracts F, so per-shard outputs
         are exact partial sums.
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     dp, tp = rules.dp, rules.tp_axis
     tp_size = rules.tp_size

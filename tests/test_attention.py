@@ -76,8 +76,9 @@ def test_decode_seq_sharded_matches_local():
 
     # emulate the two-shard psum by hand using the same kernel math
     import functools
-    from jax import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.compat import shard_map
 
     mesh = Mesh(np.array(jax.devices()[:1]).reshape(1), ("model",))
     fn = functools.partial(decode_attention_seq_sharded, axis_name="model")

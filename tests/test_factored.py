@@ -1,0 +1,187 @@
+"""Dense-vs-factored equivalence + memory bounds for the matrix-free core.
+
+The ``FactoredBQP`` representation must be *indistinguishable* from the
+dense ``BQPData`` oracle on instances small enough to build both: identical
+constraint rows, identical SDP iterates, identical seeded rounding — while
+never materializing an (|E|, n, n) tensor on instances where the dense
+stacks would not fit (DESIGN.md §2).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    SDPOptions,
+    build_bqp,
+    build_factored_bqp,
+    dense_bytes_estimate,
+    random_compute_graph,
+    random_task_graph,
+    schedule,
+    solve_sdp,
+)
+from repro.core import bqp as bqp_mod
+from repro.core.rounding import (
+    expected_bottleneck,
+    optimal_upper_bound,
+    sdp_lower_bound,
+)
+from repro.core.scheduler import _pick_representation
+from repro.core.sdp import _AffineProjector
+
+
+@pytest.fixture(scope="module")
+def small_pair():
+    rng = np.random.default_rng(11)
+    tg = random_task_graph(rng, 6, degree_low=1, degree_high=3)
+    cg = random_compute_graph(rng, 3)
+    return tg, cg, build_bqp(tg, cg), build_factored_bqp(tg, cg)
+
+
+def test_same_edges_and_scale(small_pair):
+    _, _, dense, fac = small_pair
+    assert fac.edges == dense.edges
+    assert np.isclose(fac.q_scale, dense.q_scale, rtol=1e-12)
+
+
+def test_constraint_rows_match_dense(small_pair):
+    """Every factored CSR row densifies to the exact dense Q̃_e."""
+    _, _, dense, fac = small_pair
+    n1 = dense.n + 1
+    for k in range(len(dense.edges)):
+        idx, vals = fac.constraint_row(k)
+        row = np.zeros(n1 * n1)
+        row[idx] = vals
+        np.testing.assert_allclose(
+            row, dense.Q_tilde[k].reshape(-1), atol=1e-12
+        )
+
+
+def test_border_and_apply_match_dense(small_pair):
+    _, _, dense, fac = small_pair
+    n, n1 = dense.n, dense.n + 1
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(n1)
+    for k in range(len(dense.edges)):
+        np.testing.assert_allclose(
+            fac.border(k), dense.Q_tilde[k, :n, n], atol=1e-12
+        )
+        np.testing.assert_allclose(
+            fac.apply(k, x), dense.Q_tilde[k] @ x, atol=1e-10
+        )
+
+
+def test_inner_matches_dense_einsum(small_pair):
+    """<Q̃_e, Y> within 1e-9 of the dense einsum (acceptance criterion)."""
+    _, _, dense, fac = small_pair
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        F = rng.standard_normal((dense.n + 1, dense.n + 1))
+        F = 0.5 * (F + F.T)
+        want = np.einsum("eij,ij->e", dense.Q_tilde, F)
+        np.testing.assert_allclose(fac.inner(F), want, atol=1e-9)
+
+
+def test_bound_formulas_match(small_pair):
+    _, _, dense, fac = small_pair
+    rng = np.random.default_rng(2)
+    Y = rng.standard_normal((dense.n + 1, dense.n + 1))
+    Y = 0.5 * (Y + Y.T)
+    np.fill_diagonal(Y, 1.0)
+    assert np.isclose(sdp_lower_bound(fac, Y), sdp_lower_bound(dense, Y))
+    assert np.isclose(
+        expected_bottleneck(fac, Y), expected_bottleneck(dense, Y)
+    )
+    assert np.isclose(
+        optimal_upper_bound(fac, Y), optimal_upper_bound(dense, Y)
+    )
+
+
+def test_projector_rows_match(small_pair):
+    """The factored CSR constraint system equals the dense projector's."""
+    _, _, dense, fac = small_pair
+    pd = _AffineProjector(dense, sparse=False)
+    pf = _AffineProjector(fac)
+    Lf = np.asarray(pf.L.todense())
+    np.testing.assert_allclose(Lf, pd.L, atol=1e-12)
+    np.testing.assert_allclose(pf.b, pd.b, atol=1e-15)
+
+
+def test_sdp_iterates_match(small_pair):
+    """Same solver trajectory from both representations (tiny instance)."""
+    _, _, dense, fac = small_pair
+    opts = SDPOptions(max_iters=200, tol=0.0)  # fixed iteration count
+    sol_d = solve_sdp(dense, opts)
+    sol_f = solve_sdp(fac, opts)
+    assert sol_d.iterations == sol_f.iterations
+    np.testing.assert_allclose(sol_f.Y, sol_d.Y, atol=1e-9)
+    assert np.isclose(sol_f.t, sol_d.t, atol=1e-9)
+    assert sol_d.stats["representation"] == "dense"
+    assert sol_f.stats["representation"] == "factored"
+
+
+def test_seeded_rounding_same_assignment(small_pair):
+    """Identical assignments from seeded rounding (acceptance criterion)."""
+    tg, cg, _, _ = small_pair
+    kw = dict(
+        method="sdp",
+        seed=3,
+        num_samples=500,
+        sdp_options=SDPOptions(max_iters=800),
+        rounding_backend="numpy",
+    )
+    s_d = schedule(tg, cg, representation="dense", **kw)
+    s_f = schedule(tg, cg, representation="factored", **kw)
+    assert s_d.info["representation"] == "dense"
+    assert s_f.info["representation"] == "factored"
+    np.testing.assert_array_equal(s_d.assignment, s_f.assignment)
+    assert np.isclose(s_d.bottleneck, s_f.bottleneck)
+
+
+def test_auto_representation_switch():
+    rng = np.random.default_rng(5)
+    tg_small = random_task_graph(rng, 8, degree_low=1, degree_high=2)
+    cg_small = random_compute_graph(rng, 3)
+    assert _pick_representation(tg_small, cg_small, "auto") == "dense"
+    tg_big = random_task_graph(rng, 128, degree_low=2, degree_high=4)
+    cg_big = random_compute_graph(rng, 16)
+    assert dense_bytes_estimate(tg_big, cg_big) > 100_000_000
+    assert _pick_representation(tg_big, cg_big, "auto") == "factored"
+    with pytest.raises(ValueError):
+        _pick_representation(tg_small, cg_small, "bogus")
+
+
+def test_memory_bound_no_dense_stack(monkeypatch):
+    """N_T=64, N_K=8 (n=512) schedules without any (|E|, n, n) array.
+
+    ``build_bqp`` (the only constructor of dense stacks) is poisoned, and
+    the solver's own accounting must stay far below the dense footprint.
+    """
+    rng = np.random.default_rng(7)
+    tg = random_task_graph(rng, 64, degree_low=2, degree_high=4)
+    cg = random_compute_graph(rng, 8)
+
+    def _poisoned(*a, **k):  # pragma: no cover - failure path
+        raise AssertionError("dense build_bqp called on factored-only path")
+
+    monkeypatch.setattr(bqp_mod, "build_bqp", _poisoned)
+
+    s = schedule(
+        tg,
+        cg,
+        method="sdp",
+        representation="factored",
+        num_samples=256,
+        sdp_options=SDPOptions(max_iters=40, check_every=10),
+        rounding_backend="numpy",
+        seed=0,
+    )
+    assert s.info["representation"] == "factored"
+    assert np.all((0 <= s.assignment) & (s.assignment < 8))
+    assert np.isfinite(s.bottleneck)
+    stats = s.info["solver_stats"]
+    dense_bytes = dense_bytes_estimate(tg, cg)
+    # factored peak must be far below the dense stacks it replaces
+    assert stats["peak_tensor_bytes"] < dense_bytes / 10
+    # n=512 pushes the constraint count past the Cholesky threshold
+    assert stats["constraint_rows"] > 512

@@ -80,3 +80,18 @@ def test_bytes_positive_and_collectives_empty_on_single_device():
     st = analyze_hlo(_compile_text(lambda a: a @ a, a))
     assert st.bytes > 128 * 128 * 4
     assert st.link_bytes == 0
+
+
+def test_tiled_layout_operands_parse():
+    """TPU-style tiled layouts nest parens (T(8,128)) inside the out shape
+    and operand list; the dot counter must still resolve the lhs shape."""
+    text = """HloModule m, is_scheduled=true
+
+ENTRY %main (a: f32[128,256], b: f32[256,64]) -> f32[128,64] {
+  %a = f32[128,256]{1,0:T(8,128)} parameter(0)
+  %b = f32[256,64]{1,0:T(8,128)} parameter(1)
+  ROOT %dot.1 = f32[128,64]{1,0:T(8,128)} dot(f32[128,256]{1,0:T(8,128)} %a, f32[256,64]{1,0:T(8,128)} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    st = analyze_hlo(text)
+    assert st.flops == 2 * 128 * 256 * 64

@@ -1,7 +1,12 @@
 """Hypothesis property tests on scheduling invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency: property tests need hypothesis"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import ComputeGraph, TaskGraph, bottleneck_time
 from repro.core.bqp import bottleneck_time_batch, build_bqp, task_times
