@@ -8,13 +8,16 @@ test:
 	$(PYTHON) -m pytest -x -q
 
 # Fast scheduler smoke benchmark: small-instance backends + a two-point
-# scaling sweep exercising both the dense and the factored representation.
+# scaling sweep exercising both the dense and the factored representation,
+# plus the jax-solver smoke (asserts the device SDP path didn't silently
+# fall back to numpy).
 smoke:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.small_instance_backends(quick=True); \
 	[b.emit('smoke_nt%d' % r['n_tasks'], r['solve_seconds'] * 1e6, \
 	        'rep=%s;peak_mb=%.1f' % (r['representation'], r['peak_tensor_bytes'] / 1e6)) \
 	 for r in (b._sweep_point(8, 8, max_iters=150, num_samples=256), \
-	           b._sweep_point(40, 8, max_iters=60, num_samples=256))]"
+	           b._sweep_point(40, 8, max_iters=60, num_samples=256))]; \
+	b.jax_solver_smoke()"
 
 ci: test smoke

@@ -38,7 +38,12 @@ def main():
     print(f"\nSDP reduces bottleneck by "
           f"{1 - sdp.bottleneck / heft.bottleneck:.0%} vs HEFT")
     info = sdp.info
-    print(f"SDP diagnostics: lower_bound≈{info['lower_bound']:.3f} "
+    if info["bound_certified"]:
+        bound = f"lower_bound≈{info['lower_bound']:.3f}"
+    else:
+        # an unconverged iterate's Eq. 24 value is NOT a bound
+        bound = f"lower_bound uncertified ({info['lower_bound_uncertified']:.3f})"
+    print(f"SDP diagnostics: {bound} "
           f"(residual {info['sdp_residual']:.1e}), "
           f"E[t]={info['expected_bottleneck']:.3f}, "
           f"upper_bound={info['upper_bound']:.3f}")

@@ -5,10 +5,17 @@
 ``check_rep`` -> ``check_vma`` along the way.  Call sites in this repo use
 the modern spelling (``from repro.compat import shard_map`` with
 ``check_vma=...``); this module translates for whichever JAX is installed.
+
+It also hosts the dependency gates the control-plane code uses to degrade
+gracefully when JAX is absent (``jax_available``) and a ``segment_sum``
+re-export: the device-resident SDP solver builds its CSR matvecs on it, and
+``jax.ops.segment_sum`` has moved namespaces before, so the import is
+funneled through here with a scatter-add fallback.
 """
 
 from __future__ import annotations
 
+import functools
 import inspect
 
 try:  # modern JAX
@@ -26,3 +33,36 @@ def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
     elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
         kwargs["check_vma"] = kwargs.pop("check_rep")
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+@functools.lru_cache(maxsize=1)
+def jax_available() -> bool:
+    """True when JAX imports cleanly.
+
+    Control-plane code (the SDP solver backends, the fused rounding path)
+    gates its device paths on this instead of importing eagerly, so the
+    numpy float64 reference paths keep working in a JAX-less environment.
+    """
+    try:
+        import jax  # noqa: F401
+    except Exception:
+        return False
+    return True
+
+
+def segment_sum(data, segment_ids, num_segments):
+    """``jax.ops.segment_sum`` for whichever JAX is installed.
+
+    Falls back to an explicit scatter-add when ``jax.ops`` no longer ships
+    the helper (it has migrated namespaces before); both spellings lower to
+    the same scatter-add HLO.
+    """
+    import jax
+
+    seg = getattr(getattr(jax, "ops", None), "segment_sum", None)
+    if seg is not None:
+        return seg(data, segment_ids, num_segments=num_segments)
+    import jax.numpy as jnp
+
+    out = jnp.zeros((num_segments,) + data.shape[1:], dtype=data.dtype)
+    return out.at[segment_ids].add(data)

@@ -8,7 +8,10 @@ Implements:
       * ``jax``   — the whole pipeline (sampling, sign folding, repair,
         batched bottleneck evaluation, arg-best selection) fused into ONE
         jitted call, so tens of thousands of samples never leave device
-        (§Perf item; DESIGN.md §5).
+        (§Perf item; DESIGN.md §5).  When the SDP solve also ran on device
+        (``SDPSolution.Y_device``), pass it via ``Y_device=`` and the
+        covariance square root is taken on device as well — the Gram matrix
+        never round-trips to host between solve and rounding.
   - ``naive_rounding``: per-task argmax of the relaxed solution (the paper's
     "SDP with naive rounding" baseline).
   - ``expected_bottleneck``: Eq. (22)-(23) arcsin formula.
@@ -99,6 +102,7 @@ def randomized_rounding(
     rng: np.random.Generator | None = None,
     strict: bool = False,
     backend: str = "numpy",
+    Y_device: object | None = None,
 ) -> RoundingResult:
     rng = rng or np.random.default_rng(0)
 
@@ -112,6 +116,7 @@ def randomized_rounding(
             num_samples,
             rng,
             strict,
+            Y_device=Y_device,
         )
     else:
         signs, z = _sample_signs(Y, num_samples, rng)
@@ -273,6 +278,27 @@ def _fused_rounding_fn(
     return rounding
 
 
+_DEVICE_ROOT_FN = None
+
+
+def _device_covariance_root(Y_device):
+    """Eigen square root of a device-resident Y — the solve→rounding hand-off
+    path: the covariance stays on device end to end."""
+    global _DEVICE_ROOT_FN
+    if _DEVICE_ROOT_FN is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def _root(Y):
+            Y = 0.5 * (Y + Y.T)
+            w, V = jnp.linalg.eigh(Y)
+            return V * jnp.sqrt(jnp.clip(w, 0.0, None))
+
+        _DEVICE_ROOT_FN = _root
+    return _DEVICE_ROOT_FN(Y_device)
+
+
 def _rounding_fused_jax(
     task_graph: TaskGraph,
     compute_graph: ComputeGraph,
@@ -282,11 +308,15 @@ def _rounding_fused_jax(
     num_samples: int,
     rng: np.random.Generator,
     strict: bool,
+    Y_device=None,
 ) -> tuple[np.ndarray, float, int]:
     fn = _fused_rounding_fn(
         task_graph, compute_graph, n_tasks, n_machines, strict
     )
-    root = _covariance_root(Y).astype(np.float32)
+    if Y_device is not None:
+        root = _device_covariance_root(Y_device)
+    else:
+        root = _covariance_root(Y).astype(np.float32)
     g = rng.standard_normal((num_samples, Y.shape[0])).astype(np.float32)
     assignment, t_best, n_feasible = fn(root, g)
     return (

@@ -17,6 +17,21 @@ SDP methods pick the problem representation automatically: the dense
 once the dense (|E|, n, n) stacks would cross ``_DENSE_BYTES_LIMIT``
 (DESIGN.md §2).  Override with ``representation=`` and observe the choice
 in ``Schedule.info["representation"]``.
+
+The SDP solver backend is selected the same way the rounding backend is:
+``solver_backend=`` ("auto" | "numpy" | "jax", DESIGN.md §4) — "auto"
+moves the Douglas-Rachford hot loop onto the JAX device once the Gram
+side crosses ``SDPOptions.jax_above``.  ``warm_start=True`` keeps a
+module-level cache of solver states keyed by the (task-graph,
+compute-graph) *structural fingerprint*, so repeated ``schedule()`` calls
+after incremental topology changes (speed EMA updates, elastic
+re-scheduling) resume from the previous (Y, t, s) iterate instead of the
+identity.
+
+``Schedule.info`` reports the Eq. 24 value as ``lower_bound`` only when
+the solve converged (``bound_certified``); an unconverged iterate's value
+appears as ``lower_bound_uncertified`` instead — it is *not* a bound and
+has historically exceeded the achieved bottleneck at large n.
 """
 
 from __future__ import annotations
@@ -51,6 +66,22 @@ REPRESENTATIONS = ("auto", "dense", "factored")
 # Auto mode switches to the matrix-free representation once the dense
 # Q/Q̃ stacks would exceed this many bytes (~100 MB ≈ N_T·N_K past ~300).
 _DENSE_BYTES_LIMIT = 100_000_000
+
+# Warm-start cache: structural fingerprint -> last SDPSolution.state.  The
+# fingerprint deliberately excludes weights (p, e, C): an incremental
+# topology change keeps the structure, so the previous iterate is a valid —
+# and very close — starting point.  Dimension changes (machine failure)
+# change the fingerprint and cold-start naturally.
+_WARM_STARTS: dict[tuple, dict] = {}
+_WARM_STARTS_MAX = 8
+
+
+def _warm_fingerprint(task_graph: TaskGraph, compute_graph: ComputeGraph) -> tuple:
+    return (
+        task_graph.num_tasks,
+        compute_graph.num_machines,
+        tuple(task_graph.edges),
+    )
 
 
 def _pick_representation(
@@ -87,7 +118,9 @@ def schedule(
     num_samples: int = 4000,
     sdp_options: SDPOptions | None = None,
     rounding_backend: str = "jax",
+    solver_backend: str | None = None,
     representation: str = "auto",
+    warm_start: bool = False,
     _sdp_cache: dict | None = None,
 ) -> Schedule:
     """Compute a task->machine assignment minimizing bottleneck time."""
@@ -105,7 +138,19 @@ def schedule(
             else:
                 cache["bqp"] = bqp_mod.build_bqp(task_graph, compute_graph)
             cache["representation"] = rep
-            cache["sol"] = solve_sdp(cache["bqp"], sdp_options)
+            opts = sdp_options or SDPOptions()
+            if solver_backend is not None:
+                opts = dataclasses.replace(opts, backend=solver_backend)
+            fp = _warm_fingerprint(task_graph, compute_graph)
+            ws = _WARM_STARTS.get(fp) if warm_start else None
+            cache["sol"] = solve_sdp(cache["bqp"], opts, warm_start=ws)
+            # never cache a diverged iterate — a poisoned state would make
+            # every later warm re-solve NaN where a cold start recovers
+            state = cache["sol"].state
+            if warm_start and np.all(np.isfinite(state.get("w", np.inf))):
+                if fp not in _WARM_STARTS and len(_WARM_STARTS) >= _WARM_STARTS_MAX:
+                    _WARM_STARTS.pop(next(iter(_WARM_STARTS)))
+                _WARM_STARTS[fp] = state
         data, sol = cache["bqp"], cache["sol"]
         info.update(
             representation=cache["representation"],
@@ -113,9 +158,16 @@ def schedule(
             sdp_residual=sol.residual,
             sdp_converged=sol.converged,
             sdp_seconds=sol.solve_seconds,
-            lower_bound=sol.lower_bound,
+            bound_certified=sol.bound_certified,
+            solver_backend=sol.stats.get("solver_backend"),
+            warm_started=sol.stats.get("warm_started", False),
             solver_stats=sol.stats,
         )
+        # Eq. 24 is a certificate only at the SDP optimum: report the value
+        # of an unconverged iterate under a name that can't be mistaken for
+        # a bound (it has exceeded the achieved bottleneck at large n).
+        bound_key = "lower_bound" if sol.bound_certified else "lower_bound_uncertified"
+        info[bound_key] = sol.lower_bound
         if method == "sdp_naive":
             assignment = naive_rounding(data, sol.Y)
         else:
@@ -127,13 +179,14 @@ def schedule(
                 num_samples=num_samples,
                 rng=rng,
                 backend=rounding_backend,
+                Y_device=sol.Y_device,
             )
             info.update(
                 num_feasible=res.num_feasible,
                 expected_bottleneck=res.expected_bottleneck,
                 upper_bound=res.upper_bound,
-                lower_bound=res.lower_bound,
             )
+            info[bound_key] = res.lower_bound
             assignment = res.assignment
             if method == "sdp_ls":
                 from repro.sched.baselines import local_search_refine

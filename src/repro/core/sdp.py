@@ -24,9 +24,32 @@ Two constraint-operator representations (DESIGN.md §4):
     ever exists.  For large row counts the Gram solve uses a Cholesky
     factorization instead of an explicit inverse.
 
-Everything runs float64 on host (numpy / LAPACK): the scheduler is
-control-plane code that runs once per topology change, off the training
-critical path (see DESIGN.md §4).
+Two solver backends, selected by ``SDPOptions.backend`` (parallel to the
+rounding backends in ``rounding.py``):
+
+  - ``numpy`` — the float64 host reference: one eigendecomposition of Y per
+    iteration, scipy/LAPACK affine projection.  Ground truth for tests.
+  - ``jax``   — the device-resident hot loop: the whole DR iteration
+    (CSR constraint matvecs via ``segment_sum``, Cholesky triangular solves
+    for the affine projection, cone projection) runs inside ONE jitted
+    ``lax.while_loop``; residuals are evaluated every ``check_every``
+    iterations *on device*, so the loop never round-trips to host.  The
+    O(n³) full eigendecomposition is replaced by a *partial-spectrum*
+    projection: near convergence Y has only a handful of negative
+    eigenvalues, so the solver tracks their subspace across iterations with
+    a warm-started shifted subspace iteration (O(n²·k) per step) and clips
+    only the negative Ritz pairs, falling back to a full ``eigh`` whenever
+    the tracked subspace saturates (``num_neg == k``), its Ritz residual
+    stalls above ``eig_tol``, or the periodic ``eig_refresh`` resync fires.
+  - ``auto``  — ``jax`` once n+1 exceeds ``jax_above`` (where the device
+    loop wins even on CPU backends) and JAX is importable, else ``numpy``.
+
+``solve_sdp`` additionally accepts a ``warm_start`` payload — the
+``SDPSolution.state`` of a previous solve.  Re-solves after incremental
+topology changes (elastic re-scheduling, gossip-FL speed updates) resume
+from the previous (Y, t, s) iterate instead of the identity and converge in
+far fewer iterations; ``scheduler.schedule(..., warm_start=True)`` keeps a
+fingerprint-keyed cache of these payloads.
 
 The solver is generic enough to be exercised on MAXCUT-style test SDPs.
 """
@@ -34,10 +57,13 @@ The solver is generic enough to be exercised on MAXCUT-style test SDPs.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
+from typing import Any
 
 import numpy as np
 
+from repro import compat
 from repro.core.bqp import BQPData, FactoredBQP
 
 
@@ -59,16 +85,48 @@ class SDPOptions:
     # precomputed inverse to a Cholesky factorization (better conditioned,
     # and the triangular solves cost the same O(m²) as the inverse matvec).
     cholesky_above: int = 768
+    # -- backend selection --------------------------------------------------
+    # "numpy" (float64 host reference), "jax" (jitted device loop, float32),
+    # or "auto": jax once n+1 > jax_above and JAX imports.
+    backend: str = "auto"
+    jax_above: int = 512
+    # -- jax backend: partial-spectrum cone projection ----------------------
+    # Size of the tracked negative-eigenspace basis (clamped to n+1); the
+    # per-iteration cone projection costs O(n²·eig_k) instead of O(n³).
+    eig_k: int = 16
+    # Shifted subspace-iteration sweeps refining the tracked basis per DR
+    # iteration (warm-started from the previous iteration's basis).
+    eig_iters: int = 4
+    # Ritz-residual threshold (relative to ‖Y‖_F) above which the tracked
+    # subspace is declared stalled and the step falls back to a full eigh.
+    eig_tol: float = 1e-3
+    # Force a full-eigh resync every this many iterations (0 = only at the
+    # first iteration); insurance against negative directions emerging
+    # outside the tracked subspace.
+    eig_refresh: int = 100
 
 
 @dataclasses.dataclass
 class SDPSolution:
     """Result of the SDP relaxation.
 
-    Y: (n+2, n+1+...)  -- actually (n+1, n+1) PSD matrix with unit diagonal
-       (the Gram matrix of the homogenized ±1 variables, last index = u).
+    Y: (n+1, n+1) PSD matrix with unit diagonal — the Gram matrix of the
+       homogenized ±1 variables (last row/column is the homogenization
+       variable u).
     t: epigraph value in *normalized* units; multiply by ``q_scale`` for the
        paper's units.  ``lower_bound`` is already rescaled.
+    bound_certified: ``lower_bound`` is the Eq. 24 certificate only when the
+       solver converged; when False the recorded value is the *unconverged
+       iterate's* objective and must not be reported as a bound (it can
+       exceed the achieved bottleneck — see BENCH_scheduler_scaling.json
+       history at n=1664).
+    Y_device: jax backend only — the normalized Y resident on device
+       (float32), handed to the fused rounding backend so the covariance
+       never leaves device between solve and rounding.
+    state: warm-start payload (raw DR iterate ``w`` over (vec(Y), t, s) and,
+       for the jax backend, the tracked eigenbasis ``V``); pass it back via
+       ``solve_sdp(..., warm_start=...)`` to resume after an incremental
+       topology change.
     """
 
     Y: np.ndarray
@@ -78,9 +136,13 @@ class SDPSolution:
     residual: float
     converged: bool
     solve_seconds: float
+    bound_certified: bool = False
     # representation / memory diagnostics (constraint rows m, CSR nnz,
-    # bytes of the largest tensor the solver materialized)
+    # bytes of the largest tensor the solver materialized, solver backend,
+    # full-vs-partial eigendecomposition counts)
     stats: dict = dataclasses.field(default_factory=dict)
+    Y_device: Any = None
+    state: dict = dataclasses.field(default_factory=dict, repr=False)
 
 
 def _flatten_sym(mat: np.ndarray) -> np.ndarray:
@@ -123,6 +185,11 @@ class _AffineProjector:
     Accepts either the dense ``BQPData`` oracle (rows taken from the
     materialized Q̃ stack) or the matrix-free ``FactoredBQP`` (CSR rows and
     the Gram matrix assembled straight from the Kronecker factors).
+
+    With ``keep_gram=True`` the host-side solve machinery (inverse /
+    cho_factor) is skipped and the regularized Gram matrix is retained so
+    the jax backend can export a clean lower Cholesky factor plus the raw
+    CSR triplets (``export_csr`` / ``cholesky_lower``) to device.
     """
 
     def __init__(
@@ -130,6 +197,7 @@ class _AffineProjector:
         bqp: BQPData | FactoredBQP,
         sparse: bool = True,
         cholesky_above: int = 768,
+        keep_gram: bool = False,
     ):
         n1 = bqp.n + 1                      # side of Y
         self.n1 = n1
@@ -146,6 +214,11 @@ class _AffineProjector:
 
         G = self._gram()
         G[np.diag_indices_from(G)] += 1e-10
+        self.stats["gram_bytes"] = int(G.nbytes)
+        self._G_keep = G if keep_gram else None
+        if keep_gram:
+            self._chol = False
+            return
         self._chol = self.m > cholesky_above
         if self._chol:
             # Cholesky path for large m: two O(m²) triangular solves per
@@ -160,7 +233,6 @@ class _AffineProjector:
             # hundred) — a dense matvec per iteration instead of two LU
             # solves (§Perf: the solves were 40% of iteration time).
             self._Ginv = np.linalg.inv(G)
-        self.stats["gram_bytes"] = int(G.nbytes)
 
     # -- construction -------------------------------------------------------
     def _init_dense(self, bqp: BQPData, sparse: bool):
@@ -266,6 +338,28 @@ class _AffineProjector:
         del self._G
         return G
 
+    # -- device export ------------------------------------------------------
+    def export_csr(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """(rows, cols, vals, b) COO triplets of L for the device backend."""
+        if self.stats.get("representation") == "factored":
+            coo = self.L.tocoo()
+            return coo.row, coo.col, coo.data, self.b
+        if isinstance(self.L, _CSR):
+            return self.L.row_of, self.L.indices, self.L.values, self.b
+        rows, cols = np.nonzero(self.L)
+        return rows, cols, self.L[rows, cols], self.b
+
+    def cholesky_lower(self) -> np.ndarray:
+        """Lower Cholesky factor of the (regularized) Gram matrix.
+
+        Only available under ``keep_gram=True`` — computed once on host in
+        float64, then shipped to device for the per-iteration triangular
+        solves.
+        """
+        if self._G_keep is None:
+            raise RuntimeError("construct _AffineProjector with keep_gram=True")
+        return np.linalg.cholesky(self._G_keep)
+
     # -- application --------------------------------------------------------
     def _solve_gram(self, resid: np.ndarray) -> np.ndarray:
         if self._chol:
@@ -300,24 +394,45 @@ def _project_cone(v: np.ndarray, n1: int, n_edges: int) -> np.ndarray:
     return out
 
 
-def solve_sdp(
-    bqp: BQPData | FactoredBQP, options: SDPOptions | None = None
-) -> SDPSolution:
-    """Douglas-Rachford splitting for the relaxed problem (20)."""
-    opts = options or SDPOptions()
-    t0 = time.perf_counter()
-    proj = _AffineProjector(
-        bqp, sparse=opts.sparse, cholesky_above=opts.cholesky_above
-    )
+def _identity_start(n1: int, dim: int) -> np.ndarray:
+    """Cold-start DR state: identity Gram matrix (feasible for diag & PSD)."""
+    w = np.zeros(dim)
+    w[: n1 * n1] = np.eye(n1).reshape(-1)
+    return w
+
+
+def _warm_w(warm_start: dict | None, dim: int) -> np.ndarray | None:
+    """Validated warm-start iterate; None when absent, shape-mismatched, or
+    non-finite (a diverged solve must not poison subsequent re-solves)."""
+    if not warm_start:
+        return None
+    w = warm_start.get("w")
+    if w is None:
+        return None
+    w = np.asarray(w, dtype=np.float64)
+    if w.shape != (dim,) or not np.all(np.isfinite(w)):
+        return None
+    return w
+
+
+# ---------------------------------------------------------------------------
+# numpy backend (float64 host reference)
+# ---------------------------------------------------------------------------
+
+
+def _solve_numpy(
+    bqp, opts: SDPOptions, proj: _AffineProjector, warm_start: dict | None
+):
     n1, n_edges, dim = proj.n1, proj.n_edges, proj.dim
 
     c = np.zeros(dim)
     c[n1 * n1] = 1.0                     # objective: min t
     rho_c = opts.rho * c
 
-    # Start from the identity Gram matrix (feasible for diag & PSD).
-    w = np.zeros(dim)
-    w[: n1 * n1] = np.eye(n1).reshape(-1)
+    w = _warm_w(warm_start, dim)
+    warm = w is not None
+    if w is None:
+        w = _identity_start(n1, dim)
 
     v_cone = w
     residual = np.inf
@@ -335,8 +450,386 @@ def solve_sdp(
             if residual < opts.tol:
                 break
 
-    # Extract Y from the cone side (guaranteed PSD), renormalize diagonal to 1
-    # so it is a valid Gaussian covariance for rounding.
+    stats = {"solver_backend": "numpy", "warm_started": warm}
+    state = {"w": w.copy()}
+    return v_cone, it, residual, stats, state, None
+
+
+# ---------------------------------------------------------------------------
+# jax backend (jitted device-resident loop, partial-spectrum projection)
+# ---------------------------------------------------------------------------
+#
+# One jit per (shape, static-option) signature, cached below.  The whole
+# Douglas-Rachford iteration lives inside a ``lax.while_loop`` whose body
+# runs ``check_every`` steps through a ``lax.fori_loop`` and then evaluates
+# the residual — so a full solve is a single device computation with no host
+# round-trips.  Scalars (rho, λ, tolerances, max_iters) are traced array
+# arguments, so retuning them does not recompile.
+#
+# Two constraint-operator kinds mirror the host representations:
+#
+#   - "csr":      generic L·v / Lᵀ·y via ``segment_sum`` over the COO
+#                 triplets — works for any projector (dense oracle, duck-
+#                 typed test SDPs).  XLA lowers the transpose product to a
+#                 serial scatter-add, so this is the small-instance path.
+#   - "factored": L·v and Lᵀ·y assembled *structurally* from the Kronecker
+#                 factors (p, d, C, src, dst) — the device analogue of
+#                 ``FactoredBQP.inner``/``constraint_row``.  Everything is
+#                 dense einsum/outer-product passes over the (K, T, K, T)
+#                 grid plus O(|E|)-sized ``segment_sum`` aggregations, so no
+#                 million-element scatter ever runs.  This is what makes the
+#                 n ≥ 1024 hot loop fast on CPU devices too.
+
+
+@functools.lru_cache(maxsize=32)
+def _dr_jax_fn(
+    n1: int,
+    check_every: int,
+    k: int,
+    eig_iters: int,
+    eig_refresh: int,
+    kind: str,
+    n_tasks: int,
+    n_machines: int,
+):
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.scipy.linalg import solve_triangular
+
+    from repro.compat import segment_sum
+
+    idx_t = n1 * n1
+
+    def _csr_ops(operands):
+        Lval, Lrow, Lcol, b = operands
+        m = b.shape[0]
+
+        def matvec(v):
+            return segment_sum(Lval * v[Lcol], Lrow, num_segments=m)
+
+        def rmatvec(y, dim):
+            return segment_sum(Lval * y[Lrow], Lcol, num_segments=dim)
+
+        return matvec, rmatvec, b
+
+    def _factored_ops(operands):
+        # Device analogue of the host CSR built by ``_init_factored``: row
+        # r of L dotted with v (matvec) and Σ_r y_r · row_r (rmatvec), both
+        # in closed form from the Kronecker factors.  Row layout:
+        # [diag (n1) | A (n_tasks) | Q̃/q_scale with -4t + s (|E|)].
+        p, d, C, src, dst, qs = operands
+        T, K = n_tasks, n_machines
+        n = T * K
+        n_e = src.shape[0]
+        C1 = C @ jnp.ones(K, C.dtype)
+        Ct1 = C.T @ jnp.ones(K, C.dtype)
+        P = jnp.sum(p)
+        corner = jnp.sum(d) * P + jnp.sum(C)
+        dp = jnp.outer(d, p)                       # (K, T) grid of d⊗p
+        eyeK = jnp.eye(K, dtype=C.dtype)
+        b = jnp.concatenate(
+            [jnp.ones(n1, C.dtype), jnp.zeros(T + n_e, C.dtype)]
+        )
+
+        def matvec(v):
+            F = v[:idx_t].reshape(n1, n1)
+            Fs = 0.5 * (F + F.T)
+            r_diag = jnp.diagonal(F)
+            f_row = F[:n, n].reshape(K, T)
+            f_col = F[n, :n].reshape(K, T)
+            r_a = 0.5 * (f_row.sum(0) + f_col.sum(0)) + (K - 2.0) * F[n, n]
+            # <Q̃_e, sym(F)> — same contraction as FactoredBQP.inner
+            Fxx = Fs[:n, :n].reshape(K, T, K, T)
+            f = Fs[:n, n].reshape(K, T)
+            comp = jnp.einsum("k,t,ktks->s", d, p, Fxx)
+            blocks = Fxx.transpose(1, 3, 0, 2)[src, dst]       # (|E|, K, K)
+            comm = jnp.einsum("ekl,kl->e", blocks, C)
+            base = jnp.einsum("k,t,kt->", d, p, f)
+            u_i = (C1 + P * d) @ f
+            u_j = Ct1 @ f
+            q1f = 0.5 * (base + u_i[src] + u_j[dst])
+            inner = comp[src] + comm + 2.0 * q1f + corner * Fs[n, n]
+            r_q = inner / qs - 4.0 * v[idx_t] + v[idx_t + 1 :]
+            return jnp.concatenate([r_diag, r_a, r_q])
+
+        def rmatvec(y, dim):
+            y_d = y[:n1]
+            y_a = y[n1 : n1 + T]
+            y_raw = y[n1 + T :]
+            y_q = y_raw / qs
+            S = jnp.sum(y_q)
+            c_i = segment_sum(y_q, src, num_segments=T)
+            c_j = segment_sum(y_q, dst, num_segments=T)
+            W2 = segment_sum(y_q, src * T + dst, num_segments=T * T)
+            W2 = W2.reshape(T, T)
+            # X-X block: Σ_e y_e · sym(D ⊗ (p δ_iᵀ) + C ⊗ (δ_i δ_jᵀ))
+            M = 0.5 * (jnp.outer(p, c_i) + jnp.outer(c_i, p))
+            Z = jnp.einsum("kl,k,ts->ktls", eyeK, d, M)
+            T1 = jnp.einsum("kl,ts->ktls", C, W2)
+            Z = Z + 0.5 * (T1 + T1.transpose(2, 3, 0, 1))
+            # borders: Σ_e y_e q1_e + the A-row borders (0.5 per machine)
+            g = 0.5 * (
+                S * dp
+                + jnp.outer(C1 + P * d, c_i)
+                + jnp.outer(Ct1, c_j)
+                + jnp.broadcast_to(y_a[None, :], (K, T))
+            )
+            g = g.reshape(-1)
+            corner_y = S * corner + (K - 2.0) * jnp.sum(y_a)
+            Y1 = jnp.zeros((n1, n1), y.dtype)
+            Y1 = Y1.at[:n, :n].set(Z.reshape(n, n))
+            Y1 = Y1.at[:n, n].add(g)
+            Y1 = Y1.at[n, :n].add(g)
+            Y1 = Y1.at[n, n].add(corner_y)
+            di = jnp.arange(n1)
+            Y1 = Y1.at[di, di].add(y_d)
+            return jnp.concatenate(
+                [Y1.reshape(-1), -4.0 * jnp.sum(y_raw)[None], y_raw]
+            )
+
+        return matvec, rmatvec, b
+
+    def run(w0, V0, operands, CL, rho, lam, tol, eig_tol, max_iters):
+        dim = w0.shape[0]
+        if kind == "factored":
+            matvec, rmatvec, b = _factored_ops(operands)
+        else:
+            matvec, rmatvec, b = _csr_ops(operands)
+
+        def affine(v):
+            resid = matvec(v) - b
+            z = solve_triangular(CL, resid, lower=True)
+            y = solve_triangular(CL.T, z, lower=False)
+            return v - rmatvec(y, dim)
+
+        def cone_full(Y):
+            ew, EV = jnp.linalg.eigh(Y)
+            Yp = (EV * jnp.maximum(ew, 0.0)) @ EV.T
+            return Yp, EV[:, :k]          # basis <- k most-negative eigvecs
+
+        def cone_partial(Y, V):
+            # Shifted subspace iteration on (σI - Y): its top-k invariant
+            # subspace is Y's bottom-k.  σ = ‖Y‖_F ≥ λ_max keeps the shift
+            # positive; the basis is warm (last iteration's), so a few
+            # sweeps suffice near convergence.
+            sigma = jnp.linalg.norm(Y)
+
+            def sweep(_, Vc):
+                Q, _ = jnp.linalg.qr(sigma * Vc - Y @ Vc)
+                return Q
+
+            V = lax.fori_loop(0, eig_iters, sweep, V)
+            YV = Y @ V
+            theta, U = jnp.linalg.eigh(V.T @ YV)     # Ritz values, ascending
+            W = V @ U
+            neg = theta < 0.0
+            # Ritz residual of the negative pairs: ‖Y w - θ w‖ certifies the
+            # clip; saturation (num_neg == k) means negatives may extend
+            # beyond the tracked subspace — both force the full-eigh path.
+            R = YV @ U - W * theta
+            res = jnp.sqrt(jnp.sum(jnp.where(neg, jnp.sum(R * R, axis=0), 0.0)))
+            ok = (jnp.sum(neg) < k) & (res <= eig_tol * jnp.maximum(sigma, 1.0))
+            Yp = Y - (W * jnp.where(neg, theta, 0.0)) @ W.T
+            return ok, Yp, W
+
+        def chunk(state):
+            w, V, vc, it, res, nf, npart = state
+            nsteps = jnp.minimum(check_every, max_iters - it)
+
+            def body(j, carry):
+                w, V, vc, nf, npart, _ = carry
+                git = it + j
+                if eig_refresh > 0:
+                    force = git % eig_refresh == 0
+                else:
+                    force = git == 0
+                v_aff = affine(w.at[idx_t].add(-rho))
+                y = 2.0 * v_aff - w
+                Y = y[:idx_t].reshape(n1, n1)
+                Y = 0.5 * (Y + Y.T)
+                ok, Yp_p, V_p = cone_partial(Y, V)
+                use_full = force | ~ok
+                Yp, Vn = lax.cond(
+                    use_full,
+                    lambda _: cone_full(Y),
+                    lambda _: (Yp_p, V_p),
+                    operand=None,
+                )
+                v_cone = jnp.concatenate(
+                    [
+                        Yp.reshape(-1),
+                        y[idx_t : idx_t + 1],
+                        jnp.maximum(y[idx_t + 1 :], 0.0),
+                    ]
+                )
+                step = v_cone - v_aff
+                w = w + lam * step
+                nf = nf + use_full.astype(jnp.int32)
+                npart = npart + (~use_full).astype(jnp.int32)
+                return w, Vn, v_cone, nf, npart, jnp.sum(step * step)
+
+            w, V, vc, nf, npart, sn = lax.fori_loop(
+                0, nsteps, body, (w, V, vc, nf, npart, jnp.zeros((), w.dtype))
+            )
+            it = it + nsteps
+            res = jnp.sqrt(sn / dim)
+            return w, V, vc, it, res, nf, npart
+
+        def cond(state):
+            it, res = state[3], state[4]
+            return (it < max_iters) & (res >= tol)
+
+        zero = jnp.zeros((), jnp.int32)
+        state = (w0, V0, w0, zero, jnp.asarray(jnp.inf, w0.dtype), zero, zero)
+        return lax.while_loop(cond, chunk, state)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=8)
+def _normalize_y_fn(n1: int):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def normalize(vc):
+        Y = vc[: n1 * n1].reshape(n1, n1)
+        Y = 0.5 * (Y + Y.T)
+        d = jnp.sqrt(jnp.clip(jnp.diag(Y), 1e-12, None))
+        Y = Y / jnp.outer(d, d)
+        eye = jnp.eye(n1, dtype=bool)
+        return jnp.where(eye, 1.0, Y)
+
+    return normalize
+
+
+def _solve_jax(bqp, opts: SDPOptions, proj: _AffineProjector, warm_start: dict | None):
+    import jax.numpy as jnp
+
+    n1, dim = proj.n1, proj.dim
+    CL = proj.cholesky_lower()
+    k = min(opts.eig_k, n1)
+    dtype = jnp.float32
+
+    if isinstance(bqp, FactoredBQP):
+        kind, n_t, n_k = "factored", bqp.n_tasks, bqp.n_machines
+        operands = (
+            jnp.asarray(bqp.p, dtype),
+            jnp.asarray(bqp.d, dtype),
+            jnp.asarray(bqp.C, dtype),
+            jnp.asarray(bqp.src, jnp.int32),
+            jnp.asarray(bqp.dst, jnp.int32),
+            jnp.asarray(bqp.q_scale, dtype),
+        )
+    else:
+        kind, n_t, n_k = "csr", 0, 0
+        rows, cols, vals, b = proj.export_csr()
+        operands = (
+            jnp.asarray(vals, dtype),
+            jnp.asarray(rows, jnp.int32),
+            jnp.asarray(cols, jnp.int32),
+            jnp.asarray(b, dtype),
+        )
+
+    w_np = _warm_w(warm_start, dim)
+    warm = w_np is not None
+    if w_np is None:
+        w_np = _identity_start(n1, dim)
+    V_np = warm_start.get("V") if warm_start else None
+    if V_np is None or np.asarray(V_np).shape != (n1, k):
+        V_np = np.eye(n1, k)   # placeholder; iteration 0 full-eigh reseeds it
+
+    run = _dr_jax_fn(
+        n1, opts.check_every, k, opts.eig_iters, opts.eig_refresh, kind, n_t, n_k
+    )
+    w, V, v_cone, it, residual, n_full, n_partial = run(
+        jnp.asarray(w_np, dtype),
+        jnp.asarray(V_np, dtype),
+        operands,
+        jnp.asarray(CL, dtype),
+        jnp.asarray(opts.rho, dtype),
+        jnp.asarray(opts.over_relax, dtype),
+        jnp.asarray(opts.tol, dtype),
+        jnp.asarray(opts.eig_tol, dtype),
+        jnp.asarray(opts.max_iters, jnp.int32),
+    )
+    Y_device = _normalize_y_fn(n1)(v_cone)
+
+    stats = {
+        "solver_backend": "jax",
+        "solver_dtype": "float32",
+        "constraint_kind": kind,
+        "warm_started": warm,
+        "eig_full": int(n_full),
+        "eig_partial": int(n_partial),
+        "eig_k": k,
+    }
+    state = {"w": np.asarray(w, np.float64), "V": np.asarray(V, np.float64)}
+    v_cone_host = np.asarray(v_cone, np.float64)
+    return v_cone_host, int(it), float(residual), stats, state, Y_device
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+
+def _resolve_backend(opts: SDPOptions, n1: int) -> str:
+    if opts.backend == "auto":
+        if n1 > opts.jax_above and compat.jax_available():
+            return "jax"
+        return "numpy"
+    if opts.backend not in ("numpy", "jax"):
+        raise ValueError(
+            f"unknown SDP backend {opts.backend!r}; "
+            "choose from ('auto', 'numpy', 'jax')"
+        )
+    return opts.backend
+
+
+def solve_sdp(
+    bqp: BQPData | FactoredBQP,
+    options: SDPOptions | None = None,
+    warm_start: dict | None = None,
+) -> SDPSolution:
+    """Douglas-Rachford splitting for the relaxed problem (20).
+
+    ``warm_start`` takes the ``state`` payload of a previous ``SDPSolution``
+    (same problem dimensions); mismatched payloads are silently ignored and
+    the solve cold-starts from the identity.
+    """
+    opts = options or SDPOptions()
+    t0 = time.perf_counter()
+    backend = _resolve_backend(opts, bqp.n + 1)
+    if backend == "jax" and not compat.jax_available():
+        # "auto" already degraded to numpy in _resolve_backend; an *explicit*
+        # jax request must fail loudly rather than silently run the host
+        # loop at a fraction of the speed.
+        raise ImportError(
+            "SDPOptions(backend='jax') requested but jax is not importable; "
+            "use backend='auto' (or 'numpy') for a host fallback"
+        )
+
+    proj = _AffineProjector(
+        bqp,
+        sparse=opts.sparse,
+        cholesky_above=opts.cholesky_above,
+        keep_gram=backend == "jax",
+    )
+    if backend == "jax":
+        v_cone, it, residual, bstats, state, Y_device = _solve_jax(
+            bqp, opts, proj, warm_start
+        )
+    else:
+        v_cone, it, residual, bstats, state, Y_device = _solve_numpy(
+            bqp, opts, proj, warm_start
+        )
+    n1 = proj.n1
+
+    # Extract Y from the cone side (guaranteed PSD up to the projection
+    # tolerance), renormalize diagonal to 1 so it is a valid Gaussian
+    # covariance for rounding.
     Y = v_cone[: n1 * n1].reshape(n1, n1)
     Y = 0.5 * (Y + Y.T)
     d = np.sqrt(np.clip(np.diag(Y), 1e-12, None))
@@ -346,8 +839,9 @@ def solve_sdp(
     t_val = float(v_cone[n1 * n1])
     # SDP bound on OPT (Eq. 24): at the optimum t* = max_e <Q̃_e, Y*>/4.
     # NOTE: a first-order iterate only *approximates* the SDP optimum, so
-    # this is a certified lower bound only once ``converged`` — callers
-    # (benchmarks) report it with the residual attached.
+    # this is a certified lower bound only once ``converged`` — the
+    # ``bound_certified`` flag records exactly that, and callers
+    # (Schedule.info, benchmarks) must not report uncertified values.
     if isinstance(bqp, FactoredBQP):
         t_from_y = float(np.max(bqp.inner(Y)) / bqp.q_scale / 4.0)
     else:
@@ -356,11 +850,13 @@ def solve_sdp(
     lower = max(t_val, 0.0) * bqp.q_scale
 
     stats = dict(proj.stats)
+    stats.update(bstats)
     # largest tensor the solve touched: the stacked DR variable dominates
     # for factored instances; the constraint-matrix build and the Q̃ stack
     # dominate dense ones.
+    itemsize = 4 if stats.get("solver_backend") == "jax" else 8
     peak = max(
-        3 * proj.dim * 8,
+        3 * proj.dim * itemsize,
         stats.get("gram_bytes", 0),
         stats.get("build_peak_bytes", 0),
     )
@@ -368,13 +864,17 @@ def solve_sdp(
         peak = max(peak, int(bqp.Q_tilde.nbytes + bqp.Q.nbytes))
     stats["peak_tensor_bytes"] = int(peak)
 
+    converged = residual < opts.tol
     return SDPSolution(
         Y=Y,
         t=max(t_val, t_from_y),
         lower_bound=lower,
         iterations=it,
         residual=residual,
-        converged=residual < opts.tol,
+        converged=converged,
+        bound_certified=converged,
         solve_seconds=time.perf_counter() - t0,
         stats=stats,
+        Y_device=Y_device,
+        state=state,
     )

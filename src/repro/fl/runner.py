@@ -63,8 +63,16 @@ def run_fl(
         seed=exp.seed,
     )
 
+    # One shared SDP solve across the sdp-family methods, and warm-start
+    # enabled so re-pilots on the same gossip topology (speed updates,
+    # repeated run_fl invocations) resume from the cached iterate.
+    sdp_cache: dict = {}
     schedules = {
-        m: schedule(tg, compute_graph, m, seed=exp.seed) for m in methods
+        m: schedule(
+            tg, compute_graph, m, seed=exp.seed,
+            warm_start=True, _sdp_cache=sdp_cache,
+        )
+        for m in methods
     }
     per_round_time = {
         m: round_time(tg, compute_graph, s.assignment) for m, s in schedules.items()

@@ -7,8 +7,11 @@ slow down, so we keep (G_task, G_compute) live:
   - ``observe_round(times)`` EMA-updates machine speeds from measured
     per-machine round times and re-solves when the predicted bottleneck
     improves by more than ``reschedule_threshold``;
-  - every re-solve can warm-start from the surviving assignment (the
-    rounding stage seeds its candidate pool with it).
+  - every SDP re-solve warm-starts from the previous solver iterate
+    (``schedule(..., warm_start=True)``): speed updates keep the problem
+    structure, so the cached (Y, t, s) state is a near-optimal starting
+    point and the solve converges in a fraction of the cold iterations.
+    A failure changes the dimensions (new fingerprint) and cold-starts.
 
 This is the scheduling part of fault tolerance; state recovery is
 ``repro.ckpt`` (checkpoint/restore around the failure).
@@ -33,11 +36,13 @@ class ElasticScheduler:
     seed: int = 0
     reschedule_threshold: float = 0.10   # fractional bottleneck improvement
     ema_alpha: float = 0.3
+    warm_start: bool = True              # reuse SDP iterates across re-solves
 
     def __post_init__(self):
         self.machine_ids = list(range(self.compute_graph.num_machines))
         self.current: Schedule = schedule(
-            self.task_graph, self.compute_graph, self.method, seed=self.seed
+            self.task_graph, self.compute_graph, self.method, seed=self.seed,
+            warm_start=self.warm_start,
         )
         self.history: list[dict] = [
             {"event": "init", "bottleneck": self.current.bottleneck}
@@ -53,7 +58,8 @@ class ElasticScheduler:
         )
         self.machine_ids.pop(local)
         self.current = schedule(
-            self.task_graph, self.compute_graph, self.method, seed=self.seed
+            self.task_graph, self.compute_graph, self.method, seed=self.seed,
+            warm_start=self.warm_start,
         )
         self.history.append(
             {
@@ -85,7 +91,8 @@ class ElasticScheduler:
             self.task_graph, self.compute_graph, self.current.assignment
         )
         candidate = schedule(
-            self.task_graph, self.compute_graph, self.method, seed=self.seed
+            self.task_graph, self.compute_graph, self.method, seed=self.seed,
+            warm_start=self.warm_start,
         )
         if candidate.bottleneck < current_t * (1 - self.reschedule_threshold):
             self.current = candidate

@@ -1,0 +1,219 @@
+"""Device-resident SDP backend: numpy/jax equivalence, warm starts, bounds.
+
+The jax backend runs the whole Douglas-Rachford loop in one jit (float32,
+partial-spectrum cone projection), so the contract with the float64 numpy
+reference is agreement to float32 tolerance on the final iterate — pinned
+here on a scheduling instance (both constraint-operator kinds) and on a
+MAXCUT-style SDP, plus the warm-start contract: a perturbed re-solve
+converges in strictly fewer iterations than a cold start.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ComputeGraph,
+    SDPOptions,
+    build_bqp,
+    build_factored_bqp,
+    random_compute_graph,
+    random_task_graph,
+    schedule,
+    solve_sdp,
+)
+from repro.core import scheduler as scheduler_mod
+
+jax = pytest.importorskip("jax")
+
+# float32 loop + float64 reference: agreement at steady state is a few
+# ulps of float32 accumulated over hundreds of n²-sized contractions.
+F32_ATOL = 1e-3
+
+
+@pytest.fixture(scope="module")
+def instance():
+    rng = np.random.default_rng(42)
+    tg = random_task_graph(rng, 6, degree_low=1, degree_high=3)
+    cg = random_compute_graph(rng, 3)
+    return tg, cg
+
+
+def test_jax_matches_numpy_dense(instance):
+    """Same instance, same options: csr-kind device loop == numpy."""
+    tg, cg = instance
+    data = build_bqp(tg, cg)
+    opts = dict(max_iters=800, tol=0.0, check_every=25)  # fixed iterations
+    sol_n = solve_sdp(data, SDPOptions(backend="numpy", **opts))
+    sol_j = solve_sdp(data, SDPOptions(backend="jax", **opts))
+    assert sol_n.stats["solver_backend"] == "numpy"
+    assert sol_j.stats["solver_backend"] == "jax"
+    assert sol_j.stats["constraint_kind"] == "csr"
+    assert sol_j.iterations == sol_n.iterations
+    np.testing.assert_allclose(sol_j.Y, sol_n.Y, atol=F32_ATOL)
+    assert np.isclose(sol_j.t, sol_n.t, atol=F32_ATOL)
+    assert np.isclose(sol_j.residual, sol_n.residual, atol=F32_ATOL)
+
+
+def test_jax_matches_numpy_factored(instance):
+    """The structured (Kronecker-factor) device operators == numpy."""
+    tg, cg = instance
+    data = build_factored_bqp(tg, cg)
+    opts = dict(max_iters=800, tol=0.0, check_every=25)
+    sol_n = solve_sdp(data, SDPOptions(backend="numpy", **opts))
+    sol_j = solve_sdp(data, SDPOptions(backend="jax", **opts))
+    assert sol_j.stats["constraint_kind"] == "factored"
+    np.testing.assert_allclose(sol_j.Y, sol_n.Y, atol=F32_ATOL)
+    assert np.isclose(sol_j.t, sol_n.t, atol=F32_ATOL)
+    # device-resident normalized Y matches the host extraction
+    assert sol_j.Y_device is not None
+    np.testing.assert_allclose(
+        np.asarray(sol_j.Y_device, dtype=np.float64), sol_j.Y, atol=F32_ATOL
+    )
+
+
+class _MaxCutSDP:
+    """Duck-typed generic SDP: min t s.t. <-L, Y> - 4t + s = 0, diag = 1.
+
+    At the optimum s = 0 and t = -max <L, Y>/4 — the (negated) MAXCUT SDP
+    value — exercising the solver away from the scheduling constraint
+    structure (no A rows, a single dense constraint edge).
+    """
+
+    def __init__(self, W: np.ndarray):
+        n = W.shape[0]
+        lap = np.diag(W.sum(axis=1)) - W
+        Qt = np.zeros((1, n + 1, n + 1))
+        Qt[0, :n, :n] = -lap
+        self.n = n
+        self.n_tasks = 0
+        self.n_machines = 0
+        self.edges = ((0, 0),)
+        self.Q_tilde = Qt
+        self.A = np.zeros((0, n + 1, n + 1))
+        self.q_scale = float(np.abs(Qt).max()) or 1.0
+
+
+def test_jax_matches_numpy_maxcut():
+    rng = np.random.default_rng(7)
+    W = rng.uniform(0.0, 1.0, size=(8, 8))
+    W = np.triu(W, 1)
+    W = W + W.T
+    prob = _MaxCutSDP(W)
+    opts = dict(max_iters=600, tol=0.0, check_every=25)
+    sol_n = solve_sdp(prob, SDPOptions(backend="numpy", **opts))
+    sol_j = solve_sdp(prob, SDPOptions(backend="jax", **opts))
+    np.testing.assert_allclose(sol_j.Y, sol_n.Y, atol=F32_ATOL)
+    assert np.isclose(sol_j.t, sol_n.t, atol=F32_ATOL)
+    # sanity: the relaxation found a genuinely cut-like Y (t < 0 after
+    # normalization means <L, Y> > 0)
+    assert sol_n.t < 0.0
+
+
+def test_warm_start_converges_faster(instance):
+    """Perturbed re-solve from the cached state beats a cold start."""
+    tg, cg = instance
+    opts = SDPOptions(max_iters=4000, tol=2e-5, backend="numpy")
+    data = build_bqp(tg, cg)
+    cold = solve_sdp(data, opts)
+    assert cold.converged
+
+    # incremental topology change: one machine slows down by 10%
+    e2 = cg.e.copy()
+    e2[0] *= 0.9
+    cg2 = ComputeGraph(e=e2, C=cg.C)
+    data2 = build_bqp(tg, cg2)
+    cold2 = solve_sdp(data2, opts)
+    warm2 = solve_sdp(data2, opts, warm_start=cold.state)
+    assert cold2.converged and warm2.converged
+    assert warm2.stats["warm_started"]
+    assert warm2.iterations < cold2.iterations
+
+    # mismatched payloads are ignored, not crashed on
+    bad = solve_sdp(data2, opts, warm_start={"w": np.zeros(3)})
+    assert not bad.stats["warm_started"]
+
+
+def test_warm_start_jax_backend(instance):
+    tg, cg = instance
+    data = build_factored_bqp(tg, cg)
+    opts = SDPOptions(max_iters=4000, tol=2e-5, backend="jax")
+    cold = solve_sdp(data, opts)
+    assert cold.converged
+    warm = solve_sdp(data, opts, warm_start=cold.state)
+    assert warm.stats["warm_started"]
+    assert warm.iterations < cold.iterations
+
+
+def test_schedule_warm_start_cache(instance):
+    """schedule(warm_start=True) reuses iterates across topology changes."""
+    tg, cg = instance
+    scheduler_mod._WARM_STARTS.clear()
+    kw = dict(
+        method="sdp",
+        num_samples=200,
+        sdp_options=SDPOptions(max_iters=4000, tol=2e-5),
+        rounding_backend="numpy",
+        warm_start=True,
+    )
+    s1 = schedule(tg, cg, **kw)
+    assert not s1.info["warm_started"]
+
+    e2 = cg.e.copy()
+    e2[-1] *= 1.1
+    s2 = schedule(tg, ComputeGraph(e=e2, C=cg.C), **kw)
+    assert s2.info["warm_started"]
+    assert s2.info["sdp_iterations"] < s1.info["sdp_iterations"]
+    assert np.isfinite(s2.bottleneck)
+    scheduler_mod._WARM_STARTS.clear()
+
+
+def test_schedule_jax_solver_backend(instance):
+    """solver_backend= plumbs through, hands Y_device to fused rounding."""
+    tg, cg = instance
+    kw = dict(
+        method="sdp",
+        seed=5,
+        num_samples=300,
+        sdp_options=SDPOptions(max_iters=400),
+    )
+    s_np = schedule(tg, cg, solver_backend="numpy", rounding_backend="numpy", **kw)
+    s_jx = schedule(tg, cg, solver_backend="jax", rounding_backend="jax", **kw)
+    assert s_np.info["solver_backend"] == "numpy"
+    assert s_jx.info["solver_backend"] == "jax"
+    # both backends land on equally good schedules of the same instance
+    assert np.isfinite(s_jx.bottleneck)
+    assert np.isclose(s_jx.bottleneck, s_np.bottleneck, rtol=0.15)
+
+
+def test_uncertified_bound_not_reported_as_lower_bound(instance):
+    """An unconverged iterate's Eq. 24 value must not masquerade as a bound."""
+    tg, cg = instance
+    data = build_bqp(tg, cg)
+    sol = solve_sdp(data, SDPOptions(max_iters=5, check_every=5))
+    assert not sol.converged
+    assert not sol.bound_certified
+
+    s = schedule(
+        tg, cg,
+        method="sdp",
+        num_samples=200,
+        sdp_options=SDPOptions(max_iters=5, check_every=5),
+        rounding_backend="numpy",
+    )
+    assert not s.info["bound_certified"]
+    assert "lower_bound" not in s.info
+    assert "lower_bound_uncertified" in s.info
+
+
+def test_certified_bound_reported(instance):
+    tg, cg = instance
+    s = schedule(
+        tg, cg,
+        method="sdp",
+        num_samples=200,
+        sdp_options=SDPOptions(max_iters=4000, tol=2e-5),
+        rounding_backend="numpy",
+    )
+    assert s.info["bound_certified"]
+    assert "lower_bound" in s.info
+    assert "lower_bound_uncertified" not in s.info
