@@ -10,7 +10,8 @@ test:
 # Fast scheduler smoke benchmark: small-instance backends + a two-point
 # scaling sweep exercising both the dense and the factored representation,
 # plus the jax-solver smoke (asserts the device SDP path didn't silently
-# fall back to numpy).
+# fall back to numpy) and the stacked-gossip smoke (a 2-round stacked MNIST
+# gossip run asserting the single-jit round path took effect).
 smoke:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.small_instance_backends(quick=True); \
@@ -19,5 +20,6 @@ smoke:
 	 for r in (b._sweep_point(8, 8, max_iters=150, num_samples=256), \
 	           b._sweep_point(40, 8, max_iters=60, num_samples=256))]; \
 	b.jax_solver_smoke()"
+	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.stacked_smoke()"
 
 ci: test smoke

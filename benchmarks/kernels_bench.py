@@ -73,6 +73,45 @@ def main(quick: bool = True):
         f"naive_axpy_us={naive_bytes / HBM_BW * 1e6:.1f}",
     )
 
+    # all-receivers batched mix (the stacked FL exchange, DESIGN.md §7):
+    # N_T users, out-degree-6 random scatter W (sender-normalized 1/deg
+    # entries; receiver row sums vary with in-degree — same sparsity and
+    # cost shape as the production mixing matrix, not its normalization),
+    # vs the (|E|, L) gather + segment_sum reference.  On CPU the Pallas
+    # kernel runs in interpret mode (wall-clock meaningless), so it is
+    # verified on a small slab and the perf record is the jnp reference
+    # timing + the roofline projection.
+    from repro.kernels.gossip_mix import gossip_mix_all_fwd
+
+    nt, l2, deg = 64, (1 << 21) if not quick else (1 << 18), 6
+    src = jnp.asarray(np.repeat(np.arange(nt), deg), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, nt, size=nt * deg), jnp.int32)
+    w_e = jnp.full((nt * deg,), 1.0 / deg, jnp.float32)
+    W = jnp.zeros((nt, nt), jnp.float32).at[dst, src].add(w_e)
+    x_all = t((nt, l2), jnp.float32)
+
+    us_seg = _time(
+        jax.jit(lambda s: kref.gossip_mix_segment_ref(s, src, dst, w_e, nt)), x_all
+    )
+    us_dense = _time(jax.jit(kref.gossip_mix_all_ref), x_all, W)
+
+    on_cpu = jax.default_backend() == "cpu"
+    small = x_all[:, : (1 << 16)]
+    got = gossip_mix_all_fwd(small, W, block_len=1 << 14, interpret=on_cpu)
+    np.testing.assert_allclose(
+        got, kref.gossip_mix_all_ref(small, W), atol=2e-4
+    )
+
+    kern_bytes = 2 * nt * l2 * 4                    # stream slab once, write once
+    seg_bytes = (2 * nt * deg + nt) * l2 * 4        # gather + scatter + write
+    emit(
+        "kernel_gossip_mix_all", us_dense,
+        f"NT={nt};deg={deg};segment_sum_us={us_seg:.1f};"
+        f"proj_v5e_us={kern_bytes / HBM_BW * 1e6:.1f};"
+        f"segment_proj_v5e_us={seg_bytes / HBM_BW * 1e6:.1f};"
+        f"pallas={'interpret_ok' if on_cpu else 'compiled_ok'}",
+    )
+
 
 if __name__ == "__main__":
     main(quick=False)

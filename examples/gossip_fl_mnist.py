@@ -27,6 +27,9 @@ def main():
     )
     out = run_fl(exp, methods=("heft", "tp_heft", "sdp_naive", "sdp"))
 
+    med = float(np.median(out["round_seconds"]))
+    print(f"gossip engine: {out['backend']} backend, "
+          f"{med * 1e3:.0f} ms/round (one jitted call per round)")
     print("per-round bottleneck time (lower is better):")
     for m, t in sorted(out["bottleneck_per_round"].items(), key=lambda kv: kv[1]):
         print(f"  {m:>10s}: {t:.3f} s/round")

@@ -16,6 +16,9 @@ Implements:
     "SDP with naive rounding" baseline).
   - ``expected_bottleneck``: Eq. (22)-(23) arcsin formula.
   - ``sdp_lower_bound`` / ``optimal_upper_bound``: Eq. (24) and (27).
+  - ``analysis_bounds``: all three transforms at once; with a
+    device-resident Gram matrix and the matrix-free representation they run
+    in one jitted call on device instead of three host O(n²) passes.
 
 All analysis functions accept either the dense ``BQPData`` oracle or the
 matrix-free ``FactoredBQP`` (DESIGN.md §2); with the factored form the
@@ -25,6 +28,7 @@ an (|E|, n, n) stack.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import numpy as np
@@ -135,14 +139,19 @@ def randomized_rounding(
         bottleneck = float(times[best])
         num_feasible = int(strict_mask.sum())
 
+    # The numpy backend is the float64 reference oracle end to end — only
+    # the jax backend hands the analysis transforms a device (f32) Y.
+    exp_b, lb, ub = analysis_bounds(
+        bqp, Y, Y_device=Y_device if backend == "jax" else None
+    )
     return RoundingResult(
         assignment=assignment,
         bottleneck=bottleneck,
         num_feasible=num_feasible,
         num_samples=num_samples,
-        expected_bottleneck=expected_bottleneck(bqp, Y),
-        lower_bound=sdp_lower_bound(bqp, Y),
-        upper_bound=optimal_upper_bound(bqp, Y),
+        expected_bottleneck=exp_b,
+        lower_bound=lb,
+        upper_bound=ub,
     )
 
 
@@ -196,6 +205,86 @@ def optimal_upper_bound(bqp: AnyBQP, Y: np.ndarray) -> float:
     return float(np.max(vals) / 4.0)
 
 
+def analysis_bounds(
+    bqp: AnyBQP, Y: np.ndarray, *, Y_device=None
+) -> tuple[float, float, float]:
+    """(expected_bottleneck, sdp_lower_bound, optimal_upper_bound) in one go.
+
+    With a device-resident Gram matrix (``SDPSolution.Y_device``) and the
+    matrix-free representation, all three Eq. (22)-(24)/(27) transforms run
+    in ONE jitted call on device — the host otherwise pays three O(n²)
+    arcsin/linear passes plus the factored inner products per ``schedule()``
+    even after a device-resident solve.  Dense instances (small by
+    construction, DESIGN.md §2) keep the float64 host path.
+    """
+    if Y_device is not None and isinstance(bqp, FactoredBQP):
+        fn = _device_analysis_fn(bqp)
+        exp_b, lb, ub = fn(Y_device)
+        return float(exp_b), float(lb), float(ub)
+    return (
+        expected_bottleneck(bqp, Y),
+        sdp_lower_bound(bqp, Y),
+        optimal_upper_bound(bqp, Y),
+    )
+
+
+_ANALYSIS_CACHE: collections.OrderedDict = collections.OrderedDict()
+_ANALYSIS_CACHE_MAX = 8
+
+
+def _device_analysis_fn(bqp: FactoredBQP):
+    """Jitted (expected, lower, upper) from a device Y, keyed on content."""
+    import jax
+    import jax.numpy as jnp
+
+    key = (
+        bqp.p.tobytes(),
+        bqp.d.tobytes(),
+        bqp.C.tobytes(),
+        bqp.src.tobytes(),
+        bqp.dst.tobytes(),
+    )
+    fn = _cache_lookup(_ANALYSIS_CACHE, key)
+    if fn is not None:
+        return fn
+
+    K, T, n = bqp.n_machines, bqp.n_tasks, bqp.n
+    p = jnp.asarray(bqp.p, jnp.float32)
+    d = jnp.asarray(bqp.d, jnp.float32)
+    C = jnp.asarray(bqp.C, jnp.float32)
+    src = jnp.asarray(bqp.src, jnp.int32)
+    dst = jnp.asarray(bqp.dst, jnp.int32)
+    C1 = jnp.asarray(bqp._C1, jnp.float32)
+    Ct1 = jnp.asarray(bqp._Ct1, jnp.float32)
+    P = jnp.float32(bqp._P)
+    corner = jnp.float32(bqp.corner)
+
+    def inner(F):
+        """Device twin of ``FactoredBQP.inner`` (same closed forms)."""
+        F = 0.5 * (F + F.T)
+        Fxx = F[:n, :n].reshape(K, T, K, T)
+        f = F[:n, -1].reshape(K, T)
+        comp = jnp.einsum("k,t,ktks->s", d, p, Fxx)
+        blocks = Fxx.transpose(1, 3, 0, 2)[src, dst]      # (|E|, K, K)
+        comm = jnp.einsum("ekl,kl->e", blocks, C)
+        base = jnp.einsum("k,t,kt->", d, p, f)
+        u_i = (C1 + P * d) @ f
+        u_j = Ct1 @ f
+        q1f = 0.5 * (base + u_i[src] + u_j[dst])
+        return comp[src] + comm + 2.0 * q1f + corner * F[-1, -1]
+
+    @jax.jit
+    def analysis(Y):
+        Yc = jnp.clip(Y, -1.0, 1.0)
+        exp_b = jnp.max(inner(jnp.arcsin(Yc)) * (2.0 / jnp.pi)) / 4.0
+        lb = jnp.max(inner(Y)) / 4.0
+        ub = jnp.max(inner(0.112 + 0.878 * Yc)) / 4.0
+        return exp_b, lb, ub
+
+    _cache_insert(_ANALYSIS_CACHE, key, analysis, _ANALYSIS_CACHE_MAX)
+    return analysis
+
+
 # ---------------------------------------------------------------------------
 # Fused JAX rounding (beyond-paper §Perf optimization)
 # ---------------------------------------------------------------------------
@@ -205,8 +294,25 @@ def optimal_upper_bound(bqp: AnyBQP, Y: np.ndarray) -> float:
 # selection all stay on device.  Gaussians g come from the caller's numpy
 # rng so the two backends draw identical samples.
 
-_JAX_CACHE: dict = {}
+_JAX_CACHE: collections.OrderedDict = collections.OrderedDict()
 _JAX_CACHE_MAX = 32
+
+
+def _cache_lookup(cache: collections.OrderedDict, key):
+    """LRU read: refresh recency so hot closures survive eviction."""
+    val = cache.get(key)
+    if val is not None:
+        cache.move_to_end(key)
+    return val
+
+
+def _cache_insert(cache: collections.OrderedDict, key, val, max_size: int):
+    """LRU insert with SINGLE-entry eviction: a cache-capacity+1-th instance
+    evicts only the least-recently-used closure instead of wiping the whole
+    cache (which would recompile every cached instance on its next use)."""
+    while len(cache) >= max_size:
+        cache.popitem(last=False)
+    cache[key] = val
 
 
 def _fused_rounding_fn(
@@ -228,11 +334,9 @@ def _fused_rounding_fn(
         n_machines,
         strict,
     )
-    fn = _JAX_CACHE.get(key)
+    fn = _cache_lookup(_JAX_CACHE, key)
     if fn is not None:
         return fn
-    if len(_JAX_CACHE) >= _JAX_CACHE_MAX:
-        _JAX_CACHE.clear()
 
     p = jnp.asarray(task_graph.p, dtype=jnp.float32)
     e = jnp.asarray(compute_graph.e, dtype=jnp.float32)
@@ -274,7 +378,7 @@ def _fused_rounding_fn(
         best = jnp.argmin(times)
         return assignments[best], times[best], strict_mask.sum()
 
-    _JAX_CACHE[key] = rounding
+    _cache_insert(_JAX_CACHE, key, rounding, _JAX_CACHE_MAX)
     return rounding
 
 

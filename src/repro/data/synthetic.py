@@ -76,6 +76,22 @@ class ImageDataset:
         ]
 
 
+def stack_shards(shards: list[ImageDataset]) -> tuple[np.ndarray, np.ndarray]:
+    """Stack per-user shards into ``(N_T, chunk, H, W, C)`` / ``(N_T, chunk)``.
+
+    The stacked gossip engine keeps every user's data in one device array,
+    so shards are truncated to the common minimum length (``np.array_split``
+    shards differ by at most one sample).  Returns *copies* — the engine
+    never mutates caller-owned shard buffers.
+    """
+    if not shards:
+        raise ValueError("need at least one shard")
+    chunk = min(len(s.y) for s in shards)
+    xs = np.stack([s.x[:chunk] for s in shards], axis=0)
+    ys = np.stack([s.y[:chunk].astype(np.int32) for s in shards], axis=0)
+    return xs, ys
+
+
 def image_dataset(
     name: str = "mnist",
     num_samples: int = 4096,

@@ -65,10 +65,14 @@ def cnn_loss(params: dict, batch: dict) -> jnp.ndarray:
     return jnp.mean(logz - gold)
 
 
+# Module-level jitted forward: ``jax.jit(cnn_forward)`` inside the function
+# would build a fresh jit wrapper — and retrace — on every accuracy call.
+_cnn_forward_jit = jax.jit(cnn_forward)
+
+
 def cnn_accuracy(params: dict, x: np.ndarray, y: np.ndarray, batch: int = 512) -> float:
     correct = 0
-    fwd = jax.jit(cnn_forward)
     for i in range(0, len(y), batch):
-        logits = fwd(params, jnp.asarray(x[i : i + batch]))
+        logits = _cnn_forward_jit(params, jnp.asarray(x[i : i + batch]))
         correct += int(jnp.sum(jnp.argmax(logits, -1) == jnp.asarray(y[i : i + batch])))
     return correct / len(y)

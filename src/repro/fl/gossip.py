@@ -6,6 +6,25 @@ the models it received (weighted average including its own).  Optional
 delta-compression (top-k / int8) with error feedback shrinks the gossip
 message — and therefore the scheduler's C matrix.
 
+Two interchangeable engines run the learning (DESIGN.md §7):
+
+  - ``backend="reference"`` — the per-user Python loop: one jitted grad
+    call per user per local step, edge-by-edge aggregation with
+    ``jax.tree.map``.  Clear, slow, and the equivalence oracle.
+  - ``backend="stacked"`` (the ``"auto"`` default) — all user replicas
+    live in ONE pytree with a leading ``(N_T, …)`` axis; a whole gossip
+    round (``local_steps`` of SGDM via ``lax.scan`` + ``vmap`` across
+    users, delta compression with error feedback, and the gossip exchange
+    as a multiplication by the row-normalized sparse mixing matrix W) is a
+    single jitted call — no per-user or per-edge Python dispatch, no
+    host↔device round-trips inside a round.
+
+Both engines draw identical data: shards are stacked to ``(N_T, chunk, …)``
+at construction and batches are index-gathers through a per-user epoch
+permutation derived from the jax PRNG (``fold_in(data_key, user, epoch)``),
+so the engines consume the same samples in the same order and caller-owned
+shard buffers are never mutated.
+
 The *execution timing* of a round on networked machines is what the
 scheduler optimizes; ``repro.fl.simulator`` turns an assignment into
 bottleneck time while this module performs the actual learning.
@@ -14,6 +33,7 @@ bottleneck time while this module performs the actual learning.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -21,8 +41,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graphs import TaskGraph
-from repro.data.synthetic import ImageDataset
+from repro.data.synthetic import ImageDataset, stack_shards
+from repro.kernels.gossip_mix import gossip_mix_all_fwd
+from repro.kernels.ref import gossip_mix_segment_ref
 from repro.train.optim import SGDM
+
+BACKENDS = ("auto", "reference", "stacked")
+MIX_BACKENDS = ("auto", "segment_sum", "pallas")
 
 
 @dataclasses.dataclass
@@ -33,10 +58,52 @@ class GossipConfig:
     momentum: float = 0.9
     aggregate_self_weight: float = 0.5   # weight of own model in the average
     compressor: Any = None        # repro.train.compression.TopK / Int8 / None
+    backend: str = "auto"         # "reference" | "stacked" | "auto" (=stacked)
+    mix_backend: str = "auto"     # stacked exchange: "segment_sum" | "pallas"
+    mix_block_len: int = 65536    # L-block of the all-receivers Pallas kernel
+
+
+def mixing_arrays(
+    task_graph: TaskGraph, self_weight: float
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Row-normalized gossip mixing built from ``TaskGraph.edges``.
+
+    Edge (i, j) means user i sends to user j.  Receiver j averages its own
+    model with weight ``self_weight`` and its indeg(j) incoming messages
+    with weight ``(1 - self_weight) / indeg(j)``; a user with no incoming
+    edges keeps its model (self weight 1, empty row in W).
+
+    Returns ``(self_w (N,), src (|E|,), dst (|E|,), w_edge (|E|,), W (N, N))``
+    where ``W[j, i] = w_edge`` for each edge — the incoming-message part
+    only, so the same arrays serve compressed gossip (messages ≠ params):
+    ``new_params = diag(self_w) · params + W · messages``.
+    """
+    n = task_graph.num_tasks
+    indeg = np.zeros(n, dtype=np.int64)
+    for (_, j) in task_graph.edges:
+        indeg[j] += 1
+    self_w = np.where(indeg > 0, self_weight, 1.0).astype(np.float32)
+    src = np.asarray([i for (i, _) in task_graph.edges], dtype=np.int32)
+    dst = np.asarray([j for (_, j) in task_graph.edges], dtype=np.int32)
+    w_edge = (
+        (1.0 - self_weight) / np.maximum(indeg[dst], 1)
+    ).astype(np.float32) if len(task_graph.edges) else np.zeros(0, np.float32)
+    W = np.zeros((n, n), dtype=np.float32)
+    if len(task_graph.edges):
+        # accumulate, not assign: TaskGraph does not dedupe edges, and the
+        # per-edge paths (segment_sum, reference loop) count multiplicity
+        np.add.at(W, (dst, src), w_edge)
+    return self_w, src, dst, w_edge, W
 
 
 class GossipTrainer:
-    """Holds per-user replicas and runs gossip rounds."""
+    """Holds per-user replicas and runs gossip rounds.
+
+    Public API: ``step_round() -> {"round", "mean_loss"}``, ``params`` /
+    ``user_params(i)`` for reading replicas, ``backend`` for the resolved
+    engine, and ``last_round_dispatches`` (jitted calls issued by the last
+    round — exactly 1 on the stacked path).
+    """
 
     def __init__(
         self,
@@ -46,70 +113,173 @@ class GossipTrainer:
         shards: list[ImageDataset],
         cfg: GossipConfig | None = None,
         seed: int = 0,
+        backend: str | None = None,
     ):
         self.g = task_graph
         self.cfg = cfg or GossipConfig()
         self.n = task_graph.num_tasks
         assert len(shards) == self.n
         self.shards = shards
+        self.backend = self._resolve_backend(backend or self.cfg.backend)
+        self.mix_backend = self._resolve_mix_backend(self.cfg.mix_backend)
+
+        # Stacked data: (N_T, chunk, …) copies; batches are index-gathers so
+        # the caller's shard buffers are never reordered in place.  BOTH
+        # engines consume this layout (that is what makes them sample-for-
+        # sample equivalent), so shards are truncated to the common minimum
+        # length — loud when that drops more than the ±1 of an even split.
+        self._xs, self._ys = stack_shards(shards)
+        self._chunk = int(self._ys.shape[1])
+        longest = max(len(s.y) for s in shards)
+        if longest - self._chunk > 1:
+            warnings.warn(
+                f"uneven shards truncated to the minimum length {self._chunk} "
+                f"(longest holds {longest}); pass equal-size shards to train "
+                "on all samples",
+                stacklevel=2,
+            )
+        if self._chunk < self.cfg.batch_size:
+            raise ValueError(
+                f"shard chunk {self._chunk} < batch_size {self.cfg.batch_size}"
+            )
+
         # All users start from a COMMON initialization (standard FL — early
         # averaging of independently-initialized models is destructive).
         key0 = jax.random.PRNGKey(seed)
         common = init_params(key0)
-        self.params = [jax.tree.map(jnp.copy, common) for _ in range(self.n)]
-        self.opt = SGDM(learning_rate=self.cfg.lr, momentum=self.cfg.momentum)
-        self.opt_state = [self.opt.init(p) for p in self.params]
-        self.residual = [None] * self.n
-        self._rng = np.random.default_rng(seed)
-        self._cursor = [0] * self.n
-        self._loss_fn = loss_fn
-        self._grad = jax.jit(jax.value_and_grad(loss_fn))
-        self.round = 0
+        # Epoch-reshuffle PRNG, shared by both engines: the permutation of
+        # user u's shard in epoch e is permutation(fold_in(key_u, e)).
+        data_key = jax.random.fold_in(key0, 0x0DA7A)
+        self._user_keys = jnp.stack(
+            [jax.random.fold_in(data_key, u) for u in range(self.n)]
+        )
 
-    # -- local training ----------------------------------------------------
+        self.opt = SGDM(learning_rate=self.cfg.lr, momentum=self.cfg.momentum)
+        self._loss_fn = loss_fn
+        (
+            self._self_w, self._src, self._dst, self._w_edge, self._W
+        ) = mixing_arrays(task_graph, self.cfg.aggregate_self_weight)
+        self.round = 0
+        # Measured per-round count of trainer-issued jitted calls (every
+        # call site routes through ``_dispatch``): 1 on the stacked path,
+        # N_T·local_steps on the reference path.
+        self.last_round_dispatches = 0
+        self._jit_calls = 0
+
+        if self.backend == "stacked":
+            stacked = jax.tree.map(
+                lambda l: jnp.broadcast_to(l[None], (self.n,) + l.shape), common
+            )
+            residual = (
+                None if self.cfg.compressor is None
+                else jax.tree.map(jnp.zeros_like, stacked)
+            )
+            self._state = (
+                stacked,
+                self.opt.init(stacked),
+                jnp.zeros(self.n, jnp.int32),                        # cursor
+                jnp.zeros(self.n, jnp.int32),                        # epoch
+                jnp.tile(jnp.arange(self._chunk, dtype=jnp.int32), (self.n, 1)),
+                residual,
+            )
+            self._round_jit = self._build_stacked_round()
+        else:
+            self._params = [jax.tree.map(jnp.copy, common) for _ in range(self.n)]
+            self.opt_state = [self.opt.init(p) for p in self._params]
+            self.residual = [None] * self.n
+            self._cursor = [0] * self.n
+            self._epoch = [0] * self.n
+            self._perm = [np.arange(self._chunk) for _ in range(self.n)]
+            self._grad = jax.jit(jax.value_and_grad(loss_fn))
+
+    def _dispatch(self, fn, *args):
+        """Issue a jitted call, counting it toward ``last_round_dispatches``."""
+        self._jit_calls += 1
+        return fn(*args)
+
+    # -- backend resolution -------------------------------------------------
+    @staticmethod
+    def _resolve_backend(backend: str) -> str:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+        return "stacked" if backend == "auto" else backend
+
+    @staticmethod
+    def _resolve_mix_backend(mix_backend: str) -> str:
+        if mix_backend not in MIX_BACKENDS:
+            raise ValueError(
+                f"unknown mix backend {mix_backend!r}; choose from {MIX_BACKENDS}"
+            )
+        if mix_backend == "auto":
+            # The Pallas kernel wins on accelerators; on CPU it would run in
+            # interpret mode, so the segment_sum path is the fast default.
+            return "segment_sum" if jax.default_backend() == "cpu" else "pallas"
+        return mix_backend
+
+    # -- replica access (both backends) ------------------------------------
+    def user_params(self, i: int) -> Any:
+        if self.backend == "reference":
+            return self._params[i]
+        return jax.tree.map(lambda l: l[i], self._state[0])
+
+    @property
+    def params(self) -> list:
+        """Per-user parameter pytrees (materialized per user when stacked)."""
+        if self.backend == "reference":
+            return self._params
+        return [self.user_params(i) for i in range(self.n)]
+
+    # -- shared data pipeline ----------------------------------------------
+    def _host_epoch_perm(self, i: int, epoch: int) -> np.ndarray:
+        """Host-side twin of the in-jit reshuffle (identical permutation)."""
+        return np.asarray(
+            jax.random.permutation(
+                jax.random.fold_in(self._user_keys[i], epoch), self._chunk
+            )
+        )
+
+    # ======================================================================
+    # Reference engine: per-user Python loop (the equivalence oracle)
+    # ======================================================================
+
     def _local_round(self, i: int) -> float:
         cfg = self.cfg
-        shard = self.shards[i]
         losses = []
         for _ in range(cfg.local_steps):
             lo = self._cursor[i]
-            hi = lo + cfg.batch_size
-            if hi > len(shard.y):                # new epoch, reshuffle
-                perm = self._rng.permutation(len(shard.y))
-                shard.x[:] = shard.x[perm]
-                shard.y[:] = shard.y[perm]
-                self._cursor[i] = 0
-                lo, hi = 0, cfg.batch_size
+            if lo + cfg.batch_size > self._chunk:     # new epoch, reshuffle
+                self._epoch[i] += 1
+                self._perm[i] = self._host_epoch_perm(i, self._epoch[i])
+                lo = 0
+            idx = self._perm[i][lo : lo + cfg.batch_size]
             batch = {
-                "x": jnp.asarray(shard.x[lo:hi]),
-                "y": jnp.asarray(shard.y[lo:hi]),
+                "x": jnp.asarray(self._xs[i][idx]),
+                "y": jnp.asarray(self._ys[i][idx]),
             }
-            self._cursor[i] = hi
-            loss, grads = self._grad(self.params[i], batch)
-            self.params[i], self.opt_state[i], _ = self.opt.update(
-                grads, self.opt_state[i], self.params[i]
+            self._cursor[i] = lo + cfg.batch_size
+            loss, grads = self._dispatch(self._grad, self._params[i], batch)
+            self._params[i], self.opt_state[i], _ = self.opt.update(
+                grads, self.opt_state[i], self._params[i]
             )
             losses.append(float(loss))
         return float(np.mean(losses))
 
-    # -- gossip exchange ----------------------------------------------------
     def _messages(self) -> list[Any]:
         """What each user broadcasts this round (possibly compressed delta)."""
         comp = self.cfg.compressor
         if comp is None:
-            return self.params
+            return self._params
         out = []
         for i in range(self.n):
-            delta = self.params[i] if self.residual[i] is None else jax.tree.map(
-                lambda p, r: p + r, self.params[i], self.residual[i]
+            delta = self._params[i] if self.residual[i] is None else jax.tree.map(
+                lambda p, r: p + r, self._params[i], self.residual[i]
             )
             compressed, resid = comp.compress(delta)
             self.residual[i] = resid
             out.append(comp.decompress(compressed))   # receiver view
         return out
 
-    def step_round(self) -> dict:
-        """One gossip round: local training + exchange + aggregate."""
+    def _step_round_reference(self) -> float:
         losses = [self._local_round(i) for i in range(self.n)]
         msgs = self._messages()
         incoming: list[list[Any]] = [[] for _ in range(self.n)]
@@ -120,13 +290,146 @@ class GossipTrainer:
         w_self = self.cfg.aggregate_self_weight
         for i in range(self.n):
             if not incoming[i]:
-                new_params.append(self.params[i])
+                new_params.append(self._params[i])
                 continue
             w_nb = (1.0 - w_self) / len(incoming[i])
-            agg = jax.tree.map(lambda p: w_self * p, self.params[i])
+            agg = jax.tree.map(lambda p: w_self * p, self._params[i])
             for m in incoming[i]:
                 agg = jax.tree.map(lambda a, q: a + w_nb * q, agg, m)
             new_params.append(agg)
-        self.params = new_params
+        self._params = new_params
+        return float(np.mean(losses))
+
+    # ======================================================================
+    # Stacked engine: one jitted call per round
+    # ======================================================================
+
+    def _build_stacked_round(self):
+        cfg = self.cfg
+        n, chunk, batch = self.n, self._chunk, cfg.batch_size
+        opt, comp = self.opt, cfg.compressor
+        grad_fn = jax.value_and_grad(self._loss_fn)
+        # The dataset is a jit ARGUMENT, not a closure constant: closed-over
+        # arrays get inlined into the compiled executable (a second copy of
+        # the full training set, again on every retrace).
+        self._data = (jnp.asarray(self._xs), jnp.asarray(self._ys))
+        user_keys = self._user_keys
+        self_w = jnp.asarray(self._self_w)
+        src = jnp.asarray(self._src)
+        dst = jnp.asarray(self._dst)
+        w_edge = jnp.asarray(self._w_edge)
+        W = jnp.asarray(self._W)
+        mix_backend = self.mix_backend
+        interpret = jax.default_backend() == "cpu"
+
+        def one_user(p, o, cur, ep, pm, x_u, y_u, key_u):
+            wrap = cur + batch > chunk
+            ep = ep + wrap.astype(ep.dtype)
+            # The refresh runs every step (a vmapped branch would execute
+            # both sides anyway): O(N_T·chunk·log chunk) of PRNG+sort per
+            # step, negligible next to the gradient compute, and it keeps
+            # the wrap schedule out of the trace — no per-round retracing.
+            pm_new = jax.random.permutation(
+                jax.random.fold_in(key_u, ep), chunk
+            ).astype(pm.dtype)
+            pm = jnp.where(wrap, pm_new, pm)
+            cur = jnp.where(wrap, 0, cur)
+            idx = jax.lax.dynamic_slice(pm, (cur,), (batch,))
+            loss, g = grad_fn(
+                p, {"x": jnp.take(x_u, idx, axis=0), "y": jnp.take(y_u, idx, axis=0)}
+            )
+            p, o, _ = opt.update(g, o, p)
+            return p, o, cur + batch, ep, pm, loss
+
+        def local_step(xs, ys, carry):
+            params, opt_state, cursor, epoch, perm = carry
+            params, opt_state, cursor, epoch, perm, losses = jax.vmap(one_user)(
+                params, opt_state, cursor, epoch, perm, xs, ys, user_keys
+            )
+            return (params, opt_state, cursor, epoch, perm), losses
+
+        def mix_segment(msgs):
+            def seg(m):
+                out = gossip_mix_segment_ref(
+                    m.reshape(n, -1), src, dst, w_edge, n
+                )
+                return out.reshape(m.shape)
+
+            return jax.tree.map(seg, msgs)
+
+        def mix_pallas(msgs):
+            leaves, treedef = jax.tree.flatten(msgs)
+            flats = [l.reshape(n, -1) for l in leaves]
+            sizes = [f.shape[1] for f in flats]
+            X = jnp.concatenate(flats, axis=1)
+            L = X.shape[1]
+            # Budget the (n, bl) input + (n, bl) output blocks to ~8 MB of
+            # on-chip memory regardless of user count; a fixed 64k block at
+            # N_T=128 would want 64 MB of VMEM/shared memory.
+            bl_cap = max(1024, (1 << 20) // n)
+            bl = min(cfg.mix_block_len, bl_cap, L)
+            pad = (-L) % bl
+            if pad:
+                X = jnp.pad(X, ((0, 0), (0, pad)))
+            out = gossip_mix_all_fwd(X, W, block_len=bl, interpret=interpret)[:, :L]
+            offs = np.cumsum([0] + sizes)
+            parts = [
+                out[:, offs[k] : offs[k + 1]].reshape(leaves[k].shape).astype(
+                    leaves[k].dtype
+                )
+                for k in range(len(leaves))
+            ]
+            return treedef.unflatten(parts)
+
+        mix = mix_segment if mix_backend == "segment_sum" else mix_pallas
+
+        def round_fn(state, xs, ys):
+            params, opt_state, cursor, epoch, perm, residual = state
+            # Full unroll: XLA CPU optimizes loop bodies poorly (a rolled
+            # scan body runs ~5x slower here); local_steps is single-digit,
+            # so straight-line code costs little compile time and lets XLA
+            # fuse across steps.
+            (params, opt_state, cursor, epoch, perm), losses = jax.lax.scan(
+                lambda carry, _: local_step(xs, ys, carry),
+                (params, opt_state, cursor, epoch, perm),
+                None,
+                length=cfg.local_steps,
+                unroll=cfg.local_steps,
+            )
+            if comp is None:
+                msgs = params
+            else:
+                delta = jax.tree.map(jnp.add, params, residual)
+                msgs = jax.vmap(comp.roundtrip)(delta)
+                residual = jax.tree.map(jnp.subtract, delta, msgs)
+            incoming = mix(msgs)
+            params = jax.tree.map(
+                lambda p, m: self_w.reshape((n,) + (1,) * (p.ndim - 1)) * p + m,
+                params,
+                incoming,
+            )
+            state = (params, opt_state, cursor, epoch, perm, residual)
+            return state, jnp.mean(losses)
+
+        # Buffer donation halves peak replica memory; the CPU backend does
+        # not implement donation and would warn on every call.
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        return jax.jit(round_fn, donate_argnums=donate)
+
+    def _step_round_stacked(self) -> float:
+        self._state, mean_loss = self._dispatch(
+            self._round_jit, self._state, *self._data
+        )
+        return float(mean_loss)
+
+    # -- public entry point --------------------------------------------------
+    def step_round(self) -> dict:
+        """One gossip round: local training + exchange + aggregate."""
+        calls_before = self._jit_calls
+        if self.backend == "stacked":
+            mean_loss = self._step_round_stacked()
+        else:
+            mean_loss = self._step_round_reference()
+        self.last_round_dispatches = self._jit_calls - calls_before
         self.round += 1
-        return {"round": self.round, "mean_loss": float(np.mean(losses))}
+        return {"round": self.round, "mean_loss": mean_loss}

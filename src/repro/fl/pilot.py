@@ -40,6 +40,26 @@ def lm_task_work(cfg, local_steps: int, tokens_per_step: int) -> float:
     return 6.0 * counts.active * tokens_per_step * local_steps
 
 
+def stacked_task_work(
+    round_seconds: float,
+    shard_sizes: "np.ndarray | list[int]",
+    reference_speed: float = 1.0,
+) -> np.ndarray:
+    """Per-user work estimates from ONE fused stacked-round timing.
+
+    The stacked gossip engine executes every user's local steps in a single
+    jitted call, so users cannot be timed individually the way
+    ``measure_task_work`` does.  Instead the measured round wall-clock is
+    apportioned by shard size — local-step work is proportional to samples
+    processed, and the paper's §4.2 setting splits data evenly, so this
+    reduces to the uniform ``p`` the FL runner uses.
+    """
+    sizes = np.asarray(shard_sizes, dtype=np.float64)
+    if np.any(sizes <= 0):
+        raise ValueError("shard sizes must be positive")
+    return round_seconds * reference_speed * sizes / sizes.sum()
+
+
 def ema_update(current: np.ndarray, observed: np.ndarray, alpha: float = 0.3):
     """Straggler tracking: blend observed speeds into the compute graph."""
     return (1 - alpha) * current + alpha * observed

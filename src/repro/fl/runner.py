@@ -10,6 +10,7 @@ machine set with any method, trains for R rounds, and reports BOTH:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import numpy as np
@@ -19,6 +20,7 @@ from repro.core.scheduler import schedule
 from repro.data.synthetic import image_dataset
 from repro.fl.cnn import cnn_accuracy, cnn_loss, init_cnn_params
 from repro.fl.gossip import GossipConfig, GossipTrainer
+from repro.fl.pilot import stacked_task_work
 from repro.fl.simulator import round_time
 
 
@@ -32,6 +34,8 @@ class FLExperiment:
     rounds: int = 8
     num_samples: int = 2048
     seed: int = 0
+    # Gossip engine override: None defers to gossip.backend ("auto"=stacked).
+    backend: str | None = None
     gossip: GossipConfig = dataclasses.field(default_factory=GossipConfig)
 
 
@@ -61,6 +65,7 @@ def run_fl(
         shards,
         exp.gossip,
         seed=exp.seed,
+        backend=exp.backend,
     )
 
     # One shared SDP solve across the sdp-family methods, and warm-start
@@ -79,11 +84,20 @@ def run_fl(
     }
 
     history = []
+    round_seconds = []
     for _ in range(exp.rounds):
+        t0 = time.perf_counter()
         info = trainer.step_round()
-        acc = cnn_accuracy(trainer.params[0], test.x, test.y)
+        round_seconds.append(time.perf_counter() - t0)
+        acc = cnn_accuracy(trainer.user_params(0), test.x, test.y)
         info["accuracy_user0"] = acc
         history.append(info)
+
+    # Pilot estimate from measured engine time (stacked rounds can't be
+    # timed per user; apportion by shard size — uniform here, paper §4.2).
+    pilot_p = stacked_task_work(
+        float(np.median(round_seconds)), [len(s.y) for s in shards]
+    )
 
     return {
         "task_graph": tg,
@@ -91,6 +105,9 @@ def run_fl(
         "schedules": schedules,
         "bottleneck_per_round": per_round_time,
         "history": history,
+        "backend": trainer.backend,
+        "round_seconds": round_seconds,
+        "pilot_work": pilot_p,
         "cumulative_time": {
             m: [t * (r + 1) for r in range(exp.rounds)]
             for m, t in per_round_time.items()

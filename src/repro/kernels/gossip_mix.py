@@ -5,7 +5,19 @@ N-1 separate AXPY sweeps (2(N-1) HBM round-trips of the full parameter
 vector); this kernel streams the stacked (N, L) neighbor buffer once and
 writes the mix — bandwidth-bound at (N+1)/(2(N-1))× fewer bytes.
 
-Inputs: stacked flat params (N, L), weights (N,).  Grid over L chunks.
+Two entry points:
+  - ``gossip_mix_fwd``: one receiver — stacked (N, L) · weights (N,) -> (L,).
+  - ``gossip_mix_all_fwd``: ALL receivers of a gossip round at once —
+    stacked (N, L) · row-normalized mixing matrix W (M, N) -> (M, L).
+    Per L-block the kernel reads the (N, bl) slab ONCE and emits every
+    receiver's mix, so the whole exchange moves (N+M)·L words instead of
+    the Σ_j (indeg_j + 1)·L ≈ (|E|+M)·L of per-edge AXPY aggregation
+    (or the (2|E|+M)·L of a gather + segment_sum).  This is the
+    device-resident exchange of the stacked gossip-FL engine
+    (``repro.fl.gossip``, DESIGN.md §7).
+
+Inputs: stacked flat params (N, L), weights (N,) or (M, N).  Grid over L
+chunks.
 """
 
 from __future__ import annotations
@@ -40,5 +52,42 @@ def gossip_mix_fwd(
         ],
         out_specs=pl.BlockSpec((bl,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((l,), stacked.dtype),
+        interpret=interpret,
+    )(stacked, weights)
+
+
+def _mix_all_kernel(x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (N, bl)
+    w = w_ref[...].astype(jnp.float32)          # (M, N)
+    o_ref[...] = (w @ x).astype(o_ref.dtype)
+
+
+def gossip_mix_all_fwd(
+    stacked: jnp.ndarray,   # (N, L) flat sender parameter vectors
+    weights: jnp.ndarray,   # (M, N) mixing matrix, row m = receiver m's weights
+    *,
+    block_len: int = 65536,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """All-receivers blocked mixing: out[m] = Σ_n W[m, n] · stacked[n].
+
+    The full W block rides along to every grid step (N_T ≤ a few hundred,
+    so W is KiB-scale) while the (N, bl) slab of the stacked buffer is
+    streamed exactly once for all M receivers.
+    """
+    n, l = stacked.shape
+    m = weights.shape[0]
+    assert weights.shape == (m, n), (weights.shape, (m, n))
+    bl = min(block_len, l)
+    assert l % bl == 0, (l, bl)
+    return pl.pallas_call(
+        _mix_all_kernel,
+        grid=(l // bl,),
+        in_specs=[
+            pl.BlockSpec((n, bl), lambda i: (0, i)),
+            pl.BlockSpec((m, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bl), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, l), stacked.dtype),
         interpret=interpret,
     )(stacked, weights)

@@ -66,3 +66,26 @@ def gossip_mix_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
     return (
         weights.astype(jnp.float32) @ stacked.astype(jnp.float32)
     ).astype(stacked.dtype)
+
+
+def gossip_mix_all_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """All-receivers dense oracle: (M, N) @ (N, L) -> (M, L) — the same
+    matmul as the one-receiver oracle, batched over weight rows."""
+    return gossip_mix_ref(stacked, weights)
+
+
+def gossip_mix_segment_ref(
+    stacked: jnp.ndarray,    # (N, L) flat sender vectors
+    src: jnp.ndarray,        # (|E|,) sender index per edge
+    dst: jnp.ndarray,        # (|E|,) receiver index per edge
+    w_edge: jnp.ndarray,     # (|E|,) per-edge mixing weight
+    num_receivers: int,
+) -> jnp.ndarray:
+    """Sparse-mix reference: scatter-add the weighted sender rows per edge.
+
+    Materializes the (|E|, L) gather, so it moves ~(2|E| + M)·L words —
+    the baseline the all-receivers Pallas kernel is measured against.
+    """
+    contrib = stacked[src].astype(jnp.float32) * w_edge[:, None].astype(jnp.float32)
+    out = jax.ops.segment_sum(contrib, dst, num_segments=num_receivers)
+    return out.astype(stacked.dtype)

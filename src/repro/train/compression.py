@@ -55,6 +55,22 @@ class TopK:
         k = int(self.fraction * n)
         return k * (4 + 4)          # int32 index + f32 value
 
+    def roundtrip(self, tree: Any) -> Any:
+        """decompress(compress(tree)) as one array-only pytree map.
+
+        The stacked gossip engine vmaps this across users inside its jitted
+        round; the error-feedback residual is ``tree - roundtrip(tree)``
+        (identical to the residual ``compress`` returns).
+        """
+
+        def one(x):
+            flat = x.reshape(-1)
+            k = max(1, int(self.fraction * flat.size))
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            return jnp.zeros_like(flat).at[idx].set(flat[idx]).reshape(x.shape)
+
+        return jax.tree.map(one, tree)
+
 
 @dataclasses.dataclass(frozen=True)
 class Int8:
@@ -86,6 +102,16 @@ class Int8:
     def compressed_bytes(self, tree: Any) -> int:
         n = sum(l.size for l in jax.tree_util.tree_leaves(tree))
         return n + 4 * len(jax.tree_util.tree_leaves(tree))
+
+    def roundtrip(self, tree: Any) -> Any:
+        """decompress(compress(tree)) as one array-only pytree map (see TopK)."""
+
+        def one(x):
+            scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+            return (q.astype(x.dtype) * scale).astype(x.dtype)
+
+        return jax.tree.map(one, tree)
 
 
 def message_bytes(tree: Any, compressor=None) -> int:

@@ -74,7 +74,12 @@ class AdamW:
 
 @dataclasses.dataclass(frozen=True)
 class SGDM:
-    """SGD with momentum — used by the gossip-FL CNN experiments."""
+    """SGD with momentum — used by the gossip-FL CNN experiments.
+
+    ``update`` is a pure pytree map, so it composes with ``jax.vmap`` /
+    ``lax.scan`` — the stacked gossip engine vmaps it across users inside
+    one jitted round (DESIGN.md §7).
+    """
 
     learning_rate: float = 0.05
     momentum: float = 0.9
@@ -83,19 +88,17 @@ class SGDM:
         return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
     def update(self, grads, state, params):
-        def upd(g, b, p):
-            b = self.momentum * b + g.astype(jnp.float32)
-            return (p.astype(jnp.float32) - self.learning_rate * b).astype(p.dtype), b
-
-        flat_g, treedef = jax.tree.flatten(grads)
-        flat_b = treedef.flatten_up_to(state)
-        flat_p = treedef.flatten_up_to(params)
-        out = [upd(g, b, p) for g, b, p in zip(flat_g, flat_b, flat_p)]
-        return (
-            treedef.unflatten([o[0] for o in out]),
-            treedef.unflatten([o[1] for o in out]),
-            global_norm(grads),
+        new_b = jax.tree.map(
+            lambda g, b: self.momentum * b + g.astype(jnp.float32), grads, state
         )
+        new_p = jax.tree.map(
+            lambda p, b: (
+                p.astype(jnp.float32) - self.learning_rate * b
+            ).astype(p.dtype),
+            params,
+            new_b,
+        )
+        return new_p, new_b, global_norm(grads)
 
 
 def global_norm(tree) -> jnp.ndarray:

@@ -1,23 +1,27 @@
-"""Gossip FL engine: learning progress, aggregation, elastic scheduling."""
+"""Gossip FL engine: learning progress, aggregation, elastic scheduling,
+and stacked-vs-reference backend equivalence."""
 
+import jax
 import numpy as np
+import pytest
 
 from repro.core.graphs import ComputeGraph, TaskGraph, gossip_task_graph
 from repro.data.synthetic import image_dataset
 from repro.fl.cnn import cnn_accuracy, cnn_loss, init_cnn_params
-from repro.fl.gossip import GossipConfig, GossipTrainer
+from repro.fl.gossip import GossipConfig, GossipTrainer, mixing_arrays
+from repro.fl.pilot import stacked_task_work
 from repro.fl.simulator import SimEvent, round_time, timeline
 from repro.launch.elastic import ElasticScheduler
-from repro.train.compression import TopK
+from repro.train.compression import Int8, TopK
 
 
-def _mini_trainer(n_users=4, compressor=None, seed=0):
+def _mini_trainer(n_users=4, compressor=None, seed=0, backend="auto"):
     rng = np.random.default_rng(seed)
     tg = gossip_task_graph(rng, n_users, degree_low=2, degree_high=3)
     train, test = image_dataset("mnist", 512, seed=seed)
     shards = train.split(n_users, rng)
     cfg = GossipConfig(local_steps=2, batch_size=32, lr=0.05,
-                       compressor=compressor)
+                       compressor=compressor, backend=backend)
     trainer = GossipTrainer(
         tg, lambda k: init_cnn_params(k, (28, 28, 1), 10), cnn_loss,
         shards, cfg, seed=seed,
@@ -107,3 +111,161 @@ def test_elastic_failure_and_straggler():
     es.observe_round(times)
     assert es.compute_graph.e[0] < 1.0        # EMA pulled the speed down
     assert es.history[-1]["event"] in ("migrate", "keep")
+
+
+# ---------------------------------------------------------------------------
+# Stacked backend: equivalence with the per-user reference engine
+# ---------------------------------------------------------------------------
+
+
+def _paired_trainers(compressor=None, n_users=10, seed=0, num_samples=640,
+                     mix_backend="auto", backends=("reference", "stacked")):
+    """Trainers per requested backend over identical graph/data/seed."""
+    out = []
+    for backend in backends:
+        rng = np.random.default_rng(seed)
+        tg = gossip_task_graph(rng, n_users, degree_low=3, degree_high=4)
+        train, _ = image_dataset("mnist", num_samples, seed=seed)
+        shards = train.split(n_users, rng)
+        cfg = GossipConfig(local_steps=2, batch_size=16,
+                           compressor=compressor, backend=backend,
+                           mix_backend=mix_backend)
+        out.append(GossipTrainer(
+            tg, lambda k: init_cnn_params(k, (28, 28, 1), 10), cnn_loss,
+            shards, cfg, seed=seed,
+        ))
+    return out
+
+
+def _max_param_diff(ta, tb):
+    return max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for i in range(ta.n)
+        for x, y in zip(jax.tree.leaves(ta.user_params(i)),
+                        jax.tree.leaves(tb.user_params(i)))
+    )
+
+
+@pytest.mark.parametrize(
+    "compressor,loss_tol,param_tol",
+    [(None, 1e-5, 1e-5), (TopK(fraction=0.2), 1e-5, 1e-5),
+     (Int8(), 1e-3, 5e-3)],
+    ids=["none", "topk", "int8"],
+)
+def test_stacked_matches_reference(compressor, loss_tol, param_tol):
+    """Same seed -> same per-round mean loss (fp32 tolerance), 3 rounds
+    spanning an epoch-wrap reshuffle; params stay aligned per user.
+    (Int8 gets looser tolerances: fp32 reassociation moves values across
+    quantization-bucket edges.)"""
+    ta, tb = _paired_trainers(compressor)
+    for _ in range(3):
+        la = ta.step_round()["mean_loss"]
+        lb = tb.step_round()["mean_loss"]
+        np.testing.assert_allclose(la, lb, rtol=loss_tol, atol=loss_tol)
+    assert _max_param_diff(ta, tb) < param_tol
+
+
+def test_stacked_round_is_single_dispatch():
+    (tb,) = _paired_trainers(n_users=4, num_samples=256,
+                             backends=("stacked",))
+    for _ in range(2):
+        tb.step_round()
+    assert tb.backend == "stacked"
+    assert tb.last_round_dispatches == 1
+    if hasattr(tb._round_jit, "_cache_size"):
+        assert tb._round_jit._cache_size() == 1   # never retraced
+
+
+def test_backends_do_not_mutate_caller_shards():
+    """Epoch reshuffle must permute indices, not caller-owned buffers."""
+    for backend in ("reference", "stacked"):
+        rng = np.random.default_rng(3)
+        tg = gossip_task_graph(rng, 4, degree_low=2, degree_high=3)
+        train, _ = image_dataset("mnist", 256, seed=3)
+        shards = train.split(4, rng)
+        before = [(s.x.copy(), s.y.copy()) for s in shards]
+        cfg = GossipConfig(local_steps=4, batch_size=32, backend=backend)
+        tr = GossipTrainer(
+            tg, lambda k: init_cnn_params(k, (28, 28, 1), 10), cnn_loss,
+            shards, cfg, seed=3,
+        )
+        for _ in range(2):                       # crosses an epoch boundary
+            tr.step_round()
+        for s, (x0, y0) in zip(shards, before):
+            np.testing.assert_array_equal(s.x, x0)
+            np.testing.assert_array_equal(s.y, y0)
+
+
+def test_mixing_arrays_isolated_and_zero_indegree_users():
+    # user 0: no incoming edges (keeps its model); user 3: one incoming
+    tg = TaskGraph(p=np.ones(4), edges=((0, 1), (0, 2), (1, 2), (2, 3)))
+    self_w, src, dst, w_edge, W = mixing_arrays(tg, 0.5)
+    np.testing.assert_allclose(self_w, [1.0, 0.5, 0.5, 0.5])
+    assert np.all(W[0] == 0.0)                    # isolated receiver row
+    np.testing.assert_allclose(W[2], [0.25, 0.25, 0.0, 0.0])
+    np.testing.assert_allclose(W[3], [0.0, 0.0, 0.5, 0.0])
+    np.testing.assert_allclose(W.sum(axis=1) + self_w, np.ones(4))
+    # duplicate edges accumulate (TaskGraph does not dedupe): row stays
+    # normalized and matches the per-edge multiplicity counting
+    tg_dup = TaskGraph(p=np.ones(2), edges=((0, 1), (0, 1)))
+    self_w2, _, _, _, W2 = mixing_arrays(tg_dup, 0.5)
+    np.testing.assert_allclose(W2.sum(axis=1) + self_w2, np.ones(2))
+
+
+def test_stacked_isolated_user_matches_reference():
+    """Zero-in-degree users keep their locally-trained model on both
+    backends (the stacked engine's W row is empty, self weight 1)."""
+    edges = ((0, 1), (0, 2), (1, 2), (2, 3), (3, 1))   # user 0 isolated
+    out = []
+    for backend in ("reference", "stacked"):
+        rng = np.random.default_rng(5)
+        tg = TaskGraph(p=np.ones(4), edges=edges)
+        train, _ = image_dataset("mnist", 256, seed=5)
+        shards = train.split(4, rng)
+        cfg = GossipConfig(local_steps=2, batch_size=16, backend=backend)
+        tr = GossipTrainer(
+            tg, lambda k: init_cnn_params(k, (28, 28, 1), 10), cnn_loss,
+            shards, cfg, seed=5,
+        )
+        tr.step_round()
+        out.append(tr)
+    ta, tb = out
+    assert _max_param_diff(ta, tb) < 1e-5
+
+
+def test_stacked_pallas_mix_matches_segment_sum():
+    (ta,) = _paired_trainers(n_users=5, num_samples=320,
+                             mix_backend="segment_sum", backends=("stacked",))
+    (tb,) = _paired_trainers(n_users=5, num_samples=320,
+                             mix_backend="pallas", backends=("stacked",))
+    for _ in range(2):
+        la = ta.step_round()["mean_loss"]
+        lb = tb.step_round()["mean_loss"]
+        np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-5)
+    assert _max_param_diff(ta, tb) < 2e-5
+
+
+def test_compression_roundtrip_matches_compress_decompress():
+    rng = np.random.default_rng(11)
+    tree = {"a": np.asarray(rng.standard_normal((64,)), np.float32),
+            "b": np.asarray(rng.standard_normal((8, 12)), np.float32)}
+    for comp in (TopK(fraction=0.25), Int8()):
+        via_pair = comp.decompress(comp.compress(tree)[0])
+        via_rt = comp.roundtrip(tree)
+        for x, y in zip(jax.tree.leaves(via_pair), jax.tree.leaves(via_rt)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-6)
+        # error-feedback identity: residual == delta - roundtrip(delta)
+        _, resid = comp.compress(tree)
+        for r, d, m in zip(jax.tree.leaves(resid), jax.tree.leaves(tree),
+                           jax.tree.leaves(via_rt)):
+            np.testing.assert_allclose(np.asarray(r),
+                                       np.asarray(d) - np.asarray(m),
+                                       atol=1e-6)
+
+
+def test_stacked_task_work_apportions_by_shard_size():
+    p = stacked_task_work(2.0, [10, 10, 20], reference_speed=1.0)
+    np.testing.assert_allclose(p, [0.5, 0.5, 1.0])
+    with pytest.raises(ValueError):
+        stacked_task_work(1.0, [4, 0])

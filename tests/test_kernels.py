@@ -9,7 +9,7 @@ from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.kernels.decode_attention import decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.gossip_mix import gossip_mix_fwd
+from repro.kernels.gossip_mix import gossip_mix_all_fwd, gossip_mix_fwd
 from repro.kernels.rmsnorm import rmsnorm_fwd
 
 rng = np.random.default_rng(0)
@@ -83,6 +83,31 @@ def test_gossip_mix_kernel_vs_ref(n, l):
     got = gossip_mix_fwd(st, w, block_len=8192, interpret=True)
     want = kref.gossip_mix_ref(st, w)
     np.testing.assert_allclose(got, want, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,l,bl", [(8, 32768, 8192), (16, 16384, 16384),
+                                    (5, 4096, 4096)])
+def test_gossip_mix_all_kernel_vs_refs(n, l, bl):
+    """Batched all-receivers mixing == dense oracle == segment_sum ref,
+    including an isolated receiver (empty W row)."""
+    st = t((n, l))
+    erng = np.random.default_rng(7)
+    deg = 3
+    src = np.repeat(np.arange(n), deg).astype(np.int32)
+    dst = erng.integers(0, n, size=n * deg).astype(np.int32)
+    keep = dst != 0                       # receiver 0 stays isolated
+    src, dst = src[keep], dst[keep]
+    w_edge = erng.random(src.size).astype(np.float32)
+    W = np.zeros((n, n), np.float32)
+    np.add.at(W, (dst, src), w_edge)
+    got = gossip_mix_all_fwd(st, jnp.asarray(W), block_len=bl, interpret=True)
+    want = kref.gossip_mix_all_ref(st, jnp.asarray(W))
+    seg = kref.gossip_mix_segment_ref(
+        st, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w_edge), n
+    )
+    np.testing.assert_allclose(got, want, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(seg), np.asarray(want), atol=2e-4)
+    assert np.all(np.asarray(got)[0] == 0.0)      # empty row -> zero mix
 
 
 def test_ops_wrappers_roundtrip():

@@ -1,0 +1,89 @@
+"""Device-resident analysis transforms and rounding-closure cache policy."""
+
+import numpy as np
+import pytest
+
+import repro.core.rounding as rounding
+from repro.core.bqp import build_bqp, build_factored_bqp
+from repro.core.graphs import random_compute_graph, random_task_graph
+from repro.core.rounding import (
+    _fused_rounding_fn,
+    analysis_bounds,
+    expected_bottleneck,
+    optimal_upper_bound,
+    sdp_lower_bound,
+)
+
+
+def _instance(seed=0, n_tasks=12, n_machines=4):
+    rng = np.random.default_rng(seed)
+    tg = random_task_graph(rng, n_tasks, degree_low=2, degree_high=3)
+    cg = random_compute_graph(rng, n_machines)
+    return tg, cg
+
+
+def _unit_diag_psd(n1, rng):
+    A = rng.standard_normal((n1, n1))
+    Y = (A @ A.T) / n1
+    d = np.sqrt(np.diag(Y))
+    return Y / np.outer(d, d)
+
+
+def test_analysis_bounds_device_matches_host():
+    import jax.numpy as jnp
+
+    tg, cg = _instance()
+    fbqp = build_factored_bqp(tg, cg)
+    rng = np.random.default_rng(1)
+    Y = _unit_diag_psd(fbqp.n + 1, rng)
+    host = analysis_bounds(fbqp, Y)
+    dev = analysis_bounds(fbqp, Y, Y_device=jnp.asarray(Y, jnp.float32))
+    assert host == (
+        expected_bottleneck(fbqp, Y),
+        sdp_lower_bound(fbqp, Y),
+        optimal_upper_bound(fbqp, Y),
+    )
+    for h, d in zip(host, dev):
+        np.testing.assert_allclose(d, h, rtol=1e-4, atol=1e-5)
+
+
+def test_analysis_bounds_dense_ignores_device():
+    """Dense instances keep the float64 host path even with Y_device."""
+    import jax.numpy as jnp
+
+    tg, cg = _instance(seed=2, n_tasks=6, n_machines=3)
+    dbqp = build_bqp(tg, cg)
+    rng = np.random.default_rng(3)
+    Y = _unit_diag_psd(dbqp.n + 1, rng)
+    host = analysis_bounds(dbqp, Y)
+    dev = analysis_bounds(dbqp, Y, Y_device=jnp.asarray(Y, jnp.float32))
+    assert host == dev
+
+
+def test_rounding_cache_lru_single_eviction(monkeypatch):
+    """A cache-capacity+1-th instance evicts exactly the least-recently-used
+    closure — recently used ones survive (no mass recompilation)."""
+    monkeypatch.setattr(rounding, "_JAX_CACHE_MAX", 4)
+    rounding._JAX_CACHE.clear()
+    insts, fns = [], []
+    for s in range(4):
+        tg, cg = _instance(seed=10 + s, n_tasks=4, n_machines=2)
+        insts.append((tg, cg))
+        fns.append(_fused_rounding_fn(tg, cg, 4, 2, False))
+    assert len(rounding._JAX_CACHE) == 4
+    # touch instance 0 so instance 1 becomes the LRU entry
+    assert _fused_rounding_fn(*insts[0], 4, 2, False) is fns[0]
+    tg, cg = _instance(seed=99, n_tasks=4, n_machines=2)
+    _fused_rounding_fn(tg, cg, 4, 2, False)
+    assert len(rounding._JAX_CACHE) == 4
+    assert _fused_rounding_fn(*insts[0], 4, 2, False) is fns[0]   # survived
+    assert _fused_rounding_fn(*insts[2], 4, 2, False) is fns[2]
+    assert _fused_rounding_fn(*insts[3], 4, 2, False) is fns[3]
+
+
+def test_rounding_cache_strict_variants_coexist():
+    tg, cg = _instance(seed=42, n_tasks=4, n_machines=2)
+    f1 = _fused_rounding_fn(tg, cg, 4, 2, False)
+    f2 = _fused_rounding_fn(tg, cg, 4, 2, True)
+    assert f1 is not f2
+    assert _fused_rounding_fn(tg, cg, 4, 2, False) is f1
