@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke ci
+.PHONY: test smoke ci docs-check bench-scheduler bench-gossip bench-scenarios
 
 # Tier-1 verification (ROADMAP.md)
 test:
@@ -21,5 +21,20 @@ smoke:
 	           b._sweep_point(40, 8, max_iters=60, num_samples=256))]; \
 	b.jax_solver_smoke()"
 	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.stacked_smoke()"
+
+# Docs health: intra-repo markdown links resolve and the documented
+# quickstart command still runs (see scripts/check_docs.py).
+docs-check:
+	$(PYTHON) scripts/check_docs.py
+
+# Regenerate the BENCH_*.json records (schemas: docs/benchmarks.md)
+bench-scheduler:
+	$(PYTHON) -c "import benchmarks.scheduler_bench as b; b.scaling_sweep(quick=False)"
+
+bench-gossip:
+	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.sweep()"
+
+bench-scenarios:
+	$(PYTHON) -c "import benchmarks.scenarios_bench as s; s.main(quick=True, resume=False)"
 
 ci: test smoke

@@ -6,14 +6,7 @@ import time
 
 import numpy as np
 
-from repro.core import (
-    SDPOptions,
-    compare_methods,
-    random_compute_graph,
-    random_task_graph,
-)
-from repro.core.rounding import optimal_upper_bound
-from repro.core.sdp import solve_sdp
+from repro.core import random_compute_graph, random_task_graph
 
 
 def paper_instance(seed: int, num_tasks: int, num_machines: int = 4,
@@ -27,23 +20,32 @@ def paper_instance(seed: int, num_tasks: int, num_machines: int = 4,
     return tg, cg
 
 
-def run_methods(tg, cg, *, num_samples=3000, sdp_iters=4000, seed=0):
-    """All schedulers on one instance + the paper's Eq. 27 upper bound."""
-    cache: dict = {}
-    out = compare_methods(
-        tg,
-        cg,
-        methods=("heft", "tp_heft", "sdp_naive", "sdp", "sdp_ls"),
-        num_samples=num_samples,
-        sdp_options=SDPOptions(max_iters=sdp_iters),
-        seed=seed,
-        _sdp_cache=cache,
+def scenario_rows(preset, seeds: int, *, num_samples=3000, sdp_iters=4000):
+    """Seed-averaged method bottlenecks of a scenario preset.
+
+    The fig4/fig5 adapter onto the scenario engine: runs ``preset`` (a
+    registered name or a ``Scenario`` object) under seeds 0..seeds-1 with
+    paper-sized budgets and returns a ``{method: mean bottleneck,
+    upper_bound, sdp_seconds}`` row.
+    """
+    import dataclasses
+
+    from repro.scenarios import Scenario, get_scenario, run_scenario
+
+    sc = preset if isinstance(preset, Scenario) else get_scenario(preset)
+    base = dataclasses.replace(
+        sc,
+        schedule_params={"num_samples": num_samples, "max_iters": sdp_iters},
     )
-    ub = optimal_upper_bound(cache["bqp"], cache["sol"].Y)
-    res = {m: s.bottleneck for m, s in out.items()}
-    res["upper_bound"] = ub
-    res["sdp_seconds"] = out["sdp"].info["sdp_seconds"]
-    return res
+    acc: dict[str, list] = {}
+    for seed in range(seeds):
+        rec = run_scenario(base.with_seed(seed))
+        for m, entry in rec["methods"].items():
+            acc.setdefault(m, []).append(entry["predicted_bottleneck"])
+        sdp = rec["methods"]["sdp"]
+        acc.setdefault("upper_bound", []).append(sdp["upper_bound"])
+        acc.setdefault("sdp_seconds", []).append(sdp["sdp_seconds"])
+    return {k: float(np.mean(v)) for k, v in acc.items()}
 
 
 def emit(name: str, us_per_call: float, derived: str):

@@ -4,6 +4,11 @@ Paper headline: SDP+randomized rounding reduces bottleneck time by
 63-91% vs HEFT and 41-84% vs TP-HEFT across N_T.  We report the same
 curves (mean over seeds) plus the Eq. 27 upper bound.
 
+This benchmark is a thin preset over the scenario engine: each size is
+the registered ``fig4_nt{N}`` scenario (``repro.scenarios.presets``) run
+across seeds with paper-sized sampling budgets — the same records a
+``scripts/sweep.py --preset fig4_nt10 --seeds 5`` run would produce.
+
 Beyond-paper: ``scaling`` extends the same comparison past the paper's
 N_T <= 30 into the {32, 64, 128}-task regime that the matrix-free
 ``FactoredBQP`` representation unlocks (the dense stacks for N_T=128
@@ -14,35 +19,29 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Timer, emit, paper_instance, run_methods
+from benchmarks.common import Timer, emit, paper_instance, scenario_rows
 from repro.core import SDPOptions, schedule
 
 
 def run(quick: bool = True) -> dict:
     sizes = (5, 10, 15) if quick else (5, 10, 15, 20, 25, 30)
-    seeds = range(2) if quick else range(5)
+    seeds = 2 if quick else 5
     num_samples = 1500 if quick else 4000
     sdp_iters = 2500 if quick else 6000
 
     rows = {}
     with Timer() as t:
         for n in sizes:
-            acc: dict[str, list] = {}
-            for seed in seeds:
-                tg, cg = paper_instance(seed, n)
-                res = run_methods(
-                    tg, cg, num_samples=num_samples, sdp_iters=sdp_iters,
-                    seed=seed,
-                )
-                for k, v in res.items():
-                    acc.setdefault(k, []).append(v)
-            rows[n] = {k: float(np.mean(v)) for k, v in acc.items()}
+            rows[n] = scenario_rows(
+                f"fig4_nt{n}", seeds,
+                num_samples=num_samples, sdp_iters=sdp_iters,
+            )
 
     red_heft = [1 - rows[n]["sdp"] / rows[n]["heft"] for n in sizes]
     red_tp = [1 - rows[n]["sdp"] / rows[n]["tp_heft"] for n in sizes]
     emit(
         "fig4_bottleneck_vs_tasks",
-        t.seconds * 1e6 / max(len(sizes) * len(list(seeds)), 1),
+        t.seconds * 1e6 / max(len(sizes) * seeds, 1),
         f"reduction_vs_heft={min(red_heft):.0%}..{max(red_heft):.0%};"
         f"vs_tp_heft={min(red_tp):.0%}..{max(red_tp):.0%}",
     )

@@ -6,7 +6,7 @@ per-round bottleneck of HEFT / TP-HEFT / SDP-naive / SDP-randomized plus
 the learning curve (accuracy rises while SDP executes rounds fastest).
 
 The FL engine itself runs on the stacked device-resident backend
-(DESIGN.md §7); ``sweep()`` records rounds/sec of the stacked engine vs
+(DESIGN.md §8); ``sweep()`` records rounds/sec of the stacked engine vs
 the per-user reference loop at N_T ∈ {10, 32, 64, 128} into
 ``BENCH_gossip_fl.json``, and ``stacked_smoke()`` is the CI check that the
 single-jit round path took effect.
@@ -27,36 +27,42 @@ from repro.core.graphs import gossip_task_graph
 from repro.data.synthetic import image_dataset
 from repro.fl.cnn import cnn_loss, init_cnn_params
 from repro.fl.gossip import GossipConfig, GossipTrainer
-from repro.fl.runner import FLExperiment, run_fl
 
 
 def run(quick: bool = True) -> dict:
+    """The §4.2 experiment as the registered ``fig6`` scenario preset.
+
+    The preset's ``FLWorkload(paper_setting=True)`` delegates instance
+    generation to ``run_fl`` (the legacy code path), so losses and
+    bottlenecks are bit-identical to the pre-engine benchmark; full mode
+    re-sizes the workload to paper settings and adds cifar10.
+    """
+    import dataclasses
+
+    from repro.scenarios import get_scenario, run_scenario
+
+    base = get_scenario("fig6")
     out = {}
     datasets = ("mnist",) if quick else ("mnist", "cifar10")
     with Timer() as t:
         for ds in datasets:
-            exp = FLExperiment(
-                dataset=ds,
-                num_users=10,
-                num_machines=4,
-                degree_low=6,
-                degree_high=7,
+            fl = dataclasses.replace(
+                base.fl, dataset=ds,
                 rounds=3 if quick else 10,
                 num_samples=1024 if quick else 4096,
-                backend="stacked",
-                gossip=GossipConfig(local_steps=2 if quick else 4, batch_size=32),
+                local_steps=2 if quick else 4,
             )
-            out[ds] = run_fl(
-                exp, methods=("heft", "tp_heft", "sdp_naive", "sdp")
-            )
+            sc = dataclasses.replace(base, name=f"fig6_{ds}", fl=fl)
+            out[ds] = run_scenario(sc, quick=quick)
     ds0 = datasets[0]
-    b = out[ds0]["bottleneck_per_round"]
+    fl0 = out[ds0]["fl"]
+    b = fl0["bottleneck_per_round"]
     emit(
         "fig6_gossip_fl",
         t.seconds * 1e6 / len(datasets),
-        f"dataset={ds0};backend={out[ds0]['backend']};"
+        f"dataset={ds0};backend={fl0['backend']};"
         f"bottleneck_sdp={b['sdp']:.3f};heft={b['heft']:.3f};"
-        f"acc_final={out[ds0]['history'][-1]['accuracy_user0']:.2f}",
+        f"acc_final={fl0['accuracy_user0'][-1]:.2f}",
     )
     return out
 
@@ -189,9 +195,9 @@ def main(quick: bool = True):
     out = run(quick)
     for ds, res in out.items():
         print(f"# {ds}: bottleneck/round " + ", ".join(
-            f"{m}={v:.3f}" for m, v in res["bottleneck_per_round"].items()
+            f"{m}={v:.3f}" for m, v in res["fl"]["bottleneck_per_round"].items()
         ))
-        accs = [h["accuracy_user0"] for h in res["history"]]
+        accs = res["fl"]["accuracy_user0"]
         print(f"# {ds}: accuracy " + ", ".join(f"{a:.2f}" for a in accs))
     return out
 

@@ -73,7 +73,7 @@ def main(quick: bool = True):
         f"naive_axpy_us={naive_bytes / HBM_BW * 1e6:.1f}",
     )
 
-    # all-receivers batched mix (the stacked FL exchange, DESIGN.md §7):
+    # all-receivers batched mix (the stacked FL exchange, DESIGN.md §8):
     # N_T users, out-degree-6 random scatter W (sender-normalized 1/deg
     # entries; receiver row sums vary with in-degree — same sparsity and
     # cost shape as the production mixing matrix, not its normalization),

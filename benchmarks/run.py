@@ -18,7 +18,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig4,fig5,fig6,roofline,"
-                         "kernels,scheduler")
+                         "kernels,scheduler,scenarios")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -29,6 +29,7 @@ def main() -> None:
         fig6_gossip_fl,
         kernels_bench,
         roofline,
+        scenarios_bench,
         scheduler_bench,
     )
 
@@ -39,6 +40,7 @@ def main() -> None:
         "roofline": roofline.main,
         "kernels": kernels_bench.main,
         "scheduler": scheduler_bench.main,
+        "scenarios": scenarios_bench.main,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -7,7 +7,7 @@ topology change).  Three parts:
     backends, §Perf scheduler item);
   - a scaling sweep over N_T ∈ {8, 16, 32, 64, 128}, run once per *solver*
     backend (numpy float64 host reference vs the jitted device-resident
-    jax loop, DESIGN.md §4) with identical iteration budgets so the
+    jax loop, DESIGN.md §5) with identical iteration budgets so the
     speedup is an apples-to-apples record — plus one N_T=104, N_K=16
     (n = 1664) end-to-end run on the jax backend.  Build / solve / round
     wall-clock, residuals, and peak tensor bytes are written to

@@ -1,0 +1,101 @@
+"""Docs health check: intra-repo markdown links + quickstart smoke.
+
+    PYTHONPATH=src python scripts/check_docs.py [--no-smoke]
+
+Two checks (CI job ``docs-check``; ``make docs-check``):
+
+  1. every relative link/anchor in the repo's ``*.md`` files resolves to
+     an existing file or directory — inline ``[text](target)`` links and
+     the ``path:line`` code anchors used by ``docs/equations.md`` (the
+     ``path`` part must exist and, for anchors with a line number, the
+     line must exist in the file);
+  2. ``examples/quickstart.py`` runs to completion, so the command the
+     README documents cannot rot.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", ".hypothesis"}
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# `path:line` code anchors, backtick-quoted, e.g. `src/repro/core/bqp.py:59`
+_ANCHOR = re.compile(r"`([\w./-]+\.(?:py|md|json|yml)):(\d+)`")
+
+
+def _md_files() -> list[pathlib.Path]:
+    return [
+        p for p in sorted(REPO.rglob("*.md"))
+        if not any(part in SKIP_DIRS for part in p.parts)
+    ]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in _md_files():
+        text = md.read_text()
+        rel = md.relative_to(REPO)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{rel}: broken link -> {target}")
+        for m in _ANCHOR.finditer(text):
+            path, line = m.group(1), int(m.group(2))
+            resolved = REPO / path
+            if not resolved.exists():
+                errors.append(f"{rel}: broken code anchor -> {path}:{line}")
+            elif line > len(resolved.read_text().splitlines()):
+                errors.append(
+                    f"{rel}: anchor past end of file -> {path}:{line}"
+                )
+    return errors
+
+
+def check_quickstart() -> list[str]:
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / "quickstart.py")],
+        capture_output=True,
+        text=True,
+        cwd=REPO,
+        env={**__import__("os").environ, "PYTHONPATH": str(REPO / "src")},
+    )
+    if proc.returncode != 0:
+        return [f"quickstart failed ({proc.returncode}):\n{proc.stderr[-2000:]}"]
+    if "SDP" not in proc.stdout:
+        return ["quickstart ran but printed no SDP summary"]
+    return []
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--no-smoke", action="store_true",
+                    help="only check links, skip running the quickstart")
+    args = ap.parse_args(argv)
+
+    errors = check_links()
+    n_md = len(_md_files())
+    print(f"checked {n_md} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken link(s)'}")
+    if not args.no_smoke and not errors:
+        errors += check_quickstart()
+        if not errors:
+            print("quickstart smoke: OK")
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

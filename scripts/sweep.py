@@ -1,0 +1,79 @@
+"""Scenario sweep CLI: run registered scenarios with resumable JSON output.
+
+    PYTHONPATH=src python scripts/sweep.py --list
+    PYTHONPATH=src python scripts/sweep.py --preset fig6
+    PYTHONPATH=src python scripts/sweep.py --preset ring_uniform,torus_cluster
+    PYTHONPATH=src python scripts/sweep.py --new-combinations --quick
+    PYTHONPATH=src python scripts/sweep.py --all --seeds 3 --out BENCH_scenarios.json
+
+The output file is rewritten after every completed scenario and already-
+recorded ``(scenario, seed, quick)`` triples are skipped on re-entry, so an
+interrupted sweep resumes where it stopped (``--no-resume`` starts over).
+Record schema: ``docs/benchmarks.md``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    what = ap.add_mutually_exclusive_group(required=True)
+    what.add_argument("--list", action="store_true",
+                      help="print registered scenarios and exit")
+    what.add_argument("--preset", default=None,
+                      help="comma-separated scenario names to run")
+    what.add_argument("--all", action="store_true",
+                      help="run every registered scenario")
+    what.add_argument("--new-combinations", action="store_true",
+                      help="run the non-figure scenario combinations")
+    ap.add_argument("--out", default="BENCH_scenarios.json",
+                    help="output JSON path (default: %(default)s)")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="run each scenario under seeds 0..N-1 (default: 1)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized sampling/iteration budgets")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore existing records in --out and start fresh")
+    args = ap.parse_args(argv)
+
+    from repro.scenarios import list_scenarios, run_sweep
+    from repro.scenarios.presets import NEW_COMBINATIONS
+
+    registry = list_scenarios()
+    if args.list:
+        for name, sc in registry.items():
+            ax = sc.axes()
+            print(f"{name:24s} {ax['topology']:12s} N_T={ax['num_tasks']:<4d} "
+                  f"N_K={ax['num_machines']:<3d} machines={ax['machine_profile']:10s} "
+                  f"delays={ax['delay_model']:9s} fl={'yes' if ax['fl'] else 'no'}")
+        return 0
+
+    if args.preset:
+        names = [n.strip() for n in args.preset.split(",") if n.strip()]
+        unknown = [n for n in names if n not in registry]
+        if unknown:
+            print(f"unknown scenario(s): {unknown}; see --list", file=sys.stderr)
+            return 2
+        base = [registry[n] for n in names]
+    elif args.new_combinations:
+        base = list(NEW_COMBINATIONS)
+    else:
+        base = list(registry.values())
+
+    scenarios = [sc.with_seed(s) for sc in base for s in range(args.seeds)]
+    payload = run_sweep(
+        scenarios,
+        out_path=args.out,
+        quick=args.quick,
+        resume=not args.no_resume,
+        progress=print,
+    )
+    print(f"{len(payload['records'])} record(s) in {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,6 @@
 """Checkpointing: atomic npz snapshots with a JSON manifest + resume.
 
-Fault-tolerance contract (DESIGN.md §7): a checkpoint is (a) written
+Fault-tolerance contract: a checkpoint is (a) written
 atomically (tmp file + rename), (b) self-describing (manifest carries the
 step, config hash, data-pipeline cursor, and schedule), (c) discoverable
 (``latest_step``), so a re-launched job — possibly with a different

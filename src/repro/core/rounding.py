@@ -8,7 +8,7 @@ Implements:
       * ``jax``   — the whole pipeline (sampling, sign folding, repair,
         batched bottleneck evaluation, arg-best selection) fused into ONE
         jitted call, so tens of thousands of samples never leave device
-        (§Perf item; DESIGN.md §5).  When the SDP solve also ran on device
+        (§Perf item; DESIGN.md §6).  When the SDP solve also ran on device
         (``SDPSolution.Y_device``), pass it via ``Y_device=`` and the
         covariance square root is taken on device as well — the Gram matrix
         never round-trips to host between solve and rounding.

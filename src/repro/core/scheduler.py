@@ -19,7 +19,7 @@ once the dense (|E|, n, n) stacks would cross ``_DENSE_BYTES_LIMIT``
 in ``Schedule.info["representation"]``.
 
 The SDP solver backend is selected the same way the rounding backend is:
-``solver_backend=`` ("auto" | "numpy" | "jax", DESIGN.md §4) — "auto"
+``solver_backend=`` ("auto" | "numpy" | "jax", DESIGN.md §5) — "auto"
 moves the Douglas-Rachford hot loop onto the JAX device once the Gram
 side crosses ``SDPOptions.jax_above``.  ``warm_start=True`` keeps a
 module-level cache of solver states keyed by the (task-graph,
@@ -84,6 +84,20 @@ def _warm_fingerprint(task_graph: TaskGraph, compute_graph: ComputeGraph) -> tup
     )
 
 
+def clear_warm_start(task_graph: TaskGraph, compute_graph: ComputeGraph) -> bool:
+    """Drop any cached solver state for this problem structure.
+
+    The fingerprint deliberately ignores weights, so a later solve of a
+    *different* instance with the same structure (e.g. the same ring
+    topology under another seed) would otherwise resume from this one's
+    iterate.  Callers that need runs reproducible from their own inputs
+    alone (the scenario engine's drift simulation) clear the entry first.
+    Returns True if an entry was dropped.
+    """
+    fp = _warm_fingerprint(task_graph, compute_graph)
+    return _WARM_STARTS.pop(fp, None) is not None
+
+
 def _pick_representation(
     task_graph: TaskGraph, compute_graph: ComputeGraph, representation: str
 ) -> str:
@@ -100,6 +114,23 @@ def _pick_representation(
 
 @dataclasses.dataclass
 class Schedule:
+    """A task→machine assignment with its exact Eq. 2 bottleneck time.
+
+    ``info`` carries method-specific diagnostics; for the sdp family:
+
+      - ``representation`` — "dense" | "factored" (auto-picked, §2 of
+        DESIGN.md) and ``solver_backend`` — "numpy" | "jax" (auto-picked
+        once the Gram side crosses ``SDPOptions.jax_above``);
+      - ``sdp_iterations`` / ``sdp_residual`` / ``sdp_converged`` /
+        ``sdp_seconds`` / ``solver_stats`` — solver observability;
+      - ``bound_certified`` and exactly ONE of ``lower_bound`` (Eq. 24 at
+        a converged solve — a true bound) or ``lower_bound_uncertified``
+        (the same value off an unconverged iterate — NOT a bound; it has
+        exceeded the achieved bottleneck at large n);
+      - ``expected_bottleneck`` (Eqs. 22–23), ``upper_bound`` (Eq. 27),
+        ``num_feasible``, ``warm_started`` — rounding diagnostics.
+    """
+
     assignment: np.ndarray
     bottleneck: float
     method: str
@@ -123,7 +154,20 @@ def schedule(
     warm_start: bool = False,
     _sdp_cache: dict | None = None,
 ) -> Schedule:
-    """Compute a task->machine assignment minimizing bottleneck time."""
+    """Compute a task->machine assignment minimizing bottleneck time.
+
+    The sdp family auto-selects its machinery unless overridden:
+    ``representation`` ("auto" picks dense vs. matrix-free by instance
+    size), ``solver_backend`` (None defers to ``sdp_options.backend``,
+    "auto" moves the solve on device past ``SDPOptions.jax_above``), and
+    ``rounding_backend`` ("jax" fuses sampling→repair→evaluation into one
+    jitted call).  ``warm_start=True`` resumes the solver from a cached
+    iterate when the (N_T, N_K, edges) structure was seen before —
+    re-schedules after weight-only changes (speed EMA updates, delay
+    drift) converge in a fraction of the cold iteration count.  See
+    ``Schedule`` for the ``info`` keys, including the certified
+    ``lower_bound`` vs ``lower_bound_uncertified`` distinction.
+    """
     rng = np.random.default_rng(seed)
     info: dict[str, Any] = {}
 

@@ -14,7 +14,7 @@ over the stacked variable  v = (vec(Y), t, s):
     f(v) = t + indicator{L v = b}       prox_f = affine projection of v - ρ·c
     g(v) = indicator{Y ⪰ 0, s >= 0}     prox_g = eigenvalue clip + relu
 
-Two constraint-operator representations (DESIGN.md §4):
+Two constraint-operator representations (DESIGN.md §5):
 
   - ``BQPData`` (dense oracle): rows assembled from the materialized Q̃
     stacks, Gram inverse precomputed — the reference path for small n.

@@ -6,7 +6,7 @@ the models it received (weighted average including its own).  Optional
 delta-compression (top-k / int8) with error feedback shrinks the gossip
 message — and therefore the scheduler's C matrix.
 
-Two interchangeable engines run the learning (DESIGN.md §7):
+Two interchangeable engines run the learning (DESIGN.md §8):
 
   - ``backend="reference"`` — the per-user Python loop: one jitted grad
     call per user per local step, edge-by-edge aggregation with
@@ -103,6 +103,14 @@ class GossipTrainer:
     ``user_params(i)`` for reading replicas, ``backend`` for the resolved
     engine, and ``last_round_dispatches`` (jitted calls issued by the last
     round — exactly 1 on the stacked path).
+
+    Backend switch: the ``backend`` constructor argument overrides
+    ``cfg.backend``; either may be "reference", "stacked", or "auto"
+    (= stacked).  Both engines produce fp32-equivalent per-round losses
+    and parameters (pinned in ``tests/test_fl.py``), so the choice is
+    purely a dispatch-cost trade-off — see DESIGN.md §8.  The stacked
+    exchange additionally picks ``cfg.mix_backend`` ("auto" = segment_sum
+    on CPU, the all-receivers Pallas kernel on accelerators).
     """
 
     def __init__(

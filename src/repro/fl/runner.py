@@ -16,7 +16,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.graphs import ComputeGraph, TaskGraph, gossip_task_graph
-from repro.core.scheduler import schedule
+from repro.core.scheduler import compare_methods
 from repro.data.synthetic import image_dataset
 from repro.fl.cnn import cnn_accuracy, cnn_loss, init_cnn_params
 from repro.fl.gossip import GossipConfig, GossipTrainer
@@ -43,12 +43,33 @@ def run_fl(
     exp: FLExperiment,
     methods: tuple[str, ...] = ("heft", "tp_heft", "sdp_naive", "sdp"),
     compute_graph: ComputeGraph | None = None,
+    task_graph: TaskGraph | None = None,
+    schedules: dict[str, Any] | None = None,
 ) -> dict[str, Any]:
+    """Train gossip FL under every scheduler and report curves + timelines.
+
+    With ``task_graph``/``compute_graph`` omitted, generates the paper's
+    §4.2 instance from ``exp.seed`` (the legacy fig6 path — the scenario
+    engine's fig6 preset delegates here unchanged).  The scenario engine
+    passes both to train the same FL workload on any topology × machine
+    profile × delay combination (``task_graph.num_tasks`` must equal
+    ``exp.num_users``), plus ``schedules`` it already computed so one
+    record never carries two disagreeing solves of the same instance.
+    """
     rng = np.random.default_rng(exp.seed)
     # paper §4.2: equal data shards -> equal p; C ~ Unif(0,1); homogeneous e
-    tg = gossip_task_graph(
-        rng, exp.num_users, degree_low=exp.degree_low, degree_high=exp.degree_high
-    )
+    if task_graph is None:
+        tg = gossip_task_graph(
+            rng, exp.num_users,
+            degree_low=exp.degree_low, degree_high=exp.degree_high,
+        )
+    else:
+        if task_graph.num_tasks != exp.num_users:
+            raise ValueError(
+                f"task_graph has {task_graph.num_tasks} tasks, "
+                f"exp.num_users is {exp.num_users}"
+            )
+        tg = task_graph
     if compute_graph is None:
         C = rng.uniform(0.0, 1.0, size=(exp.num_machines, exp.num_machines))
         np.fill_diagonal(C, 0.0)
@@ -71,14 +92,11 @@ def run_fl(
     # One shared SDP solve across the sdp-family methods, and warm-start
     # enabled so re-pilots on the same gossip topology (speed updates,
     # repeated run_fl invocations) resume from the cached iterate.
-    sdp_cache: dict = {}
-    schedules = {
-        m: schedule(
-            tg, compute_graph, m, seed=exp.seed,
-            warm_start=True, _sdp_cache=sdp_cache,
+    if schedules is None:
+        schedules = compare_methods(
+            tg, compute_graph, methods=tuple(methods),
+            seed=exp.seed, warm_start=True,
         )
-        for m in methods
-    }
     per_round_time = {
         m: round_time(tg, compute_graph, s.assignment) for m, s in schedules.items()
     }

@@ -14,7 +14,7 @@ Two entry points:
     the Σ_j (indeg_j + 1)·L ≈ (|E|+M)·L of per-edge AXPY aggregation
     (or the (2|E|+M)·L of a gather + segment_sum).  This is the
     device-resident exchange of the stacked gossip-FL engine
-    (``repro.fl.gossip``, DESIGN.md §7).
+    (``repro.fl.gossip``, DESIGN.md §8).
 
 Inputs: stacked flat params (N, L), weights (N,) or (M, N).  Grid over L
 chunks.

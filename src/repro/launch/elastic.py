@@ -37,16 +37,22 @@ class ElasticScheduler:
     reschedule_threshold: float = 0.10   # fractional bottleneck improvement
     ema_alpha: float = 0.3
     warm_start: bool = True              # reuse SDP iterates across re-solves
+    # Extra kwargs forwarded to every ``schedule()`` call (num_samples,
+    # sdp_options, ...) — the scenario engine sizes re-solves with these.
+    schedule_kwargs: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         self.machine_ids = list(range(self.compute_graph.num_machines))
-        self.current: Schedule = schedule(
-            self.task_graph, self.compute_graph, self.method, seed=self.seed,
-            warm_start=self.warm_start,
-        )
+        self.current: Schedule = self._schedule()
         self.history: list[dict] = [
             {"event": "init", "bottleneck": self.current.bottleneck}
         ]
+
+    def _schedule(self) -> Schedule:
+        return schedule(
+            self.task_graph, self.compute_graph, self.method, seed=self.seed,
+            warm_start=self.warm_start, **self.schedule_kwargs,
+        )
 
     # -- failures ----------------------------------------------------------
     def on_failure(self, machine_id: int) -> Schedule:
@@ -57,10 +63,7 @@ class ElasticScheduler:
             e=cg.e[keep], C=cg.C[np.ix_(keep, keep)]
         )
         self.machine_ids.pop(local)
-        self.current = schedule(
-            self.task_graph, self.compute_graph, self.method, seed=self.seed,
-            warm_start=self.warm_start,
-        )
+        self.current = self._schedule()
         self.history.append(
             {
                 "event": f"fail:{machine_id}",
@@ -69,6 +72,39 @@ class ElasticScheduler:
             }
         )
         return self.current
+
+    # -- delay drift ---------------------------------------------------------
+    def on_delay_update(self, C_new: np.ndarray) -> Schedule | None:
+        """Refresh the delay matrix (network drift) and maybe re-schedule.
+
+        The scenario engine's ``drift`` delay model calls this every
+        ``reschedule_every`` rounds with the current ``DelayDrift.at(r)``.
+        ``C_new`` is indexed by the ORIGINAL machine labels; after failures
+        it is subset to the surviving ``machine_ids`` here, so drift and
+        failure events compose.  Without failures the dimensions are
+        unchanged, the warm-start fingerprint still hits, and the SDP
+        re-solve resumes from the previous iterate.  The new schedule is
+        adopted only when it beats the current assignment's bottleneck
+        *under the new delays* by ``reschedule_threshold`` (migration is
+        not free).
+        """
+        cg = self.compute_graph
+        C_new = np.asarray(C_new, dtype=np.float64)
+        if C_new.shape[0] != cg.num_machines:
+            C_new = C_new[np.ix_(self.machine_ids, self.machine_ids)]
+        self.compute_graph = ComputeGraph(e=cg.e, C=C_new)
+        current_t = bottleneck_time(
+            self.task_graph, self.compute_graph, self.current.assignment
+        )
+        candidate = self._schedule()
+        if candidate.bottleneck < current_t * (1 - self.reschedule_threshold):
+            self.current = candidate
+            self.history.append(
+                {"event": "migrate", "bottleneck": candidate.bottleneck}
+            )
+            return candidate
+        self.history.append({"event": "keep", "bottleneck": current_t})
+        return None
 
     # -- stragglers ----------------------------------------------------------
     def observe_round(self, per_machine_time: np.ndarray) -> Schedule | None:
@@ -90,10 +126,7 @@ class ElasticScheduler:
         current_t = bottleneck_time(
             self.task_graph, self.compute_graph, self.current.assignment
         )
-        candidate = schedule(
-            self.task_graph, self.compute_graph, self.method, seed=self.seed,
-            warm_start=self.warm_start,
-        )
+        candidate = self._schedule()
         if candidate.bottleneck < current_t * (1 - self.reschedule_threshold):
             self.current = candidate
             self.history.append(

@@ -1,6 +1,6 @@
 """Sharding rules: FSDP x TP x SP layouts for every assigned architecture.
 
-Layout summary (see DESIGN.md §5):
+Layout summary:
   - batch dims shard over the data axes (('pod', 'data') multi-pod);
   - params: "heavy" dim FSDP-sharded over 'data' (ZeRO-3 — optimizer state
     follows for free), head/ffn/vocab dims tensor-parallel over 'model';

@@ -1,0 +1,48 @@
+"""Declarative scenario engine: topology × heterogeneity × dynamics sweeps.
+
+A scenario composes four axes — task-graph family, machine profile, delay
+model, scheduler set — plus an optional gossip-FL workload, and runs them
+through one generate → schedule → simulate → record pipeline (DESIGN.md
+§4).  Paper figures (fig4/fig5/fig6) are presets over the same engine;
+``scripts/sweep.py`` is the CLI.
+"""
+
+from repro.scenarios.engine import (
+    build_compute_graph,
+    build_task_graph,
+    run_scenario,
+    run_sweep,
+)
+from repro.scenarios.profiles import (
+    DELAY_MODELS,
+    MACHINE_PROFILES,
+    DelayDrift,
+    delay_matrix,
+    drifting_delays,
+    machine_speeds,
+)
+from repro.scenarios.spec import (
+    FLWorkload,
+    Scenario,
+    get_scenario,
+    list_scenarios,
+    register,
+)
+
+__all__ = [
+    "DELAY_MODELS",
+    "DelayDrift",
+    "FLWorkload",
+    "MACHINE_PROFILES",
+    "Scenario",
+    "build_compute_graph",
+    "build_task_graph",
+    "delay_matrix",
+    "drifting_delays",
+    "get_scenario",
+    "list_scenarios",
+    "machine_speeds",
+    "register",
+    "run_scenario",
+    "run_sweep",
+]

@@ -1,0 +1,442 @@
+"""Scenario execution: generate → schedule → simulate → record.
+
+``run_scenario`` turns one :class:`~repro.scenarios.spec.Scenario` into a
+JSON-serializable record:
+
+  1. **generate** — the task graph from the topology family
+     (``core/graphs.py``) and the compute graph from the machine profile +
+     delay model (``scenarios/profiles.py``), all from one
+     ``default_rng(scenario.seed)`` stream (so ``fig4_*`` / ``fig5_*``
+     presets reproduce ``benchmarks.common.paper_instance`` exactly);
+  2. **schedule** — every scheduler in ``scenario.schedulers`` via
+     ``core.scheduler.schedule`` (the sdp family shares one solve through
+     ``compare_methods``'s cache);
+  3. **simulate** — per-round achieved bottleneck time
+     (``fl/simulator.round_time``).  Under the ``drift`` delay model the
+     delays move every round and ``ElasticScheduler.on_delay_update``
+     offers a warm-started re-schedule every ``reschedule_every`` rounds,
+     so the record shows predicted-vs-achieved divergence and migrations;
+  4. **train** (optional) — the gossip-FL workload on the stacked engine
+     (``fl/runner.run_fl``), either on the engine's instance or — for the
+     fig6 preset — delegating generation to the legacy §4.2 path so the
+     learning curves are bit-identical to the pre-engine benchmark.
+
+``run_sweep`` executes many scenarios with resumable JSON output: the
+file is rewritten after every record and completed
+``(scenario, seed, quick)`` triples are skipped on re-entry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from typing import Callable, Iterable
+
+import numpy as np
+
+from repro.core.graphs import (
+    ComputeGraph,
+    TaskGraph,
+    erdos_renyi_task_graph,
+    gossip_task_graph,
+    layered_dag_task_graph,
+    random_task_graph,
+    ring_task_graph,
+    scale_free_task_graph,
+    small_world_task_graph,
+    torus_task_graph,
+)
+from repro.core.scheduler import compare_methods
+from repro.core.sdp import SDPOptions
+from repro.fl.simulator import round_time
+from repro.scenarios.profiles import (
+    DelayDrift,
+    delay_matrix,
+    drifting_delays,
+    machine_speeds,
+)
+from repro.scenarios.spec import Scenario
+
+_SDP_FAMILY = ("sdp", "sdp_naive", "sdp_ls")
+
+
+def budget_quick(scenario: Scenario, quick: bool) -> bool:
+    """The budget a run of ``scenario`` actually uses.
+
+    ``paper_setting`` FL scenarios always execute the legacy full-budget
+    §4.2 path (that is what makes them bit-identical to the pre-engine
+    fig6), so quick mode does not apply to them — their records carry
+    ``quick: false`` under any invocation and one record serves both
+    sweeps.
+    """
+    paper = scenario.fl is not None and scenario.fl.paper_setting
+    return bool(quick) and not paper
+
+
+def scenario_key(scenario: Scenario, quick: bool) -> tuple:
+    """The resume/dedup identity of a run: (name, seed, effective budget)."""
+    return (scenario.name, scenario.seed, budget_quick(scenario, quick))
+
+
+def record_key(rec: dict) -> tuple:
+    """The stored-record counterpart of ``scenario_key``."""
+    return (rec["scenario"], rec["seed"], rec.get("quick"))
+
+
+# ---------------------------------------------------------------------------
+# Generation
+# ---------------------------------------------------------------------------
+
+
+def build_task_graph(scenario: Scenario, rng: np.random.Generator) -> TaskGraph:
+    """Instantiate the scenario's topology family.
+
+    ``topology_params["p_sigma"]`` overrides the family's default unit
+    work with folded-normal heterogeneous work.  The ``random`` family
+    takes it natively (forwarded to ``random_task_graph``, preserving its
+    rng draw order); the other families draw the work vector after edge
+    generation.
+    """
+    tp = dict(scenario.topology_params)
+    p_sigma = tp.pop("p_sigma", None)
+    if scenario.topology == "random" and p_sigma is not None:
+        tp["p_sigma"] = float(p_sigma)
+        p_sigma = None
+    n = scenario.num_tasks
+    if scenario.topology == "ring":
+        g = ring_task_graph(n, **tp)
+    elif scenario.topology == "torus":
+        rows = int(tp.pop("rows", int(np.sqrt(n))))
+        cols = n // rows
+        if rows * cols != n:
+            raise ValueError(f"num_tasks={n} not divisible into rows={rows}")
+        g = torus_task_graph(rows, cols, **tp)
+    elif scenario.topology == "erdos_renyi":
+        g = erdos_renyi_task_graph(rng, n, **tp)
+    elif scenario.topology == "scale_free":
+        g = scale_free_task_graph(rng, n, **tp)
+    elif scenario.topology == "small_world":
+        g = small_world_task_graph(rng, n, **tp)
+    elif scenario.topology == "layered_dag":
+        layers = int(tp.pop("layers", 4))
+        if n % layers:
+            raise ValueError(f"num_tasks={n} not divisible into layers={layers}")
+        g = layered_dag_task_graph(rng, layers, n // layers, **tp)
+    elif scenario.topology == "gossip":
+        g = gossip_task_graph(rng, n, **tp)
+    elif scenario.topology == "random":
+        g = random_task_graph(rng, n, **tp)
+    else:  # pragma: no cover — Scenario.__post_init__ validates
+        raise ValueError(scenario.topology)
+    if p_sigma is not None:
+        p = np.abs(rng.normal(0.0, float(p_sigma), size=n)) + 1e-3
+        g = TaskGraph(p=p, edges=g.edges)
+    return g
+
+
+def build_compute_graph(
+    scenario: Scenario, rng: np.random.Generator
+) -> tuple[ComputeGraph, DelayDrift | None]:
+    """Machine profile + delay model -> (ComputeGraph, optional drift).
+
+    Speeds are drawn before delays (the ``paper`` × ``paper`` combination
+    therefore consumes the rng exactly like ``random_compute_graph``).
+    For ``drift`` the returned compute graph carries ``drift.at(0)``.
+    """
+    e = machine_speeds(
+        scenario.machine_profile, rng, scenario.num_machines,
+        **scenario.machine_params,
+    )
+    if scenario.delay_model == "drift":
+        drift = drifting_delays(rng, scenario.num_machines, **scenario.delay_params)
+        return ComputeGraph(e=e, C=drift.at(0)), drift
+    C = delay_matrix(
+        scenario.delay_model, rng, scenario.num_machines, **scenario.delay_params
+    )
+    return ComputeGraph(e=e, C=C), None
+
+
+# ---------------------------------------------------------------------------
+# Execution
+# ---------------------------------------------------------------------------
+
+
+def _schedule_kwargs(scenario: Scenario, quick: bool) -> dict:
+    sp = dict(scenario.schedule_params)
+    num_samples = int(sp.pop("num_samples", 512 if quick else 2000))
+    max_iters = sp.pop("max_iters", None)
+    kw = {"num_samples": num_samples, "seed": scenario.seed, **sp}
+    # An explicit sdp_options wins outright (including its iteration
+    # budget — quick mode does not second-guess explicit solver config);
+    # an explicit max_iters adjusts it rather than replacing it wholesale.
+    # The quick-mode 400-iteration default applies only when neither was
+    # given.
+    if "sdp_options" in kw:
+        if max_iters is not None:
+            kw["sdp_options"] = dataclasses.replace(
+                kw["sdp_options"], max_iters=int(max_iters)
+            )
+    else:
+        if max_iters is None and quick:
+            max_iters = 400
+        if max_iters is not None:
+            kw["sdp_options"] = SDPOptions(max_iters=int(max_iters))
+    return kw
+
+
+def _simulate_static(
+    tg: TaskGraph, cg: ComputeGraph, assignment: np.ndarray, rounds: int
+) -> dict:
+    per_round = round_time(tg, cg, assignment)
+    return {
+        "mean_round_time": per_round,
+        "total_time": per_round * rounds,
+        "num_reschedules": 0,
+        "num_migrations": 0,
+    }
+
+
+def _simulate_drift(
+    scenario: Scenario,
+    tg: TaskGraph,
+    cg: ComputeGraph,
+    drift: DelayDrift,
+    method: str,
+    kw: dict,
+):
+    """Per-round times under moving delays with periodic re-scheduling.
+
+    Returns ``(sim_record, initial Schedule)`` — the ElasticScheduler owns
+    the only solve for this method (no separate ``compare_methods`` pass),
+    re-solving warm-started on every ``on_delay_update``.  Any warm-start
+    state left by an earlier run of the same structure is cleared first so
+    the record is a function of (scenario, seed) alone.
+    """
+    from repro.core.scheduler import clear_warm_start
+    from repro.launch.elastic import ElasticScheduler
+
+    clear_warm_start(tg, cg)
+    es = ElasticScheduler(
+        tg, cg, method=method, seed=scenario.seed,
+        schedule_kwargs={k: v for k, v in kw.items() if k != "seed"},
+    )
+    initial = es.current
+    times, migrations, reschedules = [], 0, 0
+    for r in range(scenario.rounds):
+        C_r = drift.at(r)
+        if r > 0 and scenario.reschedule_every > 0 and r % scenario.reschedule_every == 0:
+            reschedules += 1
+            if es.on_delay_update(C_r) is not None:
+                migrations += 1
+        cg_r = ComputeGraph(e=cg.e, C=C_r)
+        times.append(round_time(tg, cg_r, es.current.assignment))
+    return {
+        "mean_round_time": float(np.mean(times)),
+        "total_time": float(np.sum(times)),
+        "num_reschedules": reschedules,
+        "num_migrations": migrations,
+        "round_times": [float(t) for t in times],
+    }, initial
+
+
+def _run_fl(scenario: Scenario, tg, cg, schedules=None) -> dict:
+    """Run the FL workload; ``tg``/``cg`` None = legacy §4.2 generation.
+
+    ``schedules`` hands the engine's already-computed solves through so a
+    record never carries two disagreeing schedules of one instance.
+    """
+    from repro.fl.gossip import GossipConfig
+    from repro.fl.runner import FLExperiment, run_fl
+
+    fl = scenario.fl
+    # The paper_setting path generates its own gossip graph inside run_fl:
+    # forward the scenario's degree parameters so the record's axes still
+    # describe the actual run.
+    tp = scenario.topology_params
+    exp = FLExperiment(
+        dataset=fl.dataset,
+        num_users=scenario.num_tasks,
+        num_machines=scenario.num_machines,
+        degree_low=int(tp.get("degree_low", 6)),
+        degree_high=int(tp.get("degree_high", 7)),
+        rounds=fl.rounds,
+        num_samples=fl.num_samples,
+        seed=scenario.seed,
+        backend=fl.backend,
+        gossip=GossipConfig(local_steps=fl.local_steps, batch_size=fl.batch_size),
+    )
+    return run_fl(
+        exp, methods=scenario.schedulers, compute_graph=cg, task_graph=tg,
+        schedules=schedules,
+    )
+
+
+def _fl_summary(res: dict) -> dict:
+    return {
+        "backend": res["backend"],
+        "losses": [float(h["mean_loss"]) for h in res["history"]],
+        "accuracy_user0": [float(h["accuracy_user0"]) for h in res["history"]],
+        "bottleneck_per_round": {
+            m: float(t) for m, t in res["bottleneck_per_round"].items()
+        },
+        "cumulative_time_final": {
+            m: float(v[-1]) for m, v in res["cumulative_time"].items()
+        },
+    }
+
+
+def _graph_stats(tg: TaskGraph, cg: ComputeGraph) -> dict:
+    return {
+        "num_tasks": tg.num_tasks,
+        "num_edges": len(tg.edges),
+        "constraint_edges": len(tg.constraint_edges()),
+        "is_dag": tg.validate_is_dag(),
+        "num_machines": cg.num_machines,
+        "speed_min": float(cg.e.min()),
+        "speed_max": float(cg.e.max()),
+        "delay_mean": float(cg.C[~np.eye(cg.num_machines, dtype=bool)].mean()),
+    }
+
+
+def _method_entry(s) -> dict:
+    entry: dict = {
+        "predicted_bottleneck": float(s.bottleneck),
+        "assignment": [int(a) for a in s.assignment],
+    }
+    if s.method in _SDP_FAMILY:
+        info = s.info
+        entry["sdp_converged"] = bool(info.get("sdp_converged", False))
+        entry["representation"] = info.get("representation")
+        entry["sdp_seconds"] = float(info.get("sdp_seconds", 0.0))
+        for key in ("lower_bound", "lower_bound_uncertified",
+                    "upper_bound", "expected_bottleneck"):
+            if key in info:
+                entry[key] = float(info[key])
+    return entry
+
+
+def run_scenario(scenario: Scenario, *, quick: bool = False) -> dict:
+    """Execute one scenario end to end; returns a JSON-serializable record."""
+    t0 = time.perf_counter()
+    kw = _schedule_kwargs(scenario, quick)
+    fl = scenario.fl
+
+    flres = None
+    if fl is not None and fl.paper_setting:
+        # Legacy §4.2 path: run_fl generates the instance AND schedules
+        # every method itself — reuse its schedules instead of solving a
+        # second time, and report ITS instance's stats.
+        flres = _run_fl(scenario, None, None)
+        tg, cg = flres["task_graph"], flres["compute_graph"]
+        drift = None
+        schedules = flres["schedules"]
+    else:
+        rng = np.random.default_rng(scenario.seed)
+        tg = build_task_graph(scenario, rng)
+        cg, drift = build_compute_graph(scenario, rng)
+        # Under drift each method's only solve lives in its
+        # ElasticScheduler (below); static scenarios share one SDP solve
+        # across the sdp family through compare_methods' cache.
+        schedules = None if drift is not None else compare_methods(
+            tg, cg, methods=tuple(scenario.schedulers), **kw
+        )
+
+    # An FL workload defines the round count; the simulated totals and the
+    # trainer's cumulative times then describe the same run.  (fl + drift
+    # is rejected by Scenario.__post_init__, so drift always simulates
+    # scenario.rounds.)
+    sim_rounds = fl.rounds if fl is not None else scenario.rounds
+
+    record: dict = {
+        "scenario": scenario.name,
+        "seed": scenario.seed,
+        "quick": budget_quick(scenario, quick),
+        "rounds": sim_rounds,
+        "axes": scenario.axes(),
+        "graph": _graph_stats(tg, cg),
+        "methods": {},
+    }
+
+    if drift is not None:
+        for m in scenario.schedulers:
+            sim, initial = _simulate_drift(scenario, tg, cg, drift, m, kw)
+            record["methods"][m] = {**_method_entry(initial), **sim}
+    else:
+        for m, s in schedules.items():
+            record["methods"][m] = {
+                **_method_entry(s),
+                **_simulate_static(tg, cg, s.assignment, sim_rounds),
+            }
+
+    if fl is not None:
+        if flres is None:
+            flres = _run_fl(scenario, tg, cg, schedules=schedules)
+        record["fl"] = _fl_summary(flres)
+
+    record["elapsed_seconds"] = time.perf_counter() - t0
+    return record
+
+
+# ---------------------------------------------------------------------------
+# Sweep execution (resumable)
+# ---------------------------------------------------------------------------
+
+
+def run_sweep(
+    scenarios: Iterable[Scenario],
+    out_path: str | pathlib.Path = "BENCH_scenarios.json",
+    *,
+    quick: bool = False,
+    resume: bool = True,
+    progress: Callable[[str], None] | None = None,
+) -> dict:
+    """Run scenarios in order, persisting after every record.
+
+    The output JSON (schema: ``docs/benchmarks.md``) is rewritten after
+    each scenario completes, and on re-entry records whose
+    ``(scenario, seed, quick)`` already exist in the file are skipped — a
+    killed sweep resumes where it left off, and quick-budget records never
+    masquerade as (or block) full-budget ones.  ``resume=False`` starts
+    fresh.
+    """
+    path = pathlib.Path(out_path)
+    records: list[dict] = []
+    if resume and path.exists():
+        records = json.loads(path.read_text()).get("records", [])
+    done = {record_key(r) for r in records}
+
+    payload = {"bench": "scenario_sweep", "records": records}
+    for sc in scenarios:
+        key = scenario_key(sc, quick)
+        if key in done:
+            if progress:
+                progress(f"skip {sc.name} seed={sc.seed} (already recorded)")
+            continue
+        if progress:
+            progress(f"run {sc.name} seed={sc.seed} ...")
+        rec = run_scenario(sc, quick=quick)
+        records.append(rec)
+        done.add(key)
+        _write_atomic(path, payload)
+        if progress:
+            best = min(
+                rec["methods"].items(), key=lambda kv: kv[1]["predicted_bottleneck"]
+            )
+            progress(
+                f"  {sc.name}: best={best[0]} "
+                f"bottleneck={best[1]['predicted_bottleneck']:.3f} "
+                f"({rec['elapsed_seconds']:.1f}s)"
+            )
+    _write_atomic(path, payload)
+    return payload
+
+
+def _write_atomic(path: pathlib.Path, payload: dict) -> None:
+    """Write-then-rename so a kill mid-write (the resume case this file
+    exists for) never truncates previously completed records."""
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(payload, indent=2) + "\n")
+    os.replace(tmp, path)

@@ -1,0 +1,162 @@
+"""Registered scenario presets: paper figures + new grid combinations.
+
+Importing this module populates the registry (``spec.get_scenario`` /
+``spec.list_scenarios`` trigger the import lazily).  Three groups:
+
+  - ``fig4_nt{N}`` / ``fig5_deg{L}_{H}`` — the paper's §4.1.2 sweeps as
+    single-seed scenarios.  Generation consumes the rng exactly like
+    ``benchmarks.common.paper_instance``, so per-seed bottlenecks match
+    the pre-engine figure benchmarks; the benchmarks loop seeds via
+    ``Scenario.with_seed`` and average.
+  - ``fig6`` — the §4.2 gossip-FL experiment; ``FLWorkload.paper_setting``
+    delegates instance generation to ``fl/runner.run_fl`` so the learning
+    curve is bit-identical to the legacy fig6 path.
+  - New combinations (``NEW_COMBINATIONS``) — one scenario per distinct
+    topology family crossed with heterogeneity and delay structure,
+    including a delay-drift run with mid-run re-scheduling and a gossip-FL
+    workload on a small-world graph.
+"""
+
+from __future__ import annotations
+
+from repro.scenarios.spec import FLWorkload, Scenario, register
+
+PAPER_SCHEDULERS = ("heft", "tp_heft", "sdp_naive", "sdp", "sdp_ls")
+DEFAULT_SCHEDULERS = ("sdp", "heft", "tp_heft", "random")
+
+# -- paper figure presets ----------------------------------------------------
+
+FIG4_SIZES = (5, 10, 15, 20, 25, 30)
+for _n in FIG4_SIZES:
+    register(Scenario(
+        name=f"fig4_nt{_n}",
+        topology="random",
+        num_tasks=_n,
+        num_machines=4,
+        machine_profile="paper",
+        delay_model="paper",
+        schedulers=PAPER_SCHEDULERS,
+        topology_params={"degree_low": 2, "degree_high": 4},
+    ))
+
+FIG5_DEGREES = ((2, 4), (4, 6), (6, 8), (8, 10))
+for (_dl, _dh) in FIG5_DEGREES:
+    register(Scenario(
+        name=f"fig5_deg{_dl}_{_dh}",
+        topology="random",
+        num_tasks=21,
+        num_machines=4,
+        machine_profile="paper",
+        delay_model="paper",
+        schedulers=PAPER_SCHEDULERS,
+        topology_params={"degree_low": _dl, "degree_high": _dh},
+    ))
+
+FIG6 = register(Scenario(
+    name="fig6",
+    topology="gossip",
+    num_tasks=10,
+    num_machines=4,
+    machine_profile="uniform",
+    delay_model="uniform",
+    schedulers=("heft", "tp_heft", "sdp_naive", "sdp"),
+    topology_params={"degree_low": 6, "degree_high": 7},
+    fl=FLWorkload(
+        dataset="mnist", rounds=3, local_steps=2, batch_size=32,
+        num_samples=1024, backend="stacked", paper_setting=True,
+    ),
+))
+
+# -- new topology × heterogeneity × dynamics combinations --------------------
+
+NEW_COMBINATIONS = (
+    # Baseline structured topology on a homogeneous fleet.
+    register(Scenario(
+        name="ring_uniform",
+        topology="ring",
+        num_tasks=12,
+        num_machines=4,
+        machine_profile="uniform",
+        delay_model="uniform",
+        schedulers=DEFAULT_SCHEDULERS,
+    )),
+    # 4x4 torus across two datacenter racks with a few fast machines.
+    register(Scenario(
+        name="torus_cluster",
+        topology="torus",
+        num_tasks=16,
+        num_machines=6,
+        machine_profile="bimodal",
+        delay_model="cluster",
+        schedulers=DEFAULT_SCHEDULERS,
+        topology_params={"rows": 4},
+        machine_params={"fast": 4.0, "slow": 1.0, "fast_fraction": 0.34},
+        delay_params={"clusters": 2, "intra": 0.1, "inter": 1.0},
+    )),
+    # Sparse random gossip over geographically spread edge devices.
+    register(Scenario(
+        name="er_bimodal_distance",
+        topology="erdos_renyi",
+        num_tasks=16,
+        num_machines=4,
+        machine_profile="bimodal",
+        delay_model="distance",
+        schedulers=DEFAULT_SCHEDULERS,
+        topology_params={"edge_prob": 0.15, "p_sigma": 1.0},
+    )),
+    # Hub-dominated gossip on a long-tailed heterogeneous fleet.
+    register(Scenario(
+        name="scalefree_lognormal",
+        topology="scale_free",
+        num_tasks=20,
+        num_machines=4,
+        machine_profile="lognormal",
+        delay_model="distance",
+        schedulers=DEFAULT_SCHEDULERS,
+        topology_params={"attach": 2},
+        machine_params={"sigma": 0.75},
+    )),
+    # Small-world gossip under drifting network delays: re-schedule every
+    # 4 rounds via the warm-started SDP cache.
+    register(Scenario(
+        name="smallworld_drift",
+        topology="small_world",
+        num_tasks=16,
+        num_machines=4,
+        machine_profile="uniform",
+        delay_model="drift",
+        schedulers=DEFAULT_SCHEDULERS,
+        rounds=16,
+        reschedule_every=4,
+        topology_params={"k": 4, "rewire_prob": 0.2},
+        delay_params={"base": "distance", "amplitude": 0.6, "period": 8.0},
+    )),
+    # Layered pipeline DAG on an edge/cloud split with clustered delays.
+    register(Scenario(
+        name="layered_cloud",
+        topology="layered_dag",
+        num_tasks=16,
+        num_machines=4,
+        machine_profile="bimodal",
+        delay_model="cluster",
+        schedulers=DEFAULT_SCHEDULERS,
+        topology_params={"layers": 4, "edge_prob": 0.5, "p_sigma": 1.0},
+        delay_params={"clusters": 2, "intra": 0.05, "inter": 0.8},
+    )),
+    # Gossip-FL training on a small-world topology with the engine's own
+    # instance (exercises run_fl with an injected task/compute graph).
+    register(Scenario(
+        name="smallworld_fl",
+        topology="small_world",
+        num_tasks=8,
+        num_machines=4,
+        machine_profile="uniform",
+        delay_model="uniform",
+        schedulers=("heft", "tp_heft", "sdp"),
+        topology_params={"k": 4, "rewire_prob": 0.1},
+        fl=FLWorkload(
+            dataset="mnist", rounds=2, local_steps=2, batch_size=32,
+            num_samples=512, backend="stacked",
+        ),
+    )),
+)

@@ -1,0 +1,154 @@
+"""Machine-heterogeneity profiles and delay models (scenario axes).
+
+A scenario composes a task-graph family with a *machine profile* (the
+speed vector ``e``) and a *delay model* (the pairwise delay matrix ``C``).
+Both are pure functions of an ``np.random.Generator`` so scenario records
+are reproducible from ``(scenario, seed)`` alone; the time-varying
+``drift`` model wraps a static base model in a :class:`DelayDrift` whose
+``at(round)`` yields the per-round matrix.
+
+Profiles (``machine_speeds``):
+  - ``uniform``   — homogeneous machines (``speed``, default 1).
+  - ``bimodal``   — edge/cloud split: ``ceil(fast_fraction · N_K)`` cloud
+    machines at ``fast`` speed, the rest edge devices at ``slow``.
+  - ``lognormal`` — ``e ~ LogNormal(mu, sigma)``: a long-tailed fleet.
+  - ``paper``     — the §4.1.2 setting ``e ~ |N(0, √15)|``.
+
+Delay models (``delay_matrix``):
+  - ``uniform``  — ``C ~ Unif(0, c_max)`` i.i.d. (the §4.2 FL setting).
+  - ``distance`` — machines at uniform points of the unit square,
+    ``C = base + scale · euclidean distance`` (symmetric).
+  - ``cluster``  — machines split into ``clusters`` groups; intra-cluster
+    links cost ``intra``, inter-cluster links ``inter``, with a symmetric
+    multiplicative jitter (datacenter racks / geo regions).
+  - ``paper``    — the §4.1.2 setting ``C ~ |N(0, √10)|``.
+  - ``drift``    — time-varying: a static ``base`` model modulated per
+    round (see :class:`DelayDrift`); the engine re-schedules mid-run via
+    ``ElasticScheduler.on_delay_update``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+MACHINE_PROFILES = ("uniform", "bimodal", "lognormal", "paper")
+DELAY_MODELS = ("uniform", "distance", "cluster", "paper", "drift")
+
+
+def _take(kind: str, params: dict, defaults: dict) -> dict:
+    """Resolve ``params`` against ``defaults``, rejecting unknown keys —
+    a misspelled parameter must fail loudly, not silently fall back to the
+    default while the sweep record's axes claim it was applied."""
+    unknown = set(params) - set(defaults)
+    if unknown:
+        raise ValueError(
+            f"unknown {kind} parameter(s) {sorted(unknown)}; "
+            f"accepted: {sorted(defaults)}"
+        )
+    return {k: params.get(k, v) for k, v in defaults.items()}
+
+
+def machine_speeds(
+    profile: str, rng: np.random.Generator, num_machines: int, **params
+) -> np.ndarray:
+    """Speed vector ``e`` (num_machines,) for a named heterogeneity profile."""
+    if profile == "uniform":
+        p = _take(profile, params, {"speed": 1.0})
+        return np.full(num_machines, float(p["speed"]))
+    if profile == "bimodal":
+        p = _take(profile, params,
+                  {"fast": 4.0, "slow": 1.0, "fast_fraction": 0.25})
+        n_fast = max(1, int(np.ceil(float(p["fast_fraction"]) * num_machines)))
+        e = np.full(num_machines, float(p["slow"]))
+        e[rng.choice(num_machines, size=n_fast, replace=False)] = float(p["fast"])
+        return e
+    if profile == "lognormal":
+        p = _take(profile, params, {"mu": 0.0, "sigma": 0.75})
+        return rng.lognormal(float(p["mu"]), float(p["sigma"]), size=num_machines)
+    if profile == "paper":
+        p = _take(profile, params, {"e_sigma": np.sqrt(15.0)})
+        return np.abs(rng.normal(0.0, float(p["e_sigma"]), size=num_machines)) + 1e-2
+    raise ValueError(
+        f"unknown machine profile {profile!r}; choose from {MACHINE_PROFILES}"
+    )
+
+
+def delay_matrix(
+    model: str, rng: np.random.Generator, num_machines: int, **params
+) -> np.ndarray:
+    """Delay matrix ``C`` (num_machines, num_machines), zero diagonal."""
+    m = num_machines
+    if model == "uniform":
+        p = _take(model, params, {"c_max": 1.0})
+        C = rng.uniform(0.0, float(p["c_max"]), size=(m, m))
+    elif model == "distance":
+        p = _take(model, params, {"base": 0.05, "scale": 1.0})
+        pos = rng.uniform(0.0, 1.0, size=(m, 2))
+        dist = np.linalg.norm(pos[:, None, :] - pos[None, :, :], axis=-1)
+        C = float(p["base"]) + float(p["scale"]) * dist
+    elif model == "cluster":
+        p = _take(model, params,
+                  {"clusters": 2, "intra": 0.1, "inter": 1.0, "jitter": 0.1})
+        jitter = float(p["jitter"])
+        label = rng.integers(0, int(p["clusters"]), size=m)
+        same = label[:, None] == label[None, :]
+        C = np.where(same, float(p["intra"]), float(p["inter"])).astype(np.float64)
+        if jitter > 0:
+            noise = rng.uniform(-jitter, jitter, size=(m, m))
+            noise = 0.5 * (noise + noise.T)          # keep C symmetric
+            C = C * (1.0 + noise)
+    elif model == "paper":
+        p = _take(model, params, {"c_sigma": np.sqrt(10.0)})
+        C = np.abs(rng.normal(0.0, float(p["c_sigma"]), size=(m, m)))
+    else:
+        raise ValueError(
+            f"unknown delay model {model!r}; choose from {DELAY_MODELS}"
+        )
+    np.fill_diagonal(C, 0.0)
+    return C
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayDrift:
+    """Time-varying delay: sinusoidal per-link modulation of a base matrix.
+
+    ``at(r) = base · (1 + amplitude · sin(2π r / period + phase))`` with an
+    i.i.d. per-link phase (symmetrized so symmetric bases stay symmetric),
+    clipped at zero, zero diagonal.  ``at(0) != base`` in general — the
+    engine schedules against ``at(0)`` so round 0 is consistent.
+    """
+
+    base: np.ndarray
+    amplitude: float
+    period: float
+    phase: np.ndarray
+
+    def at(self, round_idx: int) -> np.ndarray:
+        mod = 1.0 + self.amplitude * np.sin(
+            2.0 * np.pi * round_idx / self.period + self.phase
+        )
+        C = np.clip(self.base * mod, 0.0, None)
+        np.fill_diagonal(C, 0.0)
+        return C
+
+
+def drifting_delays(
+    rng: np.random.Generator, num_machines: int, **params
+) -> DelayDrift:
+    """Build the ``drift`` delay model: base model + per-link modulation."""
+    base_model = str(params.get("base", "distance"))
+    if base_model == "drift":
+        raise ValueError("drift cannot be its own base model")
+    base_params = {k: v for k, v in params.items()
+                   if k not in ("base", "amplitude", "period")}
+    base = delay_matrix(base_model, rng, num_machines, **base_params)
+    phase = rng.uniform(0.0, 2.0 * np.pi, size=(num_machines, num_machines))
+    phase = 0.5 * (phase + phase.T)
+    return DelayDrift(
+        base=base,
+        amplitude=float(params.get("amplitude", 0.5)),
+        period=float(params.get("period", 16.0)),
+        phase=phase,
+    )

@@ -1,0 +1,148 @@
+"""Scenario = topology × machine profile × delay model × schedulers (+ FL).
+
+A :class:`Scenario` is a declarative, frozen description of one experiment
+on the bottleneck-time pipeline: which task-graph family to generate
+(``core/graphs.py`` topology families), how heterogeneous the machines
+are, how delays are structured (possibly time-varying), which schedulers
+compete, and optionally a gossip-FL workload to train on the stacked
+engine.  ``repro.scenarios.engine.run_scenario`` turns one into a
+JSON-serializable record; the registry maps preset names (``fig4_nt10``,
+``fig6``, ``torus_cluster``, ...) to scenarios so paper figures and new
+sweeps share one code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from repro.core.graphs import TOPOLOGY_FAMILIES
+from repro.core.scheduler import METHODS
+from repro.scenarios.profiles import DELAY_MODELS, MACHINE_PROFILES
+
+
+@dataclasses.dataclass(frozen=True)
+class FLWorkload:
+    """Optional gossip-FL training riding on a scenario.
+
+    ``paper_setting=True`` delegates instance generation AND scheduling to
+    ``repro.fl.runner.run_fl`` (the §4.2 code path — exactly what the fig6
+    benchmark ran before the scenario engine existed): the scenario's
+    ``degree_low``/``degree_high`` topology params are forwarded, but its
+    ``machine_params``/``delay_params``/``schedule_params`` are NOT — the
+    legacy path's homogeneous machines, Unif(0,1) delays, and default
+    solver budgets are what make it bit-identical to the pre-engine fig6.
+    Otherwise the engine's (task graph, compute graph, schedules) drive
+    the trainer.
+    """
+
+    dataset: str = "mnist"
+    rounds: int = 3
+    local_steps: int = 2
+    batch_size: int = 32
+    num_samples: int = 1024
+    backend: str = "stacked"
+    paper_setting: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One point of the topology × heterogeneity × dynamics grid.
+
+    ``topology_params`` / ``machine_params`` / ``delay_params`` are passed
+    through to the corresponding generator (see ``core/graphs.py`` and
+    ``scenarios/profiles.py`` for the accepted keys); ``schedule_params``
+    tunes the scheduler call (``num_samples``, ``max_iters``).
+    ``reschedule_every`` only matters for the ``drift`` delay model: the
+    engine refreshes C and offers a warm-started re-schedule every that
+    many rounds (``ElasticScheduler.on_delay_update``).
+    """
+
+    name: str
+    topology: str
+    num_tasks: int
+    num_machines: int = 4
+    machine_profile: str = "uniform"
+    delay_model: str = "uniform"
+    schedulers: tuple[str, ...] = ("sdp", "heft", "tp_heft", "random")
+    rounds: int = 8
+    seed: int = 0
+    reschedule_every: int = 4
+    topology_params: Mapping = dataclasses.field(default_factory=dict)
+    machine_params: Mapping = dataclasses.field(default_factory=dict)
+    delay_params: Mapping = dataclasses.field(default_factory=dict)
+    schedule_params: Mapping = dataclasses.field(default_factory=dict)
+    fl: FLWorkload | None = None
+
+    def __post_init__(self):
+        if self.topology not in TOPOLOGY_FAMILIES:
+            raise ValueError(
+                f"unknown topology {self.topology!r}; "
+                f"choose from {TOPOLOGY_FAMILIES}"
+            )
+        if self.machine_profile not in MACHINE_PROFILES:
+            raise ValueError(
+                f"unknown machine profile {self.machine_profile!r}; "
+                f"choose from {MACHINE_PROFILES}"
+            )
+        if self.delay_model not in DELAY_MODELS:
+            raise ValueError(
+                f"unknown delay model {self.delay_model!r}; "
+                f"choose from {DELAY_MODELS}"
+            )
+        for m in self.schedulers:
+            if m not in METHODS:
+                raise ValueError(f"unknown scheduler {m!r}; choose from {METHODS}")
+        if self.num_tasks < 2 or self.num_machines < 2:
+            raise ValueError("need >= 2 tasks and >= 2 machines")
+        if self.fl is not None and self.delay_model == "drift":
+            raise ValueError(
+                "an FL workload cannot ride on the drift delay model: the "
+                "FL timeline assumes static delays, so one record would "
+                "describe two different runs"
+            )
+
+    def with_seed(self, seed: int) -> "Scenario":
+        return dataclasses.replace(self, seed=seed)
+
+    def axes(self) -> dict:
+        """The scenario's grid coordinates (for sweep records / --list)."""
+        return {
+            "topology": self.topology,
+            "num_tasks": self.num_tasks,
+            "num_machines": self.num_machines,
+            "machine_profile": self.machine_profile,
+            "delay_model": self.delay_model,
+            "schedulers": list(self.schedulers),
+            "fl": self.fl is not None,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Scenario] = {}
+
+
+def register(scenario: Scenario) -> Scenario:
+    """Register a scenario under its name (last registration wins)."""
+    _REGISTRY[scenario.name] = scenario
+    return scenario
+
+
+def _ensure_presets_loaded() -> None:
+    from repro.scenarios import presets  # noqa: F401  (registers on import)
+
+
+def get_scenario(name: str) -> Scenario:
+    _ensure_presets_loaded()
+    if name not in _REGISTRY:
+        known = ", ".join(sorted(_REGISTRY))
+        raise KeyError(f"unknown scenario {name!r}; registered: {known}")
+    return _REGISTRY[name]
+
+
+def list_scenarios() -> dict[str, Scenario]:
+    _ensure_presets_loaded()
+    return dict(sorted(_REGISTRY.items()))

@@ -2,7 +2,7 @@
 
 The scheduler's delay matrix is C[j,j'] = message_bytes / bandwidth, so
 compression shrinks C proportionally — ``compressed_bytes`` feeds straight
-back into re-scheduling (DESIGN.md §7).  Compression is applied to the
+back into re-scheduling (DESIGN.md §8).  Compression is applied to the
 *delta* from the previous round (error feedback keeps the residual).
 """
 

@@ -78,7 +78,7 @@ class SGDM:
 
     ``update`` is a pure pytree map, so it composes with ``jax.vmap`` /
     ``lax.scan`` — the stacked gossip engine vmaps it across users inside
-    one jitted round (DESIGN.md §7).
+    one jitted round (DESIGN.md §8).
     """
 
     learning_rate: float = 0.05

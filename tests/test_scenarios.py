@@ -1,0 +1,377 @@
+"""Scenario engine: topology invariants, profiles, presets, sweeps."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.bqp import bottleneck_time
+from repro.core.graphs import (
+    ComputeGraph,
+    erdos_renyi_task_graph,
+    layered_dag_task_graph,
+    ring_task_graph,
+    scale_free_task_graph,
+    small_world_task_graph,
+    torus_task_graph,
+)
+from repro.scenarios import (
+    DelayDrift,
+    FLWorkload,
+    Scenario,
+    delay_matrix,
+    drifting_delays,
+    get_scenario,
+    list_scenarios,
+    machine_speeds,
+    run_scenario,
+    run_sweep,
+)
+from repro.scenarios.engine import build_compute_graph, build_task_graph
+
+
+def _out_degrees(g):
+    deg = np.zeros(g.num_tasks, dtype=int)
+    for (i, _) in g.edges:
+        deg[i] += 1
+    return deg
+
+
+# ---------------------------------------------------------------------------
+# Topology families: TaskGraph invariants
+# ---------------------------------------------------------------------------
+
+
+def test_ring_degrees():
+    g = ring_task_graph(8)
+    assert np.all(_out_degrees(g) == 2)            # bidirectional
+    g1 = ring_task_graph(8, bidirectional=False)
+    assert np.all(_out_degrees(g1) == 1)
+    assert not g1.validate_is_dag()                 # a ring is a cycle
+
+
+def test_torus_degrees():
+    g = torus_task_graph(4, 4)
+    assert g.num_tasks == 16
+    assert np.all(_out_degrees(g) == 4)            # 4 lattice neighbors
+    # edge set is symmetric (every link has both directions)
+    es = set(g.edges)
+    assert all((j, i) in es for (i, j) in es)
+
+
+def test_erdos_renyi_no_self_loops_and_density():
+    rng = np.random.default_rng(0)
+    g = erdos_renyi_task_graph(rng, 20, edge_prob=0.3)
+    assert all(i != j for (i, j) in g.edges)
+    n_pairs = 20 * 19
+    assert 0.15 * n_pairs < len(g.edges) < 0.45 * n_pairs
+
+
+def test_scale_free_symmetric_with_hubs():
+    rng = np.random.default_rng(1)
+    g = scale_free_task_graph(rng, 30, attach=2)
+    es = set(g.edges)
+    assert all((j, i) in es for (i, j) in es)
+    deg = _out_degrees(g)
+    assert deg.min() >= 2                          # every vertex attaches >= 2
+    assert deg.max() >= 3 * np.median(deg)         # hubs emerge
+
+
+def test_small_world_symmetric_connected_lattice():
+    rng = np.random.default_rng(2)
+    g = small_world_task_graph(rng, 16, k=4, rewire_prob=0.2)
+    es = set(g.edges)
+    assert all((j, i) in es for (i, j) in es)
+    assert np.all(_out_degrees(g) >= 1)
+
+
+def test_layered_dag_is_dag_and_connected():
+    rng = np.random.default_rng(3)
+    g = layered_dag_task_graph(rng, 4, 4, edge_prob=0.4)
+    assert g.num_tasks == 16
+    assert g.validate_is_dag()
+    has_succ = {i for (i, _) in g.edges}
+    has_pred = {j for (_, j) in g.edges}
+    assert has_succ >= set(range(12))              # all but the last layer
+    assert has_pred >= set(range(4, 16))           # all but the first layer
+
+
+# ---------------------------------------------------------------------------
+# Machine profiles and delay models
+# ---------------------------------------------------------------------------
+
+
+def test_machine_profiles_positive_speeds():
+    rng = np.random.default_rng(4)
+    for profile in ("uniform", "bimodal", "lognormal", "paper"):
+        e = machine_speeds(profile, rng, 8)
+        assert e.shape == (8,) and np.all(e > 0), profile
+
+
+def test_bimodal_has_two_levels():
+    rng = np.random.default_rng(5)
+    e = machine_speeds("bimodal", rng, 8, fast=4.0, slow=1.0, fast_fraction=0.25)
+    assert set(np.unique(e)) == {1.0, 4.0}
+    assert np.sum(e == 4.0) == 2                   # ceil(0.25 * 8)
+
+
+@pytest.mark.parametrize("model", ["uniform", "distance", "cluster", "paper"])
+def test_delay_models_zero_diagonal_nonnegative(model):
+    rng = np.random.default_rng(6)
+    C = delay_matrix(model, rng, 6)
+    assert C.shape == (6, 6)
+    assert np.all(np.diag(C) == 0.0)
+    assert np.all(C >= 0.0)
+    ComputeGraph(e=np.ones(6), C=C)                # passes graph validation
+
+
+@pytest.mark.parametrize("model", ["distance", "cluster"])
+def test_structured_delay_models_symmetric(model):
+    rng = np.random.default_rng(7)
+    C = delay_matrix(model, rng, 6)
+    np.testing.assert_allclose(C, C.T)
+
+
+def test_profiles_reject_unknown_params():
+    """A misspelled parameter must fail loudly, not silently default."""
+    rng = np.random.default_rng(9)
+    with pytest.raises(ValueError, match="cmax"):
+        delay_matrix("uniform", rng, 4, cmax=5.0)          # typo for c_max
+    with pytest.raises(ValueError, match="e_sigma"):
+        machine_speeds("lognormal", rng, 4, e_sigma=2.0)   # wrong profile's key
+    with pytest.raises(ValueError, match="amplituud"):
+        drifting_delays(rng, 4, base="distance", amplituud=0.5)
+
+
+def test_elastic_drift_composes_with_failure():
+    """on_delay_update subsets original-label delay matrices after failures."""
+    from repro.launch.elastic import ElasticScheduler
+
+    rng = np.random.default_rng(10)
+    tg = ring_task_graph(6)
+    C = delay_matrix("distance", rng, 4)
+    es = ElasticScheduler(tg, ComputeGraph(e=np.ones(4), C=C), method="greedy")
+    es.on_failure(1)
+    drift = drifting_delays(rng, 4, base="distance")       # original labels
+    es.on_delay_update(drift.at(3))
+    assert es.compute_graph.num_machines == 3
+    expect = drift.at(3)[np.ix_([0, 2, 3], [0, 2, 3])]
+    np.testing.assert_allclose(es.compute_graph.C, expect)
+    assert np.all(es.current.assignment < 3)
+
+
+def test_delay_drift_moves_and_stays_valid():
+    rng = np.random.default_rng(8)
+    drift = drifting_delays(rng, 5, base="distance", amplitude=0.5, period=8.0)
+    assert isinstance(drift, DelayDrift)
+    C0, C3 = drift.at(0), drift.at(3)
+    for C in (C0, C3):
+        assert np.all(np.diag(C) == 0.0) and np.all(C >= 0.0)
+        np.testing.assert_allclose(C, C.T)         # symmetric base + phase
+    assert not np.allclose(C0, C3)                 # delays actually drift
+    np.testing.assert_allclose(drift.at(0), drift.at(8))   # periodic
+
+
+# ---------------------------------------------------------------------------
+# Scenario spec + engine
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_validation():
+    with pytest.raises(ValueError, match="topology"):
+        Scenario(name="x", topology="moebius", num_tasks=8)
+    with pytest.raises(ValueError, match="machine profile"):
+        Scenario(name="x", topology="ring", num_tasks=8, machine_profile="warp")
+    with pytest.raises(ValueError, match="delay model"):
+        Scenario(name="x", topology="ring", num_tasks=8, delay_model="psychic")
+    with pytest.raises(ValueError, match="scheduler"):
+        Scenario(name="x", topology="ring", num_tasks=8, schedulers=("magic",))
+    with pytest.raises(ValueError, match="drift"):
+        Scenario(name="x", topology="ring", num_tasks=8,
+                 delay_model="drift", fl=FLWorkload())
+
+
+def test_registry_has_presets():
+    names = set(list_scenarios())
+    assert {"fig6", "fig4_nt10", "fig5_deg2_4", "ring_uniform",
+            "torus_cluster", "smallworld_drift"} <= names
+    with pytest.raises(KeyError):
+        get_scenario("does_not_exist")
+
+
+@pytest.mark.parametrize("name", [
+    "ring_uniform", "torus_cluster", "er_bimodal_distance", "layered_cloud",
+])
+def test_preset_instances_valid(name):
+    """Every preset generates a valid (TaskGraph, ComputeGraph) pair."""
+    sc = get_scenario(name)
+    rng = np.random.default_rng(sc.seed)
+    tg = build_task_graph(sc, rng)
+    cg, drift = build_compute_graph(sc, rng)
+    assert tg.num_tasks == sc.num_tasks
+    assert cg.num_machines == sc.num_machines
+    assert np.all(np.diag(cg.C) == 0.0)
+    if sc.delay_model != "drift":
+        assert drift is None
+
+
+def test_preset_round_trips_all_four_schedulers():
+    """ring_uniform runs schedule() on sdp/heft/tp_heft/random end to end."""
+    sc = get_scenario("ring_uniform")
+    assert set(sc.schedulers) == {"sdp", "heft", "tp_heft", "random"}
+    rec = run_scenario(sc, quick=True)
+    rng = np.random.default_rng(sc.seed)
+    tg = build_task_graph(sc, rng)
+    cg, _ = build_compute_graph(sc, rng)
+    for m in sc.schedulers:
+        entry = rec["methods"][m]
+        a = np.asarray(entry["assignment"])
+        assert a.shape == (sc.num_tasks,)
+        assert np.all((0 <= a) & (a < sc.num_machines))
+        # predicted bottleneck is the exact Eq. 2 value of the assignment
+        np.testing.assert_allclose(
+            entry["predicted_bottleneck"], bottleneck_time(tg, cg, a)
+        )
+        # static delays: achieved == predicted every round
+        np.testing.assert_allclose(
+            entry["mean_round_time"], entry["predicted_bottleneck"]
+        )
+        assert entry["num_reschedules"] == 0
+
+
+def test_fig4_preset_matches_paper_instance():
+    """fig4_nt10 generation consumes the rng exactly like paper_instance."""
+    from benchmarks.common import paper_instance
+
+    sc = get_scenario("fig4_nt10").with_seed(7)
+    rng = np.random.default_rng(7)
+    tg = build_task_graph(sc, rng)
+    cg, _ = build_compute_graph(sc, rng)
+    tg2, cg2 = paper_instance(7, 10)
+    assert tg.edges == tg2.edges
+    np.testing.assert_allclose(tg.p, tg2.p)
+    np.testing.assert_allclose(cg.e, cg2.e)
+    np.testing.assert_allclose(cg.C, cg2.C)
+
+
+def test_drift_scenario_reschedules():
+    """Drifting delays: achieved diverges from predicted; re-schedules run."""
+    sc = Scenario(
+        name="mini_drift",
+        topology="ring",
+        num_tasks=6,
+        num_machines=3,
+        delay_model="drift",
+        delay_params={"base": "distance", "amplitude": 0.8, "period": 4.0},
+        schedulers=("greedy",),
+        rounds=8,
+        reschedule_every=2,
+        seed=1,
+    )
+    rec = run_scenario(sc, quick=True)
+    entry = rec["methods"]["greedy"]
+    assert entry["num_reschedules"] == 3           # rounds 2, 4, 6
+    times = np.asarray(entry["round_times"])
+    assert times.shape == (8,)
+    assert times.std() > 0                          # delays actually moved
+    np.testing.assert_allclose(entry["total_time"], times.sum())
+
+
+def test_drift_record_reproducible_within_process():
+    """The same drift scenario twice in one process yields the same record
+    — stale warm-start cache entries must not leak between runs."""
+    sc = Scenario(
+        name="mini_drift_sdp", topology="ring", num_tasks=6, num_machines=3,
+        delay_model="drift", delay_params={"base": "distance"},
+        schedulers=("sdp",), rounds=4, reschedule_every=2, seed=2,
+    )
+    r1 = run_scenario(sc, quick=True)
+    r2 = run_scenario(sc, quick=True)
+    e1, e2 = r1["methods"]["sdp"], r2["methods"]["sdp"]
+    assert e1["assignment"] == e2["assignment"]
+    np.testing.assert_allclose(e1["round_times"], e2["round_times"])
+
+
+def test_paper_setting_budget_independent():
+    """paper_setting runs the legacy budgets regardless of quick, so its
+    resume key (and record label) ignores the requested budget."""
+    from repro.scenarios.engine import budget_quick, scenario_key
+
+    fig6 = get_scenario("fig6")
+    assert budget_quick(fig6, True) is False
+    assert scenario_key(fig6, True) == scenario_key(fig6, False)
+    ring = get_scenario("ring_uniform")
+    assert budget_quick(ring, True) is True
+
+
+def test_fig6_preset_matches_legacy_run_fl():
+    """The fig6 preset delegates to the legacy §4.2 path: losses and
+    bottlenecks are identical to calling run_fl directly (the pre-engine
+    fig6 benchmark), at reduced size for test speed."""
+    from repro.fl.gossip import GossipConfig
+    from repro.fl.runner import FLExperiment, run_fl
+
+    base = get_scenario("fig6")
+    fl = dataclasses.replace(base.fl, rounds=2, num_samples=512)
+    sc = dataclasses.replace(base, fl=fl)
+    rec = run_scenario(sc, quick=True)
+
+    exp = FLExperiment(
+        dataset="mnist", num_users=10, num_machines=4,
+        degree_low=6, degree_high=7, rounds=2, num_samples=512,
+        backend="stacked", seed=0,
+        gossip=GossipConfig(local_steps=2, batch_size=32),
+    )
+    legacy = run_fl(exp, methods=("heft", "tp_heft", "sdp_naive", "sdp"))
+
+    legacy_losses = [h["mean_loss"] for h in legacy["history"]]
+    np.testing.assert_allclose(rec["fl"]["losses"], legacy_losses, rtol=1e-6)
+    for m, t in legacy["bottleneck_per_round"].items():
+        np.testing.assert_allclose(rec["fl"]["bottleneck_per_round"][m], t)
+
+
+def test_fl_scenario_on_engine_instance():
+    """Non-paper FL: the engine's topology/machines drive the trainer, and
+    the methods section and the FL section describe ONE set of schedules."""
+    sc = dataclasses.replace(
+        get_scenario("smallworld_fl"),
+        schedulers=("greedy",),
+        fl=FLWorkload(rounds=2, local_steps=1, batch_size=16, num_samples=256),
+    )
+    rec = run_scenario(sc, quick=True)
+    assert rec["fl"]["backend"] == "stacked"
+    assert len(rec["fl"]["losses"]) == 2
+    assert np.all(np.isfinite(rec["fl"]["losses"]))
+    assert set(rec["fl"]["bottleneck_per_round"]) == {"greedy"}
+    # one schedule per method, not an engine solve + a run_fl re-solve
+    entry = rec["methods"]["greedy"]
+    np.testing.assert_allclose(
+        entry["predicted_bottleneck"], rec["fl"]["bottleneck_per_round"]["greedy"]
+    )
+    # simulated totals use the FL round count (rec["rounds"])
+    assert rec["rounds"] == 2
+    np.testing.assert_allclose(
+        entry["total_time"], rec["fl"]["cumulative_time_final"]["greedy"]
+    )
+
+
+def test_run_sweep_resumes(tmp_path):
+    out = tmp_path / "sweep.json"
+    sc = Scenario(
+        name="mini", topology="ring", num_tasks=4, num_machines=2,
+        schedulers=("greedy",), rounds=2,
+    )
+    p1 = run_sweep([sc], out_path=out, quick=True)
+    assert len(p1["records"]) == 1
+    stamp = out.stat().st_mtime_ns
+    data = json.loads(out.read_text())
+    assert data["records"][0]["scenario"] == "mini"
+
+    # second entry with a new seed appends; the completed record is skipped
+    p2 = run_sweep([sc, sc.with_seed(1)], out_path=out, quick=True)
+    assert [(r["scenario"], r["seed"]) for r in p2["records"]] == [
+        ("mini", 0), ("mini", 1)
+    ]
+    assert json.loads(out.read_text())["records"][0] == p1["records"][0]
+    assert out.stat().st_mtime_ns != stamp
