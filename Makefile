@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke ci docs-check bench-scheduler bench-gossip bench-scenarios
+.PHONY: test smoke ci docs-check bench-scheduler bench-gossip bench-scenarios bench-async
 
 # Tier-1 verification (ROADMAP.md)
 test:
@@ -10,8 +10,11 @@ test:
 # Fast scheduler smoke benchmark: small-instance backends + a two-point
 # scaling sweep exercising both the dense and the factored representation,
 # plus the jax-solver smoke (asserts the device SDP path didn't silently
-# fall back to numpy) and the stacked-gossip smoke (a 2-round stacked MNIST
-# gossip run asserting the single-jit round path took effect).
+# fall back to numpy), the stacked-gossip smoke (a 2-round stacked MNIST
+# gossip run asserting the single-jit round path took effect), and the
+# sync-equivalence smoke (asserts the event engine's sync semantics still
+# reproduces Eq. 2 round times to 1e-9 — the engine cannot drift from the
+# paper's model).
 smoke:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.small_instance_backends(quick=True); \
@@ -21,6 +24,7 @@ smoke:
 	           b._sweep_point(40, 8, max_iters=60, num_samples=256))]; \
 	b.jax_solver_smoke()"
 	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.stacked_smoke()"
+	$(PYTHON) -c "import benchmarks.async_bench as a; a.sync_equivalence_smoke()"
 
 # Docs health: intra-repo markdown links resolve and the documented
 # quickstart command still runs (see scripts/check_docs.py).
@@ -36,5 +40,8 @@ bench-gossip:
 
 bench-scenarios:
 	$(PYTHON) -c "import benchmarks.scenarios_bench as s; s.main(quick=True, resume=False)"
+
+bench-async:
+	$(PYTHON) -c "import benchmarks.async_bench as a; a.main(quick=True, resume=False)"
 
 ci: test smoke

@@ -1,0 +1,82 @@
+"""Sync-vs-async benchmark: event-engine semantics across the preset grid.
+
+Runs every scenario in ``repro.scenarios.presets.ASYNC_COMBINATIONS``
+(``async`` and ``overlap`` execution over the sdp/heft/tp_heft family)
+through ``run_sweep`` into ``BENCH_scenarios.json``.  Each record carries
+the synchronous ``predicted_bottleneck`` (Eq. 2) next to the event
+engine's steady-state ``period`` / ``throughput`` and — for async — the
+staleness metrics, so one record answers the production question the
+barrier model cannot: what does dropping the round barrier buy, and what
+does it cost in staleness.
+
+Resume semantics are ``benchmarks.common.sweep_suite``'s (shared with
+``scenarios_bench``): completed ``(scenario, seed, quick)`` records are
+kept and labeled ``cached=yes``; ``resume=False`` re-measures this
+suite's own grid points while leaving records other sweeps wrote intact.
+
+``sync_equivalence_smoke`` is the CI guard (``make smoke``): one small
+preset asserting the event engine's sync semantics still equals Eq. 2
+to 1e-9, so the engine cannot silently drift from the paper's model.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit, sweep_suite
+
+
+def sync_equivalence_smoke() -> None:
+    """Assert event-engine ``sync`` == Eq. 2 ``round_time`` on a preset."""
+    import numpy as np
+
+    from repro.core.scheduler import schedule
+    from repro.fl.simulator import round_time
+    from repro.scenarios import get_scenario
+    from repro.scenarios.engine import build_compute_graph, build_task_graph
+    from repro.sim import simulate
+
+    sc = get_scenario("ring_uniform")
+    rng = np.random.default_rng(sc.seed)
+    tg = build_task_graph(sc, rng)
+    cg, _ = build_compute_graph(sc, rng)
+    a = schedule(tg, cg, "heft").assignment
+    with Timer() as t:
+        res = simulate(tg, cg, a, 4)
+    err = float(np.max(np.abs(res.round_times - round_time(tg, cg, a))))
+    if err > 1e-9:
+        raise AssertionError(
+            f"event-engine sync drifted from Eq. 2: max round-time err {err:.3e}"
+        )
+    emit(
+        "sim_sync_equivalence",
+        t.seconds * 1e6,
+        f"preset={sc.name};max_err={err:.1e};events={res.events_processed}",
+    )
+
+
+def main(
+    quick: bool = True, out_path: str = "BENCH_scenarios.json",
+    resume: bool = True,
+) -> dict:
+    from repro.scenarios.presets import ASYNC_COMBINATIONS
+
+    def emit_row(rec, cached):
+        for m, entry in rec["methods"].items():
+            period = entry.get("period", float("nan"))
+            sync_t = entry["predicted_bottleneck"]
+            emit(
+                f"async_{rec['scenario']}_{m}",
+                rec["elapsed_seconds"] * 1e6,
+                f"exec={entry.get('execution')};sync_bottleneck={sync_t:.3f};"
+                f"period={period:.3f};speedup={sync_t / period:.2f};"
+                f"staleness={entry.get('staleness_mean', 0.0):.2f};"
+                f"cached={'yes' if cached else 'no'}",
+            )
+
+    return sweep_suite(
+        ASYNC_COMBINATIONS, emit_row, "async_sweep_total",
+        quick=quick, out_path=out_path, resume=resume,
+    )
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -52,6 +52,52 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def sweep_suite(combinations, emit_row, total_label: str, *,
+                quick: bool, out_path: str, resume: bool) -> dict:
+    """Shared scaffolding of the scenario-sweep benchmark suites.
+
+    Runs ``combinations`` through ``repro.scenarios.run_sweep`` into
+    ``out_path`` with the suites' common resume contract: records that
+    already exist are kept (and reported ``cached=True`` to
+    ``emit_row(record, cached)``); ``resume=False`` re-measures THIS
+    suite's own grid points while leaving records other sweeps wrote
+    intact.  Both ``scenarios_bench`` and ``async_bench`` are thin
+    emit-row wrappers over this, so the resume semantics cannot diverge.
+    """
+    import json
+    import pathlib
+
+    from repro.scenarios import run_sweep
+    from repro.scenarios.engine import _write_atomic, record_key, scenario_key
+
+    mine = {scenario_key(sc, quick) for sc in combinations}
+    pre: set = set()
+    path = pathlib.Path(out_path)
+    if path.exists():
+        existing = json.loads(path.read_text()).get("records", [])
+        if resume:
+            pre = {record_key(r) for r in existing}
+        else:
+            keep = [r for r in existing if record_key(r) not in mine]
+            _write_atomic(path, {"bench": "scenario_sweep", "records": keep})
+    with Timer() as t:
+        payload = run_sweep(
+            combinations, out_path=out_path, quick=quick, resume=True
+        )
+    records = [r for r in payload["records"] if record_key(r) in mine]
+    fresh = 0
+    for rec in records:
+        cached = record_key(rec) in pre
+        fresh += not cached
+        emit_row(rec, cached)
+    emit(
+        total_label,
+        t.seconds * 1e6 / max(fresh, 1),
+        f"scenarios={len(records)};fresh={fresh};out={out_path}",
+    )
+    return payload
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -18,12 +18,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig4,fig5,fig6,roofline,"
-                         "kernels,scheduler,scenarios")
+                         "kernels,scheduler,scenarios,async")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
+        async_bench,
         fig4_tasks,
         fig5_density,
         fig6_gossip_fl,
@@ -41,6 +42,7 @@ def main() -> None:
         "kernels": kernels_bench.main,
         "scheduler": scheduler_bench.main,
         "scenarios": scenarios_bench.main,
+        "async": async_bench.main,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -4,57 +4,30 @@ Runs every scenario in ``repro.scenarios.presets.NEW_COMBINATIONS``
 (schedule → simulate → bottleneck report; two of them train gossip FL)
 and records the sweep into ``BENCH_scenarios.json`` — the same file
 ``scripts/sweep.py`` writes, so an interrupted CLI sweep and this suite
-share resume state.  Records that already existed in the file are NOT
-re-measured; their rows are labeled ``cached=yes`` so stale numbers can't
-pass for fresh ones.  ``resume=False`` (``make bench-scenarios``)
-re-measures THIS suite's grid points while leaving records other sweeps
-wrote (e.g. the fig6 FL record) intact.  Quick mode uses CI-sized
-sampling budgets.
+share resume state.  Resume semantics are
+``benchmarks.common.sweep_suite``'s (shared with ``async_bench``):
+records that already existed in the file are NOT re-measured; their rows
+are labeled ``cached=yes`` so stale numbers can't pass for fresh ones.
+``resume=False`` (``make bench-scenarios``) re-measures THIS suite's
+grid points while leaving records other sweeps wrote (e.g. the fig6 FL
+record) intact.  Quick mode uses CI-sized sampling budgets.
 """
 
 from __future__ import annotations
 
-import json
-import pathlib
-
-from benchmarks.common import Timer, emit
+from benchmarks.common import emit, sweep_suite
 
 
 def main(
     quick: bool = True, out_path: str = "BENCH_scenarios.json",
     resume: bool = True,
 ) -> dict:
-    from repro.scenarios import run_sweep
-    from repro.scenarios.engine import _write_atomic, record_key, scenario_key
     from repro.scenarios.presets import NEW_COMBINATIONS
 
-    mine = {scenario_key(sc, quick) for sc in NEW_COMBINATIONS}
-    pre: set = set()
-    path = pathlib.Path(out_path)
-    if path.exists():
-        existing = json.loads(path.read_text()).get("records", [])
-        if resume:
-            pre = {record_key(r) for r in existing}
-        else:
-            # Re-measure this suite's own grid points; records other
-            # sweeps wrote (fig6, CLI presets) are not this target's to
-            # destroy.
-            keep = [r for r in existing if record_key(r) not in mine]
-            _write_atomic(path, {"bench": "scenario_sweep", "records": keep})
-    with Timer() as t:
-        payload = run_sweep(
-            NEW_COMBINATIONS, out_path=out_path, quick=quick, resume=True
-        )
-    # The resumed file may hold records from other sweeps (CLI presets,
-    # other budgets); report only this suite's own grid points.
-    records = [r for r in payload["records"] if record_key(r) in mine]
-    fresh = 0
-    for rec in records:
+    def emit_row(rec, cached):
         methods = rec["methods"]
         best = min(methods, key=lambda m: methods[m]["predicted_bottleneck"])
         sdp = methods.get("sdp", {})
-        cached = record_key(rec) in pre
-        fresh += not cached
         emit(
             f"scenario_{rec['scenario']}",
             rec["elapsed_seconds"] * 1e6,
@@ -63,12 +36,11 @@ def main(
             f"fl={'yes' if rec.get('fl') else 'no'};"
             f"cached={'yes' if cached else 'no'}",
         )
-    emit(
-        "scenario_sweep_total",
-        t.seconds * 1e6 / max(fresh, 1),
-        f"scenarios={len(records)};fresh={fresh};out={out_path}",
+
+    return sweep_suite(
+        NEW_COMBINATIONS, emit_row, "scenario_sweep_total",
+        quick=quick, out_path=out_path, resume=resume,
     )
-    return payload
 
 
 if __name__ == "__main__":

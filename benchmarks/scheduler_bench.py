@@ -21,7 +21,9 @@ topology change).  Three parts:
 Bound reporting: ``lower_bound`` is recorded only when the solve converged
 (Eq. 24 certifies nothing at an unconverged iterate — at n=1664 the
 iterate's value once exceeded the achieved bottleneck by ~10x); otherwise
-the value goes under ``lower_bound_uncertified``.
+the value goes under ``lower_bound_uncertified``.  Either key carries the
+SOLVER's value; the rounding pass's own Eq. 24 re-evaluation is recorded
+separately as ``rounding_lower_bound`` (mirrors ``Schedule.info``).
 """
 
 from __future__ import annotations
@@ -104,9 +106,12 @@ def _sweep_point(
         "num_feasible": res.num_feasible,
         "rounding_backend": backend,
     }
-    # Eq. 24 certifies a bound only at the converged optimum.
+    # Eq. 24 certifies a bound only at the converged optimum; the bound
+    # key carries the SOLVER's value, the rounding pass's re-evaluation
+    # (device fp32 on the jax backend) rides alongside.
     bound_key = "lower_bound" if sol.converged else "lower_bound_uncertified"
-    row[bound_key] = res.lower_bound
+    row[bound_key] = sol.lower_bound
+    row["rounding_lower_bound"] = res.lower_bound
     if solver_backend == "jax":
         row["eig_full"] = sol.stats.get("eig_full")
         row["eig_partial"] = sol.stats.get("eig_partial")

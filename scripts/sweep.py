@@ -4,6 +4,7 @@
     PYTHONPATH=src python scripts/sweep.py --preset fig6
     PYTHONPATH=src python scripts/sweep.py --preset ring_uniform,torus_cluster
     PYTHONPATH=src python scripts/sweep.py --new-combinations --quick
+    PYTHONPATH=src python scripts/sweep.py --async-combinations --quick
     PYTHONPATH=src python scripts/sweep.py --all --seeds 3 --out BENCH_scenarios.json
 
 The output file is rewritten after every completed scenario and already-
@@ -29,6 +30,8 @@ def main(argv: list[str] | None = None) -> int:
                       help="run every registered scenario")
     what.add_argument("--new-combinations", action="store_true",
                       help="run the non-figure scenario combinations")
+    what.add_argument("--async-combinations", action="store_true",
+                      help="run the async/overlap event-engine combinations")
     ap.add_argument("--out", default="BENCH_scenarios.json",
                     help="output JSON path (default: %(default)s)")
     ap.add_argument("--seeds", type=int, default=1,
@@ -40,7 +43,7 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     from repro.scenarios import list_scenarios, run_sweep
-    from repro.scenarios.presets import NEW_COMBINATIONS
+    from repro.scenarios.presets import ASYNC_COMBINATIONS, NEW_COMBINATIONS
 
     registry = list_scenarios()
     if args.list:
@@ -48,7 +51,8 @@ def main(argv: list[str] | None = None) -> int:
             ax = sc.axes()
             print(f"{name:24s} {ax['topology']:12s} N_T={ax['num_tasks']:<4d} "
                   f"N_K={ax['num_machines']:<3d} machines={ax['machine_profile']:10s} "
-                  f"delays={ax['delay_model']:9s} fl={'yes' if ax['fl'] else 'no'}")
+                  f"delays={ax['delay_model']:9s} exec={ax['execution']:7s} "
+                  f"fl={'yes' if ax['fl'] else 'no'}")
         return 0
 
     if args.preset:
@@ -60,6 +64,8 @@ def main(argv: list[str] | None = None) -> int:
         base = [registry[n] for n in names]
     elif args.new_combinations:
         base = list(NEW_COMBINATIONS)
+    elif args.async_combinations:
+        base = list(ASYNC_COMBINATIONS)
     else:
         base = list(registry.values())
 

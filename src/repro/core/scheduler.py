@@ -28,10 +28,12 @@ after incremental topology changes (speed EMA updates, elastic
 re-scheduling) resume from the previous (Y, t, s) iterate instead of the
 identity.
 
-``Schedule.info`` reports the Eq. 24 value as ``lower_bound`` only when
-the solve converged (``bound_certified``); an unconverged iterate's value
-appears as ``lower_bound_uncertified`` instead — it is *not* a bound and
-has historically exceeded the achieved bottleneck at large n.
+``Schedule.info`` reports the solver's Eq. 24 value as ``lower_bound``
+only when the solve converged (``bound_certified``); an unconverged
+iterate's value appears as ``lower_bound_uncertified`` instead — it is
+*not* a bound and has historically exceeded the achieved bottleneck at
+large n.  The rounding pass's own Eq. 24 re-evaluation is reported
+separately as ``rounding_lower_bound``.
 """
 
 from __future__ import annotations
@@ -71,7 +73,10 @@ _DENSE_BYTES_LIMIT = 100_000_000
 # fingerprint deliberately excludes weights (p, e, C): an incremental
 # topology change keeps the structure, so the previous iterate is a valid —
 # and very close — starting point.  Dimension changes (machine failure)
-# change the fingerprint and cold-start naturally.
+# change the fingerprint and cold-start naturally.  True LRU: hits move
+# the entry to the end of the (insertion-ordered) dict, and eviction pops
+# the front — a hot fingerprint re-used on every re-solve survives while
+# stale ones age out.
 _WARM_STARTS: dict[tuple, dict] = {}
 _WARM_STARTS_MAX = 8
 
@@ -126,8 +131,12 @@ class Schedule:
       - ``bound_certified`` and exactly ONE of ``lower_bound`` (Eq. 24 at
         a converged solve — a true bound) or ``lower_bound_uncertified``
         (the same value off an unconverged iterate — NOT a bound; it has
-        exceeded the achieved bottleneck at large n);
+        exceeded the achieved bottleneck at large n).  Both always carry
+        the SOLVER's value; the rounding pass's re-evaluation of Eq. 24
+        on the Y it consumed (device fp32 on the jax backend) is kept
+        separately as ``rounding_lower_bound`` and never overwrites it;
       - ``expected_bottleneck`` (Eqs. 22–23), ``upper_bound`` (Eq. 27),
+        ``rounding_lower_bound`` (Eq. 24 re-evaluated at rounding),
         ``num_feasible``, ``warm_started`` — rounding diagnostics.
     """
 
@@ -187,13 +196,18 @@ def schedule(
                 opts = dataclasses.replace(opts, backend=solver_backend)
             fp = _warm_fingerprint(task_graph, compute_graph)
             ws = _WARM_STARTS.get(fp) if warm_start else None
+            if ws is not None:
+                # LRU hit: move to end now, so even if the new iterate is
+                # rejected below the hot entry keeps its recency
+                _WARM_STARTS[fp] = _WARM_STARTS.pop(fp)
             cache["sol"] = solve_sdp(cache["bqp"], opts, warm_start=ws)
             # never cache a diverged iterate — a poisoned state would make
             # every later warm re-solve NaN where a cold start recovers
             state = cache["sol"].state
             if warm_start and np.all(np.isfinite(state.get("w", np.inf))):
-                if fp not in _WARM_STARTS and len(_WARM_STARTS) >= _WARM_STARTS_MAX:
-                    _WARM_STARTS.pop(next(iter(_WARM_STARTS)))
+                if fp not in _WARM_STARTS:
+                    while len(_WARM_STARTS) >= _WARM_STARTS_MAX:
+                        _WARM_STARTS.pop(next(iter(_WARM_STARTS)))
                 _WARM_STARTS[fp] = state
         data, sol = cache["bqp"], cache["sol"]
         info.update(
@@ -225,12 +239,15 @@ def schedule(
                 backend=rounding_backend,
                 Y_device=sol.Y_device,
             )
+            # the rounding pass re-evaluates Eq. 24 on the Y it consumed
+            # (possibly on device, in fp32); keep it under its own key —
+            # it must not overwrite the solver's certified value
             info.update(
                 num_feasible=res.num_feasible,
                 expected_bottleneck=res.expected_bottleneck,
                 upper_bound=res.upper_bound,
+                rounding_lower_bound=res.lower_bound,
             )
-            info[bound_key] = res.lower_bound
             assignment = res.assignment
             if method == "sdp_ls":
                 from repro.sched.baselines import local_search_refine

@@ -1,14 +1,13 @@
 """Execution-time simulation of gossip rounds on networked machines.
 
 Bottleneck time of one round under an assignment is exactly the paper's
-Eq. (2) (``repro.core.bqp.bottleneck_time``).  The simulator adds:
-
-  - multi-round timelines (cumulative wall-clock per round),
-  - machine failures (machine disappears at a given round),
-  - stragglers (a machine's effective speed drops by a factor),
-  - communication/computation overlap (beyond-paper: the gossip send of
-    round r overlaps the local compute of round r+1, so round time is
-    max(comp, comm) instead of comp + comm per task).
+Eq. (2) (``repro.core.bqp.bottleneck_time``).  ``round_time`` is the
+analytic single-round evaluator (with a crude ``overlap`` upper-bound
+variant kept as a reference); ``timeline`` delegates multi-round runs
+with failures/slowdowns to the discrete-event engine (``repro.sim``),
+whose queue replays re-scheduling as control events — the bespoke loop
+this module used to carry.  For jitter, stragglers, pipelined overlap,
+or barrier-free async semantics, call ``repro.sim.simulate`` directly.
 """
 
 from __future__ import annotations
@@ -41,18 +40,6 @@ def round_time(
     return float(np.max(t_comp + t_comm))
 
 
-def apply_event(compute_graph: ComputeGraph, ev: SimEvent) -> ComputeGraph:
-    e = compute_graph.e.copy()
-    C = compute_graph.C.copy()
-    if ev.kind == "slowdown":
-        e[ev.machine] *= ev.factor
-        return ComputeGraph(e=e, C=C)
-    if ev.kind == "fail":
-        keep = [j for j in range(len(e)) if j != ev.machine]
-        return ComputeGraph(e=e[keep], C=C[np.ix_(keep, keep)])
-    raise ValueError(ev.kind)
-
-
 def timeline(
     task_graph: TaskGraph,
     compute_graph: ComputeGraph,
@@ -64,32 +51,40 @@ def timeline(
     """Cumulative time per round with re-scheduling on events.
 
     ``schedule_fn(task_graph, compute_graph) -> assignment`` is called at
-    round 0 and after every event (elastic re-scheduling).
+    round 0 and after every event round (elastic re-scheduling).  The
+    rounds are replayed by the discrete-event engine: failures and
+    slowdowns become ``repro.sim.ControlEvent`` entries in its queue.
+    ``overlap=True`` simulates the engine's pipelined semantics (the
+    send of round r overlapping the compute of round r+1 — a real
+    dependency model, not the old per-round ``max(comp, comm)``
+    shortcut) and is incompatible with events: pipelined machines have
+    no common barrier at which a failure could re-schedule.
     """
-    cg = compute_graph
-    assignment = schedule_fn(task_graph, cg)
-    times, cum, reschedules = [], 0.0, []
-    ev_by_round = {}
+    from repro.sim import ControlEvent, ExecutionSpec, simulate
+
+    ctrl = []
     for ev in events:
-        ev_by_round.setdefault(ev.round, []).append(ev)
-    machine_ids = list(range(cg.num_machines))   # live machine labels
-    for r in range(num_rounds):
-        if r in ev_by_round:
-            for ev in ev_by_round[r]:
-                if ev.kind == "fail":
-                    local = machine_ids.index(ev.machine)
-                    cg = apply_event(cg, SimEvent(r, "fail", local))
-                    machine_ids.pop(local)
-                else:
-                    local = machine_ids.index(ev.machine)
-                    cg = apply_event(cg, SimEvent(r, "slowdown", local, ev.factor))
-            assignment = schedule_fn(task_graph, cg)
-            reschedules.append(r)
-        cum += round_time(task_graph, cg, assignment, overlap=overlap)
-        times.append(cum)
+        if ev.kind not in ("fail", "slowdown"):
+            raise ValueError(ev.kind)
+        ctrl.append(ControlEvent(
+            round=ev.round, kind=ev.kind, machine=ev.machine,
+            factor=ev.factor,
+        ))
+    if overlap and ctrl:
+        raise ValueError(
+            "overlap timelines cannot re-schedule on events; use "
+            "repro.sim.simulate with sync semantics instead"
+        )
+    assignment = schedule_fn(task_graph, compute_graph)
+    res = simulate(
+        task_graph, compute_graph, assignment, num_rounds,
+        ExecutionSpec(semantics="overlap" if overlap else "sync"),
+        control_events=tuple(ctrl),
+        schedule_fn=lambda tg, cg, r: schedule_fn(tg, cg),
+    )
     return {
-        "cumulative_time": np.asarray(times),
-        "final_assignment": assignment,
-        "reschedule_rounds": reschedules,
-        "final_machines": machine_ids,
+        "cumulative_time": res.round_completion,
+        "final_assignment": res.assignment,
+        "reschedule_rounds": res.reschedule_rounds,
+        "final_machines": res.machine_ids,
     }

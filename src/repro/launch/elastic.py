@@ -36,6 +36,7 @@ class ElasticScheduler:
     seed: int = 0
     reschedule_threshold: float = 0.10   # fractional bottleneck improvement
     ema_alpha: float = 0.3
+    speed_clamp: float = 10.0            # max implied-speed ratio per round
     warm_start: bool = True              # reuse SDP iterates across re-solves
     # Extra kwargs forwarded to every ``schedule()`` call (num_samples,
     # sdp_options, ...) — the scenario engine sizes re-solves with these.
@@ -111,15 +112,23 @@ class ElasticScheduler:
         """Update speed estimates from measured times; maybe re-schedule.
 
         ``per_machine_time[j]`` is the measured busy time of machine j this
-        round; implied speed = assigned work / time.
+        round (e.g. a ``repro.sim`` ``SimResult.busy`` row); implied
+        speed = assigned work / time, clamped to within ``speed_clamp``×
+        of the current estimate — a loaded machine reporting a time of
+        ~0 would otherwise imply a near-infinite speed and poison the
+        EMA with one spike no later round can wash out.
         """
         cg = self.compute_graph
+        per_machine_time = np.asarray(per_machine_time, dtype=np.float64)
         loads = np.zeros(cg.num_machines)
         np.add.at(loads, self.current.assignment, self.task_graph.p)
         implied = np.where(
             per_machine_time > 0, loads / np.maximum(per_machine_time, 1e-12), cg.e
         )
         implied = np.where(loads > 0, implied, cg.e)   # idle machines: keep
+        implied = np.clip(
+            implied, cg.e / self.speed_clamp, cg.e * self.speed_clamp
+        )
         new_e = (1 - self.ema_alpha) * cg.e + self.ema_alpha * implied
         self.compute_graph = ComputeGraph(e=new_e, C=cg.C)
 

@@ -11,11 +11,16 @@ JSON-serializable record:
   2. **schedule** — every scheduler in ``scenario.schedulers`` via
      ``core.scheduler.schedule`` (the sdp family shares one solve through
      ``compare_methods``'s cache);
-  3. **simulate** — per-round achieved bottleneck time
-     (``fl/simulator.round_time``).  Under the ``drift`` delay model the
-     delays move every round and ``ElasticScheduler.on_delay_update``
-     offers a warm-started re-schedule every ``reschedule_every`` rounds,
-     so the record shows predicted-vs-achieved divergence and migrations;
+  3. **simulate** — the discrete-event engine (``repro.sim``) replays
+     the schedule under the scenario's ``execution`` semantics: ``sync``
+     reproduces Eq. 2 per round exactly, ``overlap`` pipelines sends
+     into the next round's compute, ``async`` runs barrier-free and
+     records staleness + steady-state throughput.  Under the ``drift``
+     delay model the per-round delay updates and the periodic
+     ``ElasticScheduler.on_delay_update`` consults enter the engine's
+     queue as control events, and when the scenario perturbs machines
+     (``execution_params`` jitter/stragglers) the engine's measured
+     busy times feed ``ElasticScheduler.observe_round`` every round;
   4. **train** (optional) — the gossip-FL workload on the stacked engine
      (``fl/runner.run_fl``), either on the engine's instance or — for the
      fig6 preset — delegating generation to the legacy §4.2 path so the
@@ -51,7 +56,6 @@ from repro.core.graphs import (
 )
 from repro.core.scheduler import compare_methods
 from repro.core.sdp import SDPOptions
-from repro.fl.simulator import round_time
 from repro.scenarios.profiles import (
     DelayDrift,
     delay_matrix,
@@ -59,6 +63,7 @@ from repro.scenarios.profiles import (
     machine_speeds,
 )
 from repro.scenarios.spec import Scenario
+from repro.sim import ControlEvent, simulate
 
 _SDP_FAMILY = ("sdp", "sdp_naive", "sdp_ls")
 
@@ -187,16 +192,44 @@ def _schedule_kwargs(scenario: Scenario, quick: bool) -> dict:
     return kw
 
 
-def _simulate_static(
-    tg: TaskGraph, cg: ComputeGraph, assignment: np.ndarray, rounds: int
-) -> dict:
-    per_round = round_time(tg, cg, assignment)
-    return {
-        "mean_round_time": per_round,
-        "total_time": per_round * rounds,
-        "num_reschedules": 0,
+def _sim_entry(scenario: Scenario, res) -> dict:
+    """JSON-serializable simulation fields of a ``SimResult``."""
+    entry = {
+        "execution": res.semantics,
+        "mean_round_time": float(np.mean(res.round_times)),
+        "total_time": float(res.total_time),
+        "num_reschedules": len(res.reschedule_rounds),
         "num_migrations": 0,
     }
+    if res.semantics != "sync":
+        entry["period"] = float(res.period)
+        entry["throughput"] = float(res.throughput)
+    if res.semantics == "async":
+        entry["staleness_mean"] = float(res.staleness_mean)
+        entry["staleness_max"] = int(res.staleness_max)
+        entry["staleness_per_task"] = [
+            float(s) for s in res.staleness_per_task
+        ]
+    if res.semantics != "sync" or scenario.execution_spec().perturbed:
+        entry["round_times"] = [float(t) for t in res.round_times]
+    return entry
+
+
+def _simulate_static(
+    scenario: Scenario,
+    tg: TaskGraph,
+    cg: ComputeGraph,
+    assignment: np.ndarray,
+    rounds: int,
+) -> dict:
+    """Event-engine replay of a fixed schedule (no drift, no failures).
+
+    ``sync`` with no perturbation reproduces the analytic per-round
+    Eq. 2 value exactly (achieved == predicted every round); ``overlap``
+    and ``async`` report pipelined / barrier-free timings instead.
+    """
+    res = simulate(tg, cg, assignment, rounds, scenario.execution_spec())
+    return _sim_entry(scenario, res)
 
 
 def _simulate_drift(
@@ -207,13 +240,17 @@ def _simulate_drift(
     method: str,
     kw: dict,
 ):
-    """Per-round times under moving delays with periodic re-scheduling.
+    """Event-engine run under moving delays with elastic re-scheduling.
 
     Returns ``(sim_record, initial Schedule)`` — the ElasticScheduler owns
     the only solve for this method (no separate ``compare_methods`` pass),
-    re-solving warm-started on every ``on_delay_update``.  Any warm-start
-    state left by an earlier run of the same structure is cleared first so
-    the record is a function of (scenario, seed) alone.
+    re-solving warm-started on every ``on_delay_update``.  The per-round
+    delay updates and the periodic re-schedule consults are control
+    events in the engine's queue; when the scenario perturbs machine
+    speeds, the engine's measured busy times additionally feed
+    ``observe_round`` after every barrier.  Any warm-start state left by
+    an earlier run of the same structure is cleared first so the record
+    is a function of (scenario, seed) alone.
     """
     from repro.core.scheduler import clear_warm_start
     from repro.launch.elastic import ElasticScheduler
@@ -224,22 +261,41 @@ def _simulate_drift(
         schedule_kwargs={k: v for k, v in kw.items() if k != "seed"},
     )
     initial = es.current
-    times, migrations, reschedules = [], 0, 0
-    for r in range(scenario.rounds):
-        C_r = drift.at(r)
-        if r > 0 and scenario.reschedule_every > 0 and r % scenario.reschedule_every == 0:
-            reschedules += 1
-            if es.on_delay_update(C_r) is not None:
-                migrations += 1
-        cg_r = ComputeGraph(e=cg.e, C=C_r)
-        times.append(round_time(tg, cg_r, es.current.assignment))
-    return {
-        "mean_round_time": float(np.mean(times)),
-        "total_time": float(np.sum(times)),
-        "num_reschedules": reschedules,
-        "num_migrations": migrations,
-        "round_times": [float(t) for t in times],
-    }, initial
+    events = [
+        ControlEvent(round=r, kind="delay_update", C=drift.at(r))
+        for r in range(1, scenario.rounds)
+    ]
+    if scenario.reschedule_every > 0:
+        events += [
+            ControlEvent(round=r, kind="reschedule")
+            for r in range(1, scenario.rounds)
+            if r % scenario.reschedule_every == 0
+        ]
+
+    def consult(tg_, cg_, r):
+        # cg_ carries the drift.at(r) the engine already applied; the
+        # ElasticScheduler decides adopt-vs-keep under the same delays.
+        es.on_delay_update(cg_.C)
+        return es.current.assignment
+
+    spec = scenario.execution_spec()
+    on_round_end = None
+    if spec.perturbed:
+        def on_round_end(r, busy):
+            migrated = es.observe_round(busy)
+            return None if migrated is None else migrated.assignment
+
+    res = simulate(
+        tg, cg, es.current.assignment, scenario.rounds, spec,
+        control_events=tuple(events), schedule_fn=consult,
+        on_round_end=on_round_end,
+    )
+    entry = _sim_entry(scenario, res)
+    entry["num_migrations"] = sum(
+        1 for h in es.history if h["event"] == "migrate"
+    )
+    entry["round_times"] = [float(t) for t in res.round_times]
+    return entry, initial
 
 
 def _run_fl(scenario: Scenario, tg, cg, schedules=None) -> dict:
@@ -312,7 +368,8 @@ def _method_entry(s) -> dict:
         entry["representation"] = info.get("representation")
         entry["sdp_seconds"] = float(info.get("sdp_seconds", 0.0))
         for key in ("lower_bound", "lower_bound_uncertified",
-                    "upper_bound", "expected_bottleneck"):
+                    "rounding_lower_bound", "upper_bound",
+                    "expected_bottleneck"):
             if key in info:
                 entry[key] = float(info[key])
     return entry
@@ -368,7 +425,7 @@ def run_scenario(scenario: Scenario, *, quick: bool = False) -> dict:
         for m, s in schedules.items():
             record["methods"][m] = {
                 **_method_entry(s),
-                **_simulate_static(tg, cg, s.assignment, sim_rounds),
+                **_simulate_static(scenario, tg, cg, s.assignment, sim_rounds),
             }
 
     if fl is not None:

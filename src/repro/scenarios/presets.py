@@ -15,6 +15,12 @@ Importing this module populates the registry (``spec.get_scenario`` /
     topology family crossed with heterogeneity and delay structure,
     including a delay-drift run with mid-run re-scheduling and a gossip-FL
     workload on a small-world graph.
+  - Event-engine combinations (``ASYNC_COMBINATIONS``) — the same grid
+    replayed under non-barrier execution semantics (``repro.sim``):
+    ``async`` scenarios record staleness + steady-state throughput next
+    to the sync ``predicted_bottleneck``, and one ``overlap`` scenario
+    records the pipelined period.  ``benchmarks/async_bench.py``
+    (``make bench-async``) sweeps them into ``BENCH_scenarios.json``.
 """
 
 from __future__ import annotations
@@ -158,5 +164,77 @@ NEW_COMBINATIONS = (
             dataset="mnist", rounds=2, local_steps=2, batch_size=32,
             num_samples=512, backend="stacked",
         ),
+    )),
+)
+
+# -- event-engine combinations: sync-vs-async/overlap on the same grids ------
+
+ASYNC_SCHEDULERS = ("sdp", "heft", "tp_heft")
+
+ASYNC_COMBINATIONS = (
+    # Long-tailed fleet on a ring: barrier-free execution decouples the
+    # round period from the slow links, staleness absorbs the delays.
+    register(Scenario(
+        name="ring_async",
+        topology="ring",
+        num_tasks=12,
+        num_machines=4,
+        machine_profile="lognormal",
+        delay_model="uniform",
+        schedulers=ASYNC_SCHEDULERS,
+        rounds=24,
+        execution="async",
+        execution_params={"jitter_sigma": 0.1},
+    )),
+    # Edge/cloud torus across two racks — the bimodal speeds make the
+    # fast machines run rounds ahead of the edge devices.
+    register(Scenario(
+        name="torus_cluster_async",
+        topology="torus",
+        num_tasks=16,
+        num_machines=6,
+        machine_profile="bimodal",
+        delay_model="cluster",
+        schedulers=ASYNC_SCHEDULERS,
+        rounds=24,
+        execution="async",
+        topology_params={"rows": 4},
+        machine_params={"fast": 4.0, "slow": 1.0, "fast_fraction": 0.34},
+        delay_params={"clusters": 2, "intra": 0.1, "inter": 1.0},
+        execution_params={"jitter_sigma": 0.1},
+    )),
+    # Hub-dominated gossip with stragglers: per-round 3x slowdowns hit
+    # 10% of machine-rounds, the hub tasks accumulate staleness.
+    register(Scenario(
+        name="scalefree_async",
+        topology="scale_free",
+        num_tasks=20,
+        num_machines=4,
+        machine_profile="lognormal",
+        delay_model="distance",
+        schedulers=ASYNC_SCHEDULERS,
+        rounds=24,
+        execution="async",
+        topology_params={"attach": 2},
+        execution_params={
+            "jitter_sigma": 0.15,
+            "straggler_prob": 0.1,
+            "straggler_factor": 3.0,
+        },
+    )),
+    # Pipelined (overlap) execution on the small-world grid: sends of
+    # round r overlap compute of r+1, the period drops below Eq. 2
+    # without introducing staleness.
+    register(Scenario(
+        name="smallworld_overlap",
+        topology="small_world",
+        num_tasks=16,
+        num_machines=4,
+        machine_profile="lognormal",
+        delay_model="distance",
+        schedulers=ASYNC_SCHEDULERS,
+        rounds=24,
+        execution="overlap",
+        topology_params={"k": 4, "rewire_prob": 0.2},
     )),
 )

@@ -19,6 +19,9 @@ from typing import Mapping
 from repro.core.graphs import TOPOLOGY_FAMILIES
 from repro.core.scheduler import METHODS
 from repro.scenarios.profiles import DELAY_MODELS, MACHINE_PROFILES
+from repro.sim import SEMANTICS, ExecutionSpec
+
+_EXECUTION_PARAM_KEYS = ("jitter_sigma", "straggler_prob", "straggler_factor")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +59,21 @@ class Scenario:
     ``reschedule_every`` only matters for the ``drift`` delay model: the
     engine refreshes C and offers a warm-started re-schedule every that
     many rounds (``ElasticScheduler.on_delay_update``).
+
+    ``execution`` picks the event-engine semantics the scenario is
+    simulated under (``repro.sim``): ``sync`` (Eq. 2 round barrier —
+    the default, and the only semantics compatible with ``drift`` /
+    failure control events), ``overlap`` (send/compute pipelining), or
+    ``async`` (barrier-free; records staleness + steady-state
+    throughput).  ``execution_params`` feeds the per-machine
+    perturbation model (``jitter_sigma``, ``straggler_prob``,
+    ``straggler_factor`` — scalars or per-machine sequences).  Under
+    the ``drift`` delay model with perturbations the engine's measured
+    busy times are additionally fed to
+    ``ElasticScheduler.observe_round`` after every round, closing the
+    elastic speed-estimation loop (static scenarios have no
+    ElasticScheduler in the loop — they record the noisy timings as
+    measured).
     """
 
     name: str
@@ -68,6 +86,8 @@ class Scenario:
     rounds: int = 8
     seed: int = 0
     reschedule_every: int = 4
+    execution: str = "sync"
+    execution_params: Mapping = dataclasses.field(default_factory=dict)
     topology_params: Mapping = dataclasses.field(default_factory=dict)
     machine_params: Mapping = dataclasses.field(default_factory=dict)
     delay_params: Mapping = dataclasses.field(default_factory=dict)
@@ -95,6 +115,29 @@ class Scenario:
                 raise ValueError(f"unknown scheduler {m!r}; choose from {METHODS}")
         if self.num_tasks < 2 or self.num_machines < 2:
             raise ValueError("need >= 2 tasks and >= 2 machines")
+        if self.execution not in SEMANTICS:
+            raise ValueError(
+                f"unknown execution semantics {self.execution!r}; "
+                f"choose from {SEMANTICS}"
+            )
+        unknown = set(self.execution_params) - set(_EXECUTION_PARAM_KEYS)
+        if unknown:
+            raise ValueError(
+                f"unknown execution parameter(s) {sorted(unknown)}; "
+                f"accepted: {sorted(_EXECUTION_PARAM_KEYS)}"
+            )
+        self.execution_spec()  # validate parameter values eagerly
+        if self.delay_model == "drift" and self.execution != "sync":
+            raise ValueError(
+                "the drift delay model re-schedules at round barriers, so "
+                "it requires sync execution semantics"
+            )
+        if self.fl is not None and self.execution != "sync":
+            raise ValueError(
+                "an FL workload requires sync execution semantics: the "
+                "gossip trainer runs synchronous rounds, so one record "
+                "would describe two different execution regimes"
+            )
         if self.fl is not None and self.delay_model == "drift":
             raise ValueError(
                 "an FL workload cannot ride on the drift delay model: the "
@@ -105,6 +148,23 @@ class Scenario:
     def with_seed(self, seed: int) -> "Scenario":
         return dataclasses.replace(self, seed=seed)
 
+    def execution_spec(self) -> ExecutionSpec:
+        """The event-engine spec this scenario simulates under.
+
+        Jitter/straggler draws are a pure function of the scenario seed,
+        but through a DERIVED stream ``(seed, 1)`` — reusing the bare
+        seed would replay the exact PRNG variates that generated the
+        instance (speeds, delays, topology), correlating the execution
+        noise with the heterogeneity it is supposed to perturb.
+        """
+        params = {
+            k: tuple(v) if isinstance(v, (list, tuple)) else v
+            for k, v in self.execution_params.items()
+        }
+        return ExecutionSpec(
+            semantics=self.execution, seed=(self.seed, 1), **params
+        )
+
     def axes(self) -> dict:
         """The scenario's grid coordinates (for sweep records / --list)."""
         return {
@@ -114,6 +174,7 @@ class Scenario:
             "machine_profile": self.machine_profile,
             "delay_model": self.delay_model,
             "schedulers": list(self.schedulers),
+            "execution": self.execution,
             "fl": self.fl is not None,
         }
 

@@ -1,0 +1,29 @@
+"""Discrete-event execution engine: sync / overlap / async semantics.
+
+``simulate`` replays a schedule's per-task compute/send/receive events on
+the machines (DESIGN.md §9); ``ExecutionSpec`` picks the semantics and
+the per-machine jitter/straggler model, ``ControlEvent`` injects
+failures, slowdowns, delay drift, and elastic re-schedules into the same
+queue, and ``SimResult`` carries round timings, per-machine busy times,
+staleness metrics, and steady-state throughput.
+"""
+
+from repro.sim.engine import simulate
+from repro.sim.events import (
+    CONTROL_KINDS,
+    SEMANTICS,
+    ControlEvent,
+    ExecutionSpec,
+    SimResult,
+    steady_period,
+)
+
+__all__ = [
+    "CONTROL_KINDS",
+    "ControlEvent",
+    "ExecutionSpec",
+    "SEMANTICS",
+    "SimResult",
+    "simulate",
+    "steady_period",
+]

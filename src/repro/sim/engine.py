@@ -1,0 +1,377 @@
+"""Discrete-event execution engine for scheduled iterative processes.
+
+``simulate(task_graph, compute_graph, assignment, num_rounds, spec)``
+replays the per-task compute/send/receive events of an assignment on the
+machines, under one of three execution semantics (``repro.sim.events``):
+a full round barrier (``sync`` — the paper's Eq. 2 model, pinned to
+``bqp.bottleneck_time`` in tests), send/compute pipelining without
+staleness (``overlap``), and barrier-free execution on the latest
+delivered neighbor outputs (``async`` — staleness + steady-state
+throughput instead of a bottleneck time).
+
+The data plane is a single priority queue of timestamped events:
+
+  - ``compute``: machine j finished its round-r compute (all co-located
+    tasks — Eq. 7 charges a task the whole machine load, so outputs ship
+    when the machine's queue drains);
+  - ``arrive``: one task-graph edge's output was delivered to the
+    consumer's machine (``C[m(i), m(i')]`` after the sender's compute);
+    zero-delay deliveries short-circuit the queue.
+
+Under ``sync`` the control plane shares the round structure:
+:class:`~repro.sim.events.ControlEvent` entries (machine failure,
+slowdown, delay drift, elastic re-schedule) fire at their round's
+barrier — the engine subsets/updates the live compute graph and consults
+``schedule_fn`` exactly where ``fl.simulator.timeline`` used to run its
+bespoke loop.  ``on_round_end(r, busy)`` exposes the engine-measured
+per-machine busy times after each barrier (the feed for
+``ElasticScheduler.observe_round``); returning an assignment adopts it.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core.graphs import ComputeGraph, TaskGraph
+from repro.sim.events import (
+    ControlEvent,
+    ExecutionSpec,
+    SimResult,
+    steady_period,
+)
+
+_COMPUTE, _ARRIVE = 0, 1
+
+
+class _Jitter:
+    """Per-(machine, round) compute-time multipliers.
+
+    Inactive specs (all-zero sigma and straggler probability) draw
+    nothing and return exact 1.0 factors, keeping the no-perturbation
+    path bit-identical to the analytic Eq. 2 value.
+    """
+
+    def __init__(self, spec: ExecutionSpec, num_machines: int):
+        sigma = np.asarray(spec.jitter_sigma, np.float64)
+        prob = np.asarray(spec.straggler_prob, np.float64)
+        for name, arr in (("jitter_sigma", sigma), ("straggler_prob", prob)):
+            if arr.ndim > 1 or (arr.ndim == 1 and arr.size != num_machines):
+                raise ValueError(
+                    f"per-machine {name} needs {num_machines} entries, "
+                    f"got shape {arr.shape}"
+                )
+        self.sigma = np.broadcast_to(sigma, (num_machines,)).copy()
+        self.prob = np.broadcast_to(prob, (num_machines,)).copy()
+        self.factor = float(spec.straggler_factor)
+        self.active = bool(np.any(self.sigma > 0) or np.any(self.prob > 0))
+        self.rng = np.random.default_rng(spec.seed)
+
+    def draw(self, machine_ids) -> np.ndarray:
+        k = len(machine_ids)
+        if not self.active:
+            return np.ones(k)
+        ids = np.asarray(machine_ids, dtype=np.int64)
+        f = self.rng.lognormal(0.0, self.sigma[ids])
+        straggle = self.rng.random(k) < self.prob[ids]
+        return np.where(straggle, f * self.factor, f)
+
+
+def _machine_loads(task_graph: TaskGraph, a: np.ndarray, k: int) -> np.ndarray:
+    loads = np.zeros(k)
+    np.add.at(loads, a, task_graph.p)
+    return loads
+
+
+def simulate(
+    task_graph: TaskGraph,
+    compute_graph: ComputeGraph,
+    assignment: np.ndarray,
+    num_rounds: int,
+    execution: ExecutionSpec | None = None,
+    *,
+    control_events: tuple[ControlEvent, ...] = (),
+    schedule_fn=None,
+    on_round_end=None,
+) -> SimResult:
+    """Simulate ``num_rounds`` of the assignment under ``execution``.
+
+    ``schedule_fn(task_graph, compute_graph, round_idx) -> assignment``
+    is consulted by ``fail`` / ``slowdown`` / ``reschedule`` control
+    events; ``on_round_end(round_idx, busy) -> assignment | None`` fires
+    after every sync barrier with the live machines' measured busy times.
+    Control events and round-end feedback require ``sync`` semantics —
+    the barrier is the only globally quiescent point at which changing
+    the fleet or the assignment is well defined.
+    """
+    spec = execution if execution is not None else ExecutionSpec()
+    if num_rounds < 1:
+        raise ValueError("num_rounds must be >= 1")
+    a = np.asarray(assignment, dtype=np.int64)
+    if a.shape != (task_graph.num_tasks,):
+        raise ValueError(
+            f"assignment shape {a.shape} != ({task_graph.num_tasks},)"
+        )
+    if np.any(a < 0) or np.any(a >= compute_graph.num_machines):
+        raise ValueError("assignment references unknown machines")
+    if spec.semantics == "sync":
+        return _simulate_sync(
+            task_graph, compute_graph, a, num_rounds, spec,
+            control_events, schedule_fn, on_round_end,
+        )
+    if control_events:
+        raise ValueError(
+            "control events (fail/slowdown/delay_update/reschedule) require "
+            "sync semantics — the round barrier is the only quiescent point"
+        )
+    if on_round_end is not None:
+        raise ValueError("on_round_end feedback requires sync semantics")
+    return _simulate_free(task_graph, compute_graph, a, num_rounds, spec)
+
+
+# ---------------------------------------------------------------------------
+# sync: round barrier + control plane
+# ---------------------------------------------------------------------------
+
+
+def _simulate_sync(
+    task_graph, compute_graph, a, num_rounds, spec,
+    control_events, schedule_fn, on_round_end,
+) -> SimResult:
+    k0 = compute_graph.num_machines
+    machine_ids = list(range(k0))
+    e = compute_graph.e.copy()
+    C = compute_graph.C.copy()
+    a = a.copy()
+    jitter = _Jitter(spec, k0)
+    edges = task_graph.edges
+
+    by_round: dict[int, list[ControlEvent]] = {}
+    for ev in control_events:
+        by_round.setdefault(ev.round, []).append(ev)
+
+    round_times = np.zeros(num_rounds)
+    busy = np.full((num_rounds, k0), np.nan)
+    reschedule_rounds: list[int] = []
+    events_processed = 0
+
+    for r in range(num_rounds):
+        # -- control plane: fires at the barrier opening round r --------
+        resched = False
+        for ev in by_round.get(r, ()):
+            if ev.kind == "delay_update":
+                C_new = np.asarray(ev.C, dtype=np.float64)
+                if C_new.shape[0] != len(machine_ids):
+                    C_new = C_new[np.ix_(machine_ids, machine_ids)]
+                C = C_new
+            elif ev.kind == "fail":
+                local = machine_ids.index(ev.machine)
+                keep = [j for j in range(len(machine_ids)) if j != local]
+                e = e[keep]
+                C = C[np.ix_(keep, keep)]
+                machine_ids.pop(local)
+                resched = True
+            elif ev.kind == "slowdown":
+                e = e.copy()
+                e[machine_ids.index(ev.machine)] *= ev.factor
+                resched = True
+            else:  # "reschedule" — validated by ControlEvent
+                resched = True
+        if resched:
+            if schedule_fn is None:
+                raise ValueError(
+                    "fail/slowdown/reschedule control events need schedule_fn"
+                )
+            a = np.asarray(
+                schedule_fn(task_graph, ComputeGraph(e=e, C=C), r),
+                dtype=np.int64,
+            )
+            reschedule_rounds.append(r)
+
+        # -- data plane: one queue per round, round-local clock ---------
+        k = len(machine_ids)
+        loads = _machine_loads(task_graph, a, k)
+        factors = jitter.draw(machine_ids)
+        busy_r = loads / e * factors
+        out_by_machine: list[list[int]] = [[] for _ in range(k)]
+        for (i, i2) in edges:
+            out_by_machine[a[i]].append(a[i2])
+        heap: list[tuple[float, int, int, int]] = []
+        seq = 0
+        for j in range(k):
+            heapq.heappush(heap, (busy_r[j], seq, _COMPUTE, j))
+            seq += 1
+        barrier = 0.0
+        while heap:
+            t, _, kind, j = heapq.heappop(heap)
+            events_processed += 1
+            if t > barrier:
+                barrier = t
+            if kind == _COMPUTE:
+                for dst in out_by_machine[j]:
+                    heapq.heappush(heap, (t + C[j, dst], seq, _ARRIVE, dst))
+                    seq += 1
+        round_times[r] = barrier
+        busy[r, machine_ids] = busy_r
+
+        if on_round_end is not None:
+            adopted = on_round_end(r, busy_r.copy())
+            if adopted is not None:
+                a = np.asarray(adopted, dtype=np.int64)
+
+    completion = np.cumsum(round_times)
+    n_t = task_graph.num_tasks
+    period = steady_period(completion)
+    return SimResult(
+        semantics="sync",
+        num_rounds=num_rounds,
+        round_completion=completion,
+        round_times=round_times,
+        busy=busy,
+        total_time=float(completion[-1]),
+        period=period,
+        throughput=1.0 / period if period > 0 else float("inf"),
+        staleness_mean=0.0,
+        staleness_max=0,
+        staleness_per_task=np.zeros(n_t),
+        reschedule_rounds=reschedule_rounds,
+        machine_ids=machine_ids,
+        assignment=a,
+        events_processed=events_processed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# overlap / async: free-running machines, one global queue
+# ---------------------------------------------------------------------------
+
+
+def _simulate_free(task_graph, compute_graph, a, num_rounds, spec) -> SimResult:
+    semantics = spec.semantics
+    k = compute_graph.num_machines
+    n_t = task_graph.num_tasks
+    e, C = compute_graph.e, compute_graph.C
+    jitter = _Jitter(spec, k)
+    loads = _machine_loads(task_graph, a, k)
+    base = loads / e
+
+    edges = list(task_graph.edges)
+    n_e = len(edges)
+    src_m = np.array([a[i] for (i, _) in edges], dtype=np.int64)
+    dst_m = np.array([a[j] for (_, j) in edges], dtype=np.int64)
+    dst_task = np.array([j for (_, j) in edges], dtype=np.int64)
+    out_by_machine: list[list[int]] = [[] for _ in range(k)]
+    in_by_machine: list[list[int]] = [[] for _ in range(k)]
+    for idx in range(n_e):
+        out_by_machine[src_m[idx]].append(idx)
+        in_by_machine[dst_m[idx]].append(idx)
+    in_count = np.bincount(dst_m, minlength=k) if n_e else np.zeros(k, np.int64)
+
+    heap: list[tuple[float, int, int, int, int]] = []
+    seq = 0
+    mailbox = np.full(n_e, -1, dtype=np.int64)  # freshest delivered src round
+    arrived = [defaultdict(int) for _ in range(k)]  # round -> deliveries
+    done_round = np.full(k, -1, dtype=np.int64)
+    waiting = np.full(k, -1, dtype=np.int64)  # overlap: round gated on inputs
+
+    # round completion: computes for async; computes + deliveries for overlap
+    need = k + (n_e if semantics == "overlap" else 0)
+    remaining = np.full(num_rounds, need, dtype=np.int64)
+    completion = np.zeros(num_rounds)
+    busy = np.zeros((num_rounds, k))
+    stale_sum = np.zeros(n_t)
+    stale_cnt = np.zeros(n_t)
+    stale_max = 0
+    events_processed = 0
+
+    def finish_one(r: int, t: float) -> None:
+        if r < num_rounds:
+            remaining[r] -= 1
+            if remaining[r] == 0:
+                completion[r] = t
+
+    def start(j: int, r: int, t: float) -> None:
+        nonlocal seq, stale_max
+        if semantics == "async" and r > 0:
+            # staleness vs the synchronous reference: sync round r consumes
+            # round r-1 outputs; fresher-than-sync inputs count as 0
+            for idx in in_by_machine[j]:
+                lag = (r - 1) - int(mailbox[idx])
+                if lag > 0:
+                    stale_sum[dst_task[idx]] += lag
+                    if lag > stale_max:
+                        stale_max = lag
+                stale_cnt[dst_task[idx]] += 1
+        b = base[j] * jitter.draw([j])[0] if jitter.active else base[j]
+        busy[r, j] = b
+        heapq.heappush(heap, (t + b, seq, _COMPUTE, j, r))
+        seq += 1
+
+    def deliver(idx: int, r_src: int, t: float) -> None:
+        if r_src > mailbox[idx]:
+            mailbox[idx] = r_src
+        j = int(dst_m[idx])
+        arrived[j][r_src] += 1
+        if semantics == "overlap":
+            finish_one(r_src, t)
+            nr = r_src + 1
+            if (
+                waiting[j] == nr
+                and done_round[j] == r_src
+                and arrived[j][r_src] == in_count[j]
+                and nr < num_rounds
+            ):
+                waiting[j] = -1
+                start(j, nr, t)
+
+    for j in range(k):
+        start(j, 0, 0.0)
+
+    while heap:
+        t, _, kind, x, r = heapq.heappop(heap)
+        events_processed += 1
+        if kind == _COMPUTE:
+            j = x
+            done_round[j] = r
+            for idx in out_by_machine[j]:
+                c = C[j, dst_m[idx]]
+                if c == 0.0:  # zero-delay links short-circuit the queue
+                    events_processed += 1
+                    deliver(idx, r, t)
+                else:
+                    heapq.heappush(heap, (t + c, seq, _ARRIVE, idx, r))
+                    seq += 1
+            finish_one(r, t)
+            nr = r + 1
+            if nr < num_rounds:
+                if semantics == "async":
+                    start(j, nr, t)
+                elif arrived[j][r] == in_count[j]:
+                    start(j, nr, t)
+                else:
+                    waiting[j] = nr
+        else:
+            deliver(x, r, t)
+
+    round_times = np.diff(completion, prepend=0.0)
+    period = steady_period(completion)
+    samples = stale_cnt.sum()
+    return SimResult(
+        semantics=semantics,
+        num_rounds=num_rounds,
+        round_completion=completion,
+        round_times=round_times,
+        busy=busy,
+        total_time=float(completion[-1]),
+        period=period,
+        throughput=1.0 / period if period > 0 else float("inf"),
+        staleness_mean=float(stale_sum.sum() / samples) if samples else 0.0,
+        staleness_max=int(stale_max),
+        staleness_per_task=stale_sum / np.maximum(stale_cnt, 1),
+        reschedule_rounds=[],
+        machine_ids=list(range(k)),
+        assignment=a,
+        events_processed=events_processed,
+    )

@@ -1,0 +1,195 @@
+"""Event-model vocabulary of the discrete-event execution engine.
+
+The engine (``repro.sim.engine``) simulates per-task compute/send/receive
+events on the scheduled machines.  This module holds the declarative
+pieces shared by the engine and its callers:
+
+  - :class:`ExecutionSpec` — which execution semantics to simulate
+    (``sync`` | ``overlap`` | ``async``) and the per-machine perturbation
+    model (compute-time jitter and stragglers);
+  - :class:`ControlEvent` — round-indexed control-plane events (machine
+    failure, slowdown, delay drift, elastic re-schedule) that enter the
+    same queue as the data-plane events;
+  - :class:`SimResult` — round timings, per-machine busy times, staleness
+    metrics, and steady-state throughput.
+
+Semantics (DESIGN.md §9):
+
+  ``sync``
+      Full round barrier — the paper's Eq. 2 model.  Every machine starts
+      round r+1 only once every round-r compute has finished AND every
+      round-r output has been delivered.  With no jitter the per-round
+      time equals ``bqp.bottleneck_time`` / ``fl.simulator.round_time``
+      exactly (pinned in tests).
+  ``overlap``
+      Per-machine pipelining without staleness: machine j starts round
+      r+1 as soon as (a) its own round-r compute is done and (b) all
+      round-r inputs destined to its tasks have arrived.  The gossip send
+      of round r overlaps the compute of round r+1 on the sender — this
+      subsumes the old ``round_time(..., overlap=True)`` flag with a real
+      dependency-graph model (cyclic topologies are throttled by their
+      max cycle mean, which the crude ``max(comp, comm)`` formula missed).
+  ``async``
+      Machines never block on neighbors: round r+1 compute starts right
+      after round r's, consuming the *latest delivered* neighbor outputs.
+      Communication moves off the critical path entirely; its cost
+      resurfaces as per-task staleness (rounds behind the synchronous
+      reference), and the barrier time is replaced by steady-state round
+      throughput.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SEMANTICS = ("sync", "overlap", "async")
+
+CONTROL_KINDS = ("fail", "slowdown", "delay_update", "reschedule")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """Execution semantics + per-machine perturbation model.
+
+    Attributes:
+      semantics: ``sync`` | ``overlap`` | ``async`` (see module docstring).
+      jitter_sigma: log-normal sigma of the per-round multiplicative
+        compute-time jitter; scalar or per-machine array (original machine
+        labels).  0 disables jitter (and keeps timings bit-exact).
+      straggler_prob: per-round probability that a machine straggles,
+        multiplying its compute time by ``straggler_factor``; scalar or
+        per-machine array.
+      straggler_factor: compute-time multiplier of a straggling round.
+      seed: rng stream for the jitter/straggler draws (anything
+        ``np.random.default_rng`` accepts) — simulation results are a
+        pure function of (instance, assignment, spec).  Use a stream
+        distinct from the one that generated the instance, or the
+        "noise" replays the instance's own variates.
+    """
+
+    semantics: str = "sync"
+    jitter_sigma: float | tuple = 0.0
+    straggler_prob: float | tuple = 0.0
+    straggler_factor: float = 4.0
+    seed: int | tuple = 0
+
+    def __post_init__(self):
+        if self.semantics not in SEMANTICS:
+            raise ValueError(
+                f"unknown semantics {self.semantics!r}; choose from {SEMANTICS}"
+            )
+        if np.any(np.asarray(self.jitter_sigma) < 0):
+            raise ValueError("jitter_sigma must be >= 0")
+        prob = np.asarray(self.straggler_prob)
+        if np.any(prob < 0) or np.any(prob > 1):
+            raise ValueError("straggler_prob must be in [0, 1]")
+        if self.straggler_factor <= 0:
+            raise ValueError("straggler_factor must be > 0")
+
+    @property
+    def perturbed(self) -> bool:
+        """True when any machine can deviate from its nominal speed."""
+        return bool(
+            np.any(np.asarray(self.jitter_sigma) > 0)
+            or np.any(np.asarray(self.straggler_prob) > 0)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlEvent:
+    """A control-plane event entering the simulation queue at a round start.
+
+    ``machine`` is the ORIGINAL machine label (stable across failures,
+    like ``fl.simulator.SimEvent``).  Kinds:
+
+      - ``fail``: machine leaves the fleet; triggers ``schedule_fn``.
+      - ``slowdown``: machine speed is multiplied by ``factor``;
+        triggers ``schedule_fn``.
+      - ``delay_update``: the delay matrix becomes ``C`` (indexed by
+        original labels; subset to survivors automatically).  Does NOT
+        re-schedule by itself — pair with a ``reschedule`` event.
+      - ``reschedule``: call ``schedule_fn`` (e.g. an
+        ``ElasticScheduler`` consult) and adopt its assignment.
+
+    Control events require ``sync`` semantics: they are applied at the
+    round barrier, the only globally quiescent point.
+    """
+
+    round: int
+    kind: str
+    machine: int = -1
+    factor: float = 1.0
+    C: np.ndarray | None = None
+
+    def __post_init__(self):
+        if self.kind not in CONTROL_KINDS:
+            raise ValueError(
+                f"unknown control kind {self.kind!r}; choose from {CONTROL_KINDS}"
+            )
+        if self.round < 0:
+            raise ValueError("control events fire at round starts (round >= 0)")
+        if self.kind == "delay_update" and self.C is None:
+            raise ValueError("delay_update events need the new C matrix")
+        if self.kind in ("fail", "slowdown") and self.machine < 0:
+            raise ValueError(f"{self.kind} events need a machine label >= 0")
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Output of one simulated execution.
+
+    Attributes:
+      semantics: the simulated execution semantics.
+      round_completion: (R,) wall-clock time at which round r fully
+        completed (sync: the barrier; overlap: all round-r computes done
+        and outputs delivered; async: the last machine finished round r's
+        compute).
+      round_times: (R,) completion increments — under ``sync`` with no
+        jitter each entry equals Eq. 2 exactly.
+      busy: (R, N_K) per-round busy time per machine, indexed by ORIGINAL
+        machine label; NaN once a machine has failed.  Feed rows to
+        ``ElasticScheduler.observe_round`` (live machines only).
+      total_time: completion of the final round.
+      period: steady-state time per round (second-half average of the
+        completion increments); ``throughput`` is its reciprocal.
+      staleness_mean / staleness_max: async only — average/worst number
+        of rounds a consumed neighbor output lagged the synchronous
+        reference (0 under sync/overlap by construction).
+      staleness_per_task: (N_T,) mean staleness of each task's inputs.
+      reschedule_rounds: rounds whose control events re-ran the scheduler.
+      machine_ids: surviving original machine labels.
+      assignment: final task→machine assignment (local indices).
+      events_processed: total data-plane events popped from the queue.
+    """
+
+    semantics: str
+    num_rounds: int
+    round_completion: np.ndarray
+    round_times: np.ndarray
+    busy: np.ndarray
+    total_time: float
+    period: float
+    throughput: float
+    staleness_mean: float
+    staleness_max: int
+    staleness_per_task: np.ndarray
+    reschedule_rounds: list[int]
+    machine_ids: list[int]
+    assignment: np.ndarray
+    events_processed: int
+
+
+def steady_period(round_completion: np.ndarray) -> float:
+    """Steady-state time per round: average completion increment over the
+    second half of the run (the first half absorbs the pipeline-fill /
+    staleness-warmup transient)."""
+    comp = np.asarray(round_completion, dtype=np.float64)
+    R = comp.shape[0]
+    if R == 0:
+        return float("nan")
+    if R == 1:
+        return float(comp[0])
+    w = max(1, R // 2)
+    return float((comp[-1] - comp[w - 1]) / (R - w))

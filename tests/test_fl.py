@@ -113,6 +113,32 @@ def test_elastic_failure_and_straggler():
     assert es.history[-1]["event"] in ("migrate", "keep")
 
 
+def test_observe_round_clamps_absurd_implied_speeds():
+    """A loaded machine reporting ~zero time must not poison the speed
+    EMA with a loads/1e-12 spike: implied speeds are clamped to within
+    ``speed_clamp``x of the current estimate (regression)."""
+    rng = np.random.default_rng(6)
+    tg = gossip_task_graph(rng, 8, degree_low=2, degree_high=3)
+    C = rng.uniform(0, 1, (3, 3))
+    np.fill_diagonal(C, 0)
+    cg = ComputeGraph(e=np.ones(3), C=C)
+    es = ElasticScheduler(tg, cg, method="greedy")
+    j = int(es.current.assignment[0])          # a machine that has load
+    loads = np.zeros(3)
+    np.add.at(loads, es.current.assignment, tg.p)
+    times = loads / es.compute_graph.e
+    times[j] = 1e-15                           # absurd measurement
+    es.observe_round(times)
+    # EMA step capped at alpha * clamp: 0.7 * 1 + 0.3 * 10, not ~1e14
+    assert es.compute_graph.e[j] <= 1.0 * (0.7 + 0.3 * es.speed_clamp) + 1e-9
+    # symmetric clamp: an absurdly slow measurement cannot crater it
+    times = loads / es.compute_graph.e
+    times[j] = 1e15
+    e_before = es.compute_graph.e[j]
+    es.observe_round(times)
+    assert es.compute_graph.e[j] >= e_before * (0.7 + 0.3 / es.speed_clamp) - 1e-9
+
+
 # ---------------------------------------------------------------------------
 # Stacked backend: equivalence with the per-user reference engine
 # ---------------------------------------------------------------------------

@@ -114,3 +114,60 @@ def test_compare_methods_shares_sdp(instance):
         rounding_backend="numpy",
     )
     assert out["sdp"].info["sdp_iterations"] == out["sdp_naive"].info["sdp_iterations"]
+
+
+def test_warm_start_cache_is_true_lru(monkeypatch):
+    """Eviction pops the least-recently-USED fingerprint: a hot structure
+    re-hit on every re-solve survives arrivals of new ones (regression —
+    the cache used to evict in FIFO insertion order)."""
+    from repro.core import scheduler as sched_mod
+    from repro.core.graphs import ring_task_graph
+    from repro.core.sdp import SDPOptions
+
+    monkeypatch.setattr(sched_mod, "_WARM_STARTS", {})
+    monkeypatch.setattr(sched_mod, "_WARM_STARTS_MAX", 2)
+    opts = SDPOptions(max_iters=10, check_every=5)
+
+    def solve(n_tasks):
+        rng = np.random.default_rng(n_tasks)
+        tg = ring_task_graph(n_tasks)
+        cg = random_compute_graph(rng, 3)
+        schedule(tg, cg, "sdp", num_samples=50, sdp_options=opts,
+                 rounding_backend="numpy", warm_start=True)
+        return sched_mod._warm_fingerprint(tg, cg)
+
+    fp_a = solve(4)
+    fp_b = solve(5)
+    assert list(sched_mod._WARM_STARTS) == [fp_a, fp_b]
+    assert solve(4) == fp_a                       # hit: A becomes most recent
+    assert list(sched_mod._WARM_STARTS) == [fp_b, fp_a]
+    fp_c = solve(6)                               # evicts B, NOT the hot A
+    assert list(sched_mod._WARM_STARTS) == [fp_a, fp_c]
+
+
+def test_rounding_bound_kept_separate_from_solver_bound(instance):
+    """The rounding pass's Eq. 24 re-evaluation must not overwrite the
+    solver's value under the bound key (regression: double-write)."""
+    from repro.core.sdp import SDPOptions
+
+    tg, cg = instance
+    s = schedule(
+        tg, cg, "sdp", num_samples=200, rounding_backend="numpy",
+        sdp_options=SDPOptions(max_iters=5, check_every=5),
+    )
+    assert not s.info["bound_certified"]
+    assert "lower_bound" not in s.info
+    assert np.isfinite(s.info["lower_bound_uncertified"])
+    assert np.isfinite(s.info["rounding_lower_bound"])
+
+    s2 = schedule(
+        tg, cg, "sdp", num_samples=200, rounding_backend="numpy",
+        sdp_options=SDPOptions(max_iters=4000, tol=2e-5),
+    )
+    assert s2.info["bound_certified"]
+    # the certified key carries the SOLVER's Eq. 24 value...
+    assert "lower_bound_uncertified" not in s2.info
+    assert np.isfinite(s2.info["lower_bound"])
+    # ...and the rounding diagnostic rides alongside, not over it
+    assert "rounding_lower_bound" in s2.info
+    assert s2.info["lower_bound"] <= s2.bottleneck + 1e-6

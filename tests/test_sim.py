@@ -1,0 +1,307 @@
+"""Discrete-event execution engine: semantics equivalences, staleness,
+control-event composition with the elastic scheduling path."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.graphs import ComputeGraph, gossip_task_graph, ring_task_graph
+from repro.core.scheduler import schedule
+from repro.fl.simulator import round_time
+from repro.launch.elastic import ElasticScheduler
+from repro.scenarios import (
+    FLWorkload,
+    Scenario,
+    delay_matrix,
+    drifting_delays,
+    get_scenario,
+    list_scenarios,
+    run_scenario,
+)
+from repro.scenarios.engine import build_compute_graph, build_task_graph
+from repro.sim import ControlEvent, ExecutionSpec, simulate
+
+
+def _instance(seed=0, n_tasks=8, n_machines=3, e=None):
+    rng = np.random.default_rng(seed)
+    tg = gossip_task_graph(rng, n_tasks, degree_low=2, degree_high=3)
+    C = rng.uniform(0.1, 1.0, (n_machines, n_machines))
+    np.fill_diagonal(C, 0.0)
+    if e is None:
+        e = rng.uniform(0.5, 2.0, n_machines)
+    cg = ComputeGraph(e=np.asarray(e, dtype=np.float64), C=C)
+    a = rng.integers(0, n_machines, size=n_tasks)
+    return tg, cg, a
+
+
+# ---------------------------------------------------------------------------
+# sync semantics: pinned to Eq. 2
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(list_scenarios()))
+def test_sync_equals_eq2_on_every_preset(name):
+    """The acceptance property: event-engine sync time == Eq. 2
+    ``round_time`` to 1e-9 on every registered scenario preset."""
+    sc = get_scenario(name)
+    rng = np.random.default_rng(sc.seed)
+    tg = build_task_graph(sc, rng)
+    cg, _ = build_compute_graph(sc, rng)          # drift presets: at(0)
+    a = schedule(tg, cg, "heft").assignment
+    res = simulate(tg, cg, a, 3)                  # defaults to sync
+    expect = round_time(tg, cg, a)
+    assert np.all(np.abs(res.round_times - expect) <= 1e-9), name
+
+
+def test_sync_round_times_exact_for_random_assignments():
+    for seed in range(4):
+        tg, cg, a = _instance(seed)
+        res = simulate(tg, cg, a, 5)
+        assert np.all(res.round_times == round_time(tg, cg, a))
+        np.testing.assert_allclose(
+            res.round_completion, np.cumsum(res.round_times)
+        )
+        # engine-emitted busy == Eq. 7 machine loads / speeds
+        loads = np.zeros(cg.num_machines)
+        np.add.at(loads, a, tg.p)
+        np.testing.assert_array_equal(res.busy[0], loads / cg.e)
+
+
+# ---------------------------------------------------------------------------
+# overlap semantics
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_never_slower_than_sync():
+    for seed in range(4):
+        tg, cg, a = _instance(seed)
+        sync = simulate(tg, cg, a, 8)
+        over = simulate(tg, cg, a, 8, ExecutionSpec(semantics="overlap"))
+        assert np.all(
+            over.round_completion <= sync.round_completion + 1e-12
+        )
+        assert over.period <= sync.period + 1e-12
+        assert over.staleness_mean == 0.0          # no stale reads
+
+
+def test_overlap_cycle_throttled_by_cycle_mean():
+    """A 2-cycle cannot pipeline past its (comp + delay) cycle mean —
+    the crude max(comp, comm) formula under-estimated this."""
+    tg = ring_task_graph(2, bidirectional=True)    # 0 <-> 1
+    C = np.array([[0.0, 1.0], [1.0, 0.0]])
+    cg = ComputeGraph(e=np.ones(2), C=C)
+    a = np.array([0, 1])                           # one task per machine
+    res = simulate(tg, cg, a, 16, ExecutionSpec(semantics="overlap"))
+    # per round each machine needs the other's previous output:
+    # period = comp + C = 2; the old overlap flag claimed max(1, 1) = 1
+    assert res.period == pytest.approx(2.0, rel=1e-9)
+    assert round_time(tg, cg, a, overlap=True) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# async semantics: degeneracy, staleness, throughput
+# ---------------------------------------------------------------------------
+
+
+def test_async_zero_jitter_zero_delay_degenerates_to_sync():
+    """With no jitter and no delays the async steady-state period equals
+    the synchronous Eq. 2 round time for every scheduler, so the
+    schedule ordering is unchanged."""
+    rng = np.random.default_rng(3)
+    tg = gossip_task_graph(rng, 10, degree_low=2, degree_high=3)
+    e = rng.uniform(0.5, 4.0, 4)
+    cg = ComputeGraph(e=e, C=np.zeros((4, 4)))
+    periods, syncs = {}, {}
+    for m in ("heft", "tp_heft", "greedy", "round_robin"):
+        a = schedule(tg, cg, m).assignment
+        res = simulate(tg, cg, a, 12, ExecutionSpec(semantics="async"))
+        periods[m] = res.period
+        syncs[m] = round_time(tg, cg, a)
+        np.testing.assert_allclose(res.period, syncs[m], rtol=1e-9)
+    order = sorted(periods, key=periods.get)
+    assert order == sorted(syncs, key=syncs.get)
+
+
+def test_async_staleness_positive_under_heterogeneity():
+    tg, cg, a = _instance(5, n_tasks=10, n_machines=3, e=[0.3, 1.0, 3.0])
+    res = simulate(tg, cg, a, 16, ExecutionSpec(semantics="async"))
+    assert res.staleness_per_task.shape == (10,)
+    assert np.all(res.staleness_per_task >= 0)
+    assert res.staleness_mean > 0                  # fast machines run ahead
+    assert res.staleness_max >= res.staleness_mean
+    # async throughput is compute-bound: the slowest machine's load
+    loads = np.zeros(3)
+    np.add.at(loads, a, tg.p)
+    np.testing.assert_allclose(res.period, np.max(loads / cg.e), rtol=1e-9)
+
+
+def test_jitter_deterministic_and_perturbs():
+    tg, cg, a = _instance(6)
+    spec = ExecutionSpec(jitter_sigma=0.3, seed=9)
+    r1 = simulate(tg, cg, a, 6, spec)
+    r2 = simulate(tg, cg, a, 6, spec)
+    np.testing.assert_array_equal(r1.round_times, r2.round_times)
+    assert r1.round_times.std() > 0
+    other = simulate(tg, cg, a, 6, dataclasses.replace(spec, seed=10))
+    assert not np.array_equal(r1.round_times, other.round_times)
+
+
+def test_per_machine_straggler_hits_only_that_machine():
+    tg, cg, a = _instance(7)
+    spec = ExecutionSpec(
+        straggler_prob=(0.0, 0.0, 1.0), straggler_factor=5.0, seed=0
+    )
+    res = simulate(tg, cg, a, 4, spec)
+    base = simulate(tg, cg, a, 4)
+    np.testing.assert_allclose(res.busy[:, :2], base.busy[:, :2])
+    np.testing.assert_allclose(res.busy[:, 2], base.busy[:, 2] * 5.0)
+
+
+# ---------------------------------------------------------------------------
+# control events: the elastic scheduling path through the queue
+# ---------------------------------------------------------------------------
+
+
+def test_control_events_require_sync():
+    tg, cg, a = _instance(0)
+    with pytest.raises(ValueError, match="sync"):
+        simulate(
+            tg, cg, a, 4, ExecutionSpec(semantics="async"),
+            control_events=(ControlEvent(round=1, kind="reschedule"),),
+        )
+
+
+def test_failure_and_drift_events_reproduce_elastic_history():
+    """Failure + drift composed in one queue drive the SAME ElasticScheduler
+    transitions the bespoke loops used to produce."""
+    rng = np.random.default_rng(10)
+    tg = ring_task_graph(6)
+    C = delay_matrix("distance", rng, 4)
+    cg = ComputeGraph(e=np.ones(4), C=C)
+    drift = drifting_delays(rng, 4, base="distance")
+    es = ElasticScheduler(tg, cg, method="greedy")
+
+    def consult(tg_, cg_, r):
+        if r == 2:
+            es.on_failure(1)
+        else:
+            es.on_delay_update(drift.at(r))
+        return es.current.assignment
+
+    events = (
+        ControlEvent(round=2, kind="fail", machine=1),
+        ControlEvent(round=4, kind="delay_update", C=drift.at(4)),
+        ControlEvent(round=4, kind="reschedule"),
+    )
+    res = simulate(
+        tg, cg, es.current.assignment, 6,
+        control_events=events, schedule_fn=consult,
+    )
+    assert res.reschedule_rounds == [2, 4]
+    assert res.machine_ids == [0, 2, 3] == es.machine_ids
+    hist = [h["event"] for h in es.history]
+    assert hist[:2] == ["init", "fail:1"]
+    assert hist[2] in ("migrate", "keep") and len(hist) == 3
+    # the engine and the scheduler hold the same post-drift delay view
+    np.testing.assert_allclose(
+        es.compute_graph.C, drift.at(4)[np.ix_([0, 2, 3], [0, 2, 3])]
+    )
+    assert np.all(res.assignment < 3)
+    assert np.isnan(res.busy[2:, 1]).all()
+    assert np.isfinite(res.busy[:2, 1]).all()
+    assert np.all(np.diff(res.round_completion) > 0)
+
+
+def test_busy_feedback_updates_elastic_speed_estimates():
+    """Engine-emitted busy times feed observe_round: a persistent
+    straggler drags its speed estimate down via the EMA."""
+    rng = np.random.default_rng(11)
+    tg = gossip_task_graph(rng, 8, degree_low=2, degree_high=3)
+    C = rng.uniform(0.1, 0.5, (3, 3))
+    np.fill_diagonal(C, 0.0)
+    cg = ComputeGraph(e=np.ones(3), C=C)
+    # threshold high enough that the run never migrates: the loads stay
+    # put, so the EMA sees the same straggler every round
+    es = ElasticScheduler(tg, cg, method="greedy", reschedule_threshold=10.0)
+
+    def on_round_end(r, busy):
+        out = es.observe_round(busy)
+        return None if out is None else out.assignment
+
+    spec = ExecutionSpec(
+        straggler_prob=(0.0, 0.0, 1.0), straggler_factor=4.0, seed=2
+    )
+    simulate(
+        tg, cg, es.current.assignment, 5, spec, on_round_end=on_round_end,
+    )
+    assert es.compute_graph.e[2] < 0.6              # learned the straggler
+    assert es.compute_graph.e[0] > 0.9              # healthy machine kept
+    assert len(es.history) == 6                     # init + 5 observations
+
+
+# ---------------------------------------------------------------------------
+# scenario integration
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_execution_validation():
+    with pytest.raises(ValueError, match="execution semantics"):
+        Scenario(name="x", topology="ring", num_tasks=8, execution="psychic")
+    with pytest.raises(ValueError, match="execution parameter"):
+        Scenario(name="x", topology="ring", num_tasks=8,
+                 execution_params={"jitter": 0.1})       # typo
+    with pytest.raises(ValueError, match="sync"):
+        Scenario(name="x", topology="ring", num_tasks=8,
+                 delay_model="drift", execution="async")
+    with pytest.raises(ValueError, match="sync"):
+        Scenario(name="x", topology="ring", num_tasks=8,
+                 execution="overlap", fl=FLWorkload())
+
+
+def test_run_scenario_records_async_throughput_and_staleness():
+    sc = dataclasses.replace(
+        get_scenario("ring_async"), schedulers=("heft", "greedy"), rounds=8,
+    )
+    rec = run_scenario(sc, quick=True)
+    assert rec["axes"]["execution"] == "async"
+    for m in sc.schedulers:
+        entry = rec["methods"][m]
+        assert entry["execution"] == "async"
+        assert entry["throughput"] > 0
+        assert entry["period"] == pytest.approx(1.0 / entry["throughput"])
+        assert entry["staleness_mean"] >= 0.0
+        assert entry["staleness_max"] >= entry["staleness_mean"]
+        assert len(entry["staleness_per_task"]) == sc.num_tasks
+        assert len(entry["round_times"]) == sc.rounds
+        assert entry["total_time"] > 0
+
+
+def test_run_scenario_overlap_period_never_above_sync():
+    sc = dataclasses.replace(
+        get_scenario("smallworld_overlap"),
+        schedulers=("heft",), rounds=8, execution_params={},
+    )
+    rec = run_scenario(sc, quick=True)
+    entry = rec["methods"]["heft"]
+    assert entry["execution"] == "overlap"
+    # pipelining dominates the barrier: cumulative time never above sync
+    assert entry["mean_round_time"] <= entry["predicted_bottleneck"] + 1e-12
+    assert entry["period"] > 0
+    assert "staleness_mean" not in entry            # overlap never stale
+
+
+def test_timeline_overlap_delegates_to_event_engine():
+    from repro.fl.simulator import SimEvent, timeline
+
+    tg, cg, _ = _instance(12)
+
+    def sched(tg_, cg_):
+        return schedule(tg_, cg_, "greedy").assignment
+
+    sync_tl = timeline(tg, cg, sched, num_rounds=5)
+    over_tl = timeline(tg, cg, sched, num_rounds=5, overlap=True)
+    assert np.all(over_tl["cumulative_time"] <= sync_tl["cumulative_time"] + 1e-12)
+    with pytest.raises(ValueError, match="overlap"):
+        timeline(tg, cg, sched, num_rounds=5, overlap=True,
+                 events=[SimEvent(round=2, kind="fail", machine=0)])
