@@ -14,7 +14,8 @@ test:
 # gossip run asserting the single-jit round path took effect), and the
 # sync-equivalence smoke (asserts the event engine's sync semantics still
 # reproduces Eq. 2 round times to 1e-9 — the engine cannot drift from the
-# paper's model).
+# paper's model), and the batched-solver smoke (asserts a B=8 stacked SDP
+# solve is ONE jitted dispatch with all lanes converged).
 smoke:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.small_instance_backends(quick=True); \
@@ -22,7 +23,8 @@ smoke:
 	        'rep=%s;peak_mb=%.1f' % (r['representation'], r['peak_tensor_bytes'] / 1e6)) \
 	 for r in (b._sweep_point(8, 8, max_iters=150, num_samples=256), \
 	           b._sweep_point(40, 8, max_iters=60, num_samples=256))]; \
-	b.jax_solver_smoke()"
+	b.jax_solver_smoke(); \
+	b.batched_solver_smoke()"
 	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.stacked_smoke()"
 	$(PYTHON) -c "import benchmarks.async_bench as a; a.sync_equivalence_smoke()"
 
@@ -33,7 +35,8 @@ docs-check:
 
 # Regenerate the BENCH_*.json records (schemas: docs/benchmarks.md)
 bench-scheduler:
-	$(PYTHON) -c "import benchmarks.scheduler_bench as b; b.scaling_sweep(quick=False)"
+	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
+	b.scaling_sweep(quick=False); b.batch_sweep(quick=False)"
 
 bench-gossip:
 	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.sweep()"

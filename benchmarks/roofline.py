@@ -1,16 +1,129 @@
 """Roofline report: reads artifacts/dryrun/*.json (written by
 repro.launch.dryrun) and prints the per-cell three-term table used in
-EXPERIMENTS.md §Roofline.  No recompilation happens here."""
+EXPERIMENTS.md §Roofline.  No recompilation happens here.
+
+``sdp_batch_profile`` is the one measuring probe in this module: it times
+the batched DR solve's hot loop (blocked symmetric matvec Y @ V and the
+partial-spectrum cone projection built on it) against this host's
+measured machine balance and prints the memory-bound / compute-bound
+verdict that gates ROADMAP item-5 (a fused Pallas projection kernel)."""
 
 from __future__ import annotations
 
 import glob
 import json
 import os
+import time
+
+import numpy as np
 
 from benchmarks.common import emit
 
 ARTIFACT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+
+def sdp_batch_profile(num_tasks: int = 128, num_machines: int = 8,
+                      batch: int = 8, reps: int = 10) -> dict | None:
+    """Roofline probe of the batched SDP hot loop (Pallas go/no-go).
+
+    The batched DR iteration at n = 1024 spends its time in two device
+    ops: the blocked symmetric matvec ``Y @ V`` driving the subspace
+    iteration ((B, n1, n1) @ (B, n1, k)), and the partial-spectrum cone
+    projection (``eig_iters`` QR-orthogonalized sweeps of that matvec plus
+    a k×k Rayleigh-Ritz solve).  Their arithmetic intensity is ~k/2
+    flops/byte — each sweep re-streams the n1² Gram matrix to produce only
+    2·n1²·k flops.  The probe measures both ops and this host's machine
+    balance (peak GEMM flop rate / peak stream bandwidth from two
+    reference kernels) and prints the verdict:
+
+      - ``memory_bound`` (intensity < balance): the loop waits on Y
+        traffic, so a fused kernel keeping Y blocks resident across the
+        sweep (ROADMAP item-5) has headroom → go;
+      - ``compute_bound``: the FPUs are already saturated; fusion cannot
+        help → no-go on this host.
+    """
+    try:
+        import jax
+        import jax.numpy as jnp
+    except Exception:
+        emit("sdp_batch_roofline", 0.0, "jax_unavailable")
+        return None
+
+    from repro.core.sdp import _cone_fns
+
+    n1 = num_tasks * num_machines + 1
+    k, eig_iters = 16, 8
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((batch, n1, n1)).astype(np.float32)
+    Y = jnp.asarray((A + A.transpose(0, 2, 1)) / np.sqrt(n1))
+    V = jnp.asarray(rng.standard_normal((batch, n1, k)).astype(np.float32))
+
+    matvec = jax.jit(lambda Y, V: jnp.einsum("bij,bjk->bik", Y, V))
+    _, cone_partial = _cone_fns(k, eig_iters)
+    cone_b = jax.jit(jax.vmap(cone_partial, in_axes=(0, 0, None)))
+    eig_tol = jnp.float32(1e-6)
+
+    def _time(fn, n, *args):
+        jax.block_until_ready(fn(*args))          # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(n):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / n
+
+    t_mv = _time(matvec, reps, Y, V)
+    t_cone = _time(cone_b, max(3, reps // 3), Y, V, eig_tol)
+
+    flops_mv = 2.0 * batch * n1 * n1 * k
+    bytes_mv = 4.0 * batch * (n1 * n1 + 2 * n1 * k)
+    intensity = flops_mv / bytes_mv               # ≈ k/2 flops/byte
+
+    # machine balance: a square GEMM for peak flops, a streaming add for
+    # peak bandwidth (read + write)
+    m = 1024
+    G = jnp.asarray(rng.standard_normal((m, m)).astype(np.float32))
+    t_gemm = _time(jax.jit(lambda a: a @ a), reps, G)
+    peak_flops = 2.0 * m**3 / t_gemm
+    big = jnp.asarray(
+        rng.standard_normal((64, 1 << 20)).astype(np.float32)
+    )
+    t_stream = _time(jax.jit(lambda a: a + 1.0), reps, big)
+    peak_bw = 2.0 * big.size * 4 / t_stream
+    balance = peak_flops / peak_bw
+
+    achieved = flops_mv / t_mv
+    memory_bound = intensity < balance
+    verdict = "memory_bound" if memory_bound else "compute_bound"
+    row = {
+        "n1": n1,
+        "batch": batch,
+        "k": k,
+        "eig_iters": eig_iters,
+        "matvec_seconds": t_mv,
+        "cone_partial_seconds": t_cone,
+        "matvec_gflops": achieved / 1e9,
+        "intensity_flops_per_byte": intensity,
+        "peak_gemm_gflops": peak_flops / 1e9,
+        "peak_stream_gbs": peak_bw / 1e9,
+        "machine_balance_flops_per_byte": balance,
+        "verdict": verdict,
+        "pallas_item5": "go" if memory_bound else "no_go",
+    }
+    print(
+        f"# sdp batch hot loop (B={batch}, n1={n1}, k={k}): "
+        f"matvec {t_mv*1e3:.2f} ms ({achieved/1e9:.1f} GFLOP/s), "
+        f"cone_partial {t_cone*1e3:.2f} ms; "
+        f"intensity {intensity:.1f} vs balance {balance:.1f} flops/byte "
+        f"-> {verdict} (Pallas item-5: {row['pallas_item5']})"
+    )
+    emit(
+        "sdp_batch_roofline",
+        t_mv * 1e6,
+        f"b{batch}_n{n1};gflops={achieved/1e9:.1f};"
+        f"intensity={intensity:.1f};balance={balance:.1f};"
+        f"verdict={verdict};pallas_item5={row['pallas_item5']}",
+    )
+    return row
 
 
 def load_records(pattern: str = "*.json") -> list[dict]:
@@ -46,6 +159,7 @@ def table(records: list[dict], mesh_filter: str | None = "pod") -> list[dict]:
 
 
 def main(quick: bool = True):
+    sdp_batch_profile(batch=2 if quick else 8)
     recs = load_records()
     rows = table(recs, mesh_filter="pod")
     if not rows:

@@ -382,6 +382,60 @@ def _fused_rounding_fn(
     return rounding
 
 
+def _fused_rounding_batch_fn(
+    B: int, n_tasks: int, n_machines: int, n_edges: int, strict: bool
+):
+    """Batched twin of ``_fused_rounding_fn``: B instances, one dispatch.
+
+    Keyed on *shape* only — the per-instance weights (p, e, C, src, dst)
+    are traced arguments, so one closure serves every same-shape batch.
+    The leading ``"batch"`` tag plus the batch dimension ``B`` keep batched
+    and single-instance closures of the same instance shape from evicting
+    each other out of the shared ``_JAX_CACHE`` LRU.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    key = ("batch", B, n_tasks, n_machines, n_edges, strict)
+    fn = _cache_lookup(_JAX_CACHE, key)
+    if fn is not None:
+        return fn
+
+    def round_one(p, e, C, src, dst, root, g):
+        def bottleneck_one(a):
+            onehot = jax.nn.one_hot(a, n_machines, dtype=jnp.float32)
+            loads = onehot.T @ p
+            t_comp = (loads / e)[a]
+            delays = C[a[src], a[dst]]
+            comm = jnp.zeros_like(t_comp).at[src].max(delays)
+            return jnp.max(t_comp + comm)
+
+        S = g.shape[0]
+        z = g @ root.T                                  # (S, n+1)
+        s = jnp.where(z >= 0, 1.0, -1.0)                # sign with 0 -> +1
+        u = s[:, -1:]
+        zx = (z[:, :-1] * u).reshape(S, n_machines, n_tasks)
+        sel = (s[:, :-1] * u).reshape(S, n_machines, n_tasks) > 0
+        masked = jnp.where(sel, zx, -jnp.inf)
+        any_sel = sel.any(axis=1)                       # (S, T)
+        strict_mask = any_sel.all(axis=1)               # (S,)
+        choice = jnp.where(any_sel[:, None, :], masked, zx)
+        assignments = jnp.argmax(choice, axis=1)        # (S, T)
+        times = jax.vmap(bottleneck_one)(assignments)   # (S,)
+        if strict:
+            times = jnp.where(
+                strict_mask.any(),
+                jnp.where(strict_mask, times, jnp.inf),
+                times,
+            )
+        best = jnp.argmin(times)
+        return assignments[best], times[best], strict_mask.sum()
+
+    rounding = jax.jit(jax.vmap(round_one))
+    _cache_insert(_JAX_CACHE, key, rounding, _JAX_CACHE_MAX)
+    return rounding
+
+
 _DEVICE_ROOT_FN = None
 
 
@@ -428,3 +482,140 @@ def _rounding_fused_jax(
         float(t_best),
         int(n_feasible),
     )
+
+
+_DEVICE_ROOT_BATCH_FN = None
+
+
+def _device_covariance_root_batch(Y_stack):
+    """Batched eigen square roots of B stacked device covariances."""
+    global _DEVICE_ROOT_BATCH_FN
+    if _DEVICE_ROOT_BATCH_FN is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def _root(Ys):
+            Ys = 0.5 * (Ys + jnp.transpose(Ys, (0, 2, 1)))
+            w, V = jnp.linalg.eigh(Ys)
+            return V * jnp.sqrt(jnp.clip(w, 0.0, None))[:, None, :]
+
+        _DEVICE_ROOT_BATCH_FN = _root
+    return _DEVICE_ROOT_BATCH_FN(Y_stack)
+
+
+def randomized_rounding_batch(
+    bqps,
+    task_graphs,
+    compute_graphs,
+    Ys,
+    *,
+    num_samples: int = 2000,
+    rngs=None,
+    strict: bool = False,
+    backend: str = "jax",
+    Y_devices=None,
+) -> list[RoundingResult]:
+    """Round B same-shape SDP solutions in ONE fused jitted dispatch.
+
+    The per-instance pipeline is identical to ``randomized_rounding``'s jax
+    backend (same gaussians from each instance's rng, same repair and
+    selection), vmapped over the batch: sampling, sign folding, repair,
+    bottleneck evaluation, and arg-best selection for all B instances run
+    on device together.  When every instance carries a device-resident
+    covariance (``Y_devices``), the B square roots are also taken in one
+    batched ``eigh``.
+
+    The Eq. (22)-(24)/(27) analysis bounds are computed per instance on the
+    float64 host path — it is exact and avoids compiling B content-keyed
+    device-analysis closures for instances that are typically seen once.
+
+    Falls back to B sequential numpy-backend calls when jax is unavailable
+    or ``backend`` is not "jax".
+    """
+    from repro import compat
+
+    B = len(bqps)
+    if not (len(task_graphs) == len(compute_graphs) == len(Ys) == B):
+        raise ValueError("bqps, task_graphs, compute_graphs, Ys must align")
+    if B == 0:
+        return []
+    if rngs is None:
+        rngs = [None] * B
+    if Y_devices is None:
+        Y_devices = [None] * B
+
+    T, K = bqps[0].n_tasks, bqps[0].n_machines
+    n_e = len(task_graphs[0].edges)
+    for bqp, tg in zip(bqps, task_graphs):
+        if (bqp.n_tasks, bqp.n_machines, len(tg.edges)) != (T, K, n_e):
+            raise ValueError(
+                "randomized_rounding_batch requires same-shape instances "
+                "(same n_tasks, n_machines, and task-graph edge count)"
+            )
+
+    if backend != "jax" or not compat.jax_available():
+        return [
+            randomized_rounding(
+                bqp,
+                tg,
+                cg,
+                Y,
+                num_samples=num_samples,
+                rng=rng,
+                strict=strict,
+                backend="numpy",
+            )
+            for bqp, tg, cg, Y, rng in zip(
+                bqps, task_graphs, compute_graphs, Ys, rngs
+            )
+        ]
+
+    p_s = np.stack([np.asarray(tg.p, np.float32) for tg in task_graphs])
+    e_s = np.stack([np.asarray(cg.e, np.float32) for cg in compute_graphs])
+    C_s = np.stack([np.asarray(cg.C, np.float32) for cg in compute_graphs])
+    if n_e:
+        src_s = np.stack(
+            [np.asarray([i for (i, _) in tg.edges], np.int32) for tg in task_graphs]
+        )
+        dst_s = np.stack(
+            [np.asarray([j for (_, j) in tg.edges], np.int32) for tg in task_graphs]
+        )
+    else:
+        src_s = dst_s = np.zeros((B, 0), np.int32)
+
+    if all(yd is not None for yd in Y_devices):
+        import jax.numpy as jnp
+
+        roots = _device_covariance_root_batch(jnp.stack(Y_devices))
+    else:
+        roots = np.stack(
+            [_covariance_root(Y).astype(np.float32) for Y in Ys]
+        )
+    g = np.stack(
+        [
+            (rng or np.random.default_rng(0))
+            .standard_normal((num_samples, Y.shape[0]))
+            .astype(np.float32)
+            for rng, Y in zip(rngs, Ys)
+        ]
+    )
+
+    fn = _fused_rounding_batch_fn(B, T, K, n_e, strict)
+    assignments, times, feas = fn(p_s, e_s, C_s, src_s, dst_s, roots, g)
+
+    out = []
+    for i in range(B):
+        exp_b, lb, ub = analysis_bounds(bqps[i], Ys[i])
+        out.append(
+            RoundingResult(
+                assignment=np.asarray(assignments[i], dtype=np.int64),
+                bottleneck=float(times[i]),
+                num_feasible=int(feas[i]),
+                num_samples=num_samples,
+                expected_bottleneck=exp_b,
+                lower_bound=lb,
+                upper_bound=ub,
+            )
+        )
+    return out

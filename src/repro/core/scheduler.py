@@ -48,8 +48,9 @@ from repro.core.graphs import ComputeGraph, TaskGraph
 from repro.core.rounding import (
     naive_rounding,
     randomized_rounding,
+    randomized_rounding_batch,
 )
-from repro.core.sdp import SDPOptions, solve_sdp
+from repro.core.sdp import SDPOptions, solve_sdp, solve_sdp_batch
 
 METHODS = (
     "sdp",
@@ -80,6 +81,14 @@ _DENSE_BYTES_LIMIT = 100_000_000
 _WARM_STARTS: dict[tuple, dict] = {}
 _WARM_STARTS_MAX = 8
 
+# Batched warm starts: a tuple of per-instance fingerprints -> the list of
+# per-lane solver states from the last ``schedule_batch`` of that exact
+# batch composition.  Falls back lane-by-lane to ``_WARM_STARTS`` when the
+# composition is new, and writes each lane's state back there after the
+# solve so single-instance and batched re-solves stay interoperable.
+_WARM_STARTS_BATCH: dict[tuple, list] = {}
+_WARM_STARTS_BATCH_MAX = 4
+
 
 def _warm_fingerprint(task_graph: TaskGraph, compute_graph: ComputeGraph) -> tuple:
     return (
@@ -100,7 +109,11 @@ def clear_warm_start(task_graph: TaskGraph, compute_graph: ComputeGraph) -> bool
     Returns True if an entry was dropped.
     """
     fp = _warm_fingerprint(task_graph, compute_graph)
-    return _WARM_STARTS.pop(fp, None) is not None
+    hit = _WARM_STARTS.pop(fp, None) is not None
+    stale = [k for k in _WARM_STARTS_BATCH if fp in k]
+    for k in stale:
+        del _WARM_STARTS_BATCH[k]
+    return hit or bool(stale)
 
 
 def _pick_representation(
@@ -229,16 +242,22 @@ def schedule(
         if method == "sdp_naive":
             assignment = naive_rounding(data, sol.Y)
         else:
-            res = randomized_rounding(
-                data,
-                task_graph,
-                compute_graph,
-                sol.Y,
-                num_samples=num_samples,
-                rng=rng,
-                backend=rounding_backend,
-                Y_device=sol.Y_device,
-            )
+            # ``schedule_batch`` pre-rounds all lanes in one fused dispatch
+            # and hands the result down here; sharing it across the sdp /
+            # sdp_ls methods matches the sequential path, which redraws the
+            # same gaussians from ``default_rng(seed)`` on every call.
+            res = cache.get("rounding")
+            if res is None:
+                res = randomized_rounding(
+                    data,
+                    task_graph,
+                    compute_graph,
+                    sol.Y,
+                    num_samples=num_samples,
+                    rng=rng,
+                    backend=rounding_backend,
+                    Y_device=sol.Y_device,
+                )
             # the rounding pass re-evaluates Eq. 24 on the Y it consumed
             # (possibly on device, in fp32); keep it under its own key —
             # it must not overwrite the solver's certified value
@@ -289,6 +308,145 @@ def schedule(
         method=method,
         info=info,
     )
+
+
+def schedule_batch(
+    task_graphs,
+    compute_graphs,
+    method: str = "sdp",
+    *,
+    seed: int = 0,
+    num_samples: int = 4000,
+    sdp_options: SDPOptions | None = None,
+    rounding_backend: str = "jax",
+    solver_backend: str | None = None,
+    representation: str = "auto",
+    warm_start: bool = False,
+) -> list[Schedule]:
+    """Schedule B same-shape instances with ONE batched SDP solve.
+
+    The scheduler-as-a-service entry point: all B Douglas-Rachford solves
+    run as a single jitted dispatch with per-instance convergence masking
+    (``solve_sdp_batch``), and the Gaussian roundings run as one fused
+    batched dispatch (``randomized_rounding_batch``).  Each returned
+    ``Schedule`` matches what B independent ``schedule()`` calls with the
+    same ``seed`` would produce (same gaussians per lane, same ``info``
+    keys) up to float32 batching noise.
+
+    ``warm_start=True`` keys the B stacked solver states by the tuple of
+    per-instance structural fingerprints: re-scheduling the same batch
+    composition after weight-only changes (delay drift across a fleet)
+    restores all lanes at once, a new composition falls back lane-by-lane
+    to the single-instance cache, and the per-lane states are written back
+    to it so batched and single re-solves interoperate.
+
+    Instances must share (n_tasks, n_machines, edge count); non-sdp
+    methods and empty batches degrade to sequential ``schedule()`` calls.
+    """
+    B = len(task_graphs)
+    if len(compute_graphs) != B:
+        raise ValueError("task_graphs and compute_graphs must align")
+    if B == 0:
+        return []
+    if method not in ("sdp", "sdp_naive", "sdp_ls"):
+        return [
+            schedule(
+                tg, cg, method,
+                seed=seed,
+                num_samples=num_samples,
+                sdp_options=sdp_options,
+                rounding_backend=rounding_backend,
+                solver_backend=solver_backend,
+                representation=representation,
+                warm_start=warm_start,
+            )
+            for tg, cg in zip(task_graphs, compute_graphs)
+        ]
+
+    reps = {
+        _pick_representation(tg, cg, representation)
+        for tg, cg in zip(task_graphs, compute_graphs)
+    }
+    if len(reps) != 1:
+        raise ValueError("schedule_batch requires a uniform representation")
+    rep = reps.pop()
+    build = (
+        bqp_mod.build_factored_bqp if rep == "factored" else bqp_mod.build_bqp
+    )
+    bqps = [build(tg, cg) for tg, cg in zip(task_graphs, compute_graphs)]
+
+    opts = sdp_options or SDPOptions()
+    if solver_backend is not None:
+        opts = dataclasses.replace(opts, backend=solver_backend)
+
+    fps = [
+        _warm_fingerprint(tg, cg)
+        for tg, cg in zip(task_graphs, compute_graphs)
+    ]
+    batch_key = tuple(fps)
+    warm_states: list = [None] * B
+    if warm_start:
+        cached = _WARM_STARTS_BATCH.get(batch_key)
+        if cached is not None:
+            _WARM_STARTS_BATCH[batch_key] = _WARM_STARTS_BATCH.pop(batch_key)
+            warm_states = list(cached)
+        else:
+            warm_states = [_WARM_STARTS.get(fp) for fp in fps]
+
+    sols = solve_sdp_batch(bqps, opts, warm_starts=warm_states)
+
+    if warm_start:
+        states = [s.state for s in sols]
+        finite = [
+            bool(np.all(np.isfinite(st.get("w", np.inf)))) for st in states
+        ]
+        if all(finite):
+            if batch_key not in _WARM_STARTS_BATCH:
+                while len(_WARM_STARTS_BATCH) >= _WARM_STARTS_BATCH_MAX:
+                    _WARM_STARTS_BATCH.pop(next(iter(_WARM_STARTS_BATCH)))
+            _WARM_STARTS_BATCH[batch_key] = states
+        for fp, st, ok in zip(fps, states, finite):
+            if not ok:
+                continue
+            if fp in _WARM_STARTS:
+                _WARM_STARTS.pop(fp)
+            else:
+                while len(_WARM_STARTS) >= _WARM_STARTS_MAX:
+                    _WARM_STARTS.pop(next(iter(_WARM_STARTS)))
+            _WARM_STARTS[fp] = st
+
+    rounding_results: list = [None] * B
+    if method in ("sdp", "sdp_ls"):
+        rounding_results = randomized_rounding_batch(
+            bqps,
+            task_graphs,
+            compute_graphs,
+            [s.Y for s in sols],
+            num_samples=num_samples,
+            rngs=[np.random.default_rng(seed) for _ in range(B)],
+            backend=rounding_backend,
+            Y_devices=[s.Y_device for s in sols],
+        )
+
+    out = []
+    for tg, cg, bqp, sol, res in zip(
+        task_graphs, compute_graphs, bqps, sols, rounding_results
+    ):
+        cache = {"bqp": bqp, "sol": sol, "representation": rep}
+        if res is not None:
+            cache["rounding"] = res
+        out.append(
+            schedule(
+                tg, cg, method,
+                seed=seed,
+                num_samples=num_samples,
+                sdp_options=sdp_options,
+                rounding_backend=rounding_backend,
+                representation=representation,
+                _sdp_cache=cache,
+            )
+        )
+    return out
 
 
 def compare_methods(

@@ -481,27 +481,21 @@ def _solve_numpy(
 #                 n ≥ 1024 hot loop fast on CPU devices too.
 
 
-@functools.lru_cache(maxsize=32)
-def _dr_jax_fn(
-    n1: int,
-    check_every: int,
-    k: int,
-    eig_iters: int,
-    eig_refresh: int,
-    kind: str,
-    n_tasks: int,
-    n_machines: int,
-):
-    import jax
+def _make_device_ops(kind: str, operands, n1: int, n_tasks: int, n_machines: int):
+    """Constraint-operator closures (matvec, rmatvec, b) for ONE instance.
+
+    Shared by the single-instance jit and — per vmapped lane — the batched
+    solver: the operand arrays may be traced, so one builder serves both
+    paths.  ``kind`` selects the generic COO/``segment_sum`` form ("csr")
+    or the structural Kronecker-factor form ("factored").
+    """
     import jax.numpy as jnp
-    from jax import lax
-    from jax.scipy.linalg import solve_triangular
 
     from repro.compat import segment_sum
 
     idx_t = n1 * n1
 
-    def _csr_ops(operands):
+    if kind == "csr":
         Lval, Lrow, Lcol, b = operands
         m = b.shape[0]
 
@@ -513,125 +507,167 @@ def _dr_jax_fn(
 
         return matvec, rmatvec, b
 
-    def _factored_ops(operands):
-        # Device analogue of the host CSR built by ``_init_factored``: row
-        # r of L dotted with v (matvec) and Σ_r y_r · row_r (rmatvec), both
-        # in closed form from the Kronecker factors.  Row layout:
-        # [diag (n1) | A (n_tasks) | Q̃/q_scale with -4t + s (|E|)].
-        p, d, C, src, dst, qs = operands
-        T, K = n_tasks, n_machines
-        n = T * K
-        n_e = src.shape[0]
-        C1 = C @ jnp.ones(K, C.dtype)
-        Ct1 = C.T @ jnp.ones(K, C.dtype)
-        P = jnp.sum(p)
-        corner = jnp.sum(d) * P + jnp.sum(C)
-        dp = jnp.outer(d, p)                       # (K, T) grid of d⊗p
-        eyeK = jnp.eye(K, dtype=C.dtype)
-        b = jnp.concatenate(
-            [jnp.ones(n1, C.dtype), jnp.zeros(T + n_e, C.dtype)]
+    # Device analogue of the host CSR built by ``_init_factored``: row
+    # r of L dotted with v (matvec) and Σ_r y_r · row_r (rmatvec), both
+    # in closed form from the Kronecker factors.  Row layout:
+    # [diag (n1) | A (n_tasks) | Q̃/q_scale with -4t + s (|E|)].
+    p, d, C, src, dst, qs = operands
+    T, K = n_tasks, n_machines
+    n = T * K
+    n_e = src.shape[0]
+    C1 = C @ jnp.ones(K, C.dtype)
+    Ct1 = C.T @ jnp.ones(K, C.dtype)
+    P = jnp.sum(p)
+    corner = jnp.sum(d) * P + jnp.sum(C)
+    dp = jnp.outer(d, p)                       # (K, T) grid of d⊗p
+    eyeK = jnp.eye(K, dtype=C.dtype)
+    b = jnp.concatenate(
+        [jnp.ones(n1, C.dtype), jnp.zeros(T + n_e, C.dtype)]
+    )
+
+    def matvec(v):
+        F = v[:idx_t].reshape(n1, n1)
+        Fs = 0.5 * (F + F.T)
+        r_diag = jnp.diagonal(F)
+        f_row = F[:n, n].reshape(K, T)
+        f_col = F[n, :n].reshape(K, T)
+        r_a = 0.5 * (f_row.sum(0) + f_col.sum(0)) + (K - 2.0) * F[n, n]
+        # <Q̃_e, sym(F)> — same contraction as FactoredBQP.inner
+        Fxx = Fs[:n, :n].reshape(K, T, K, T)
+        f = Fs[:n, n].reshape(K, T)
+        comp = jnp.einsum("k,t,ktks->s", d, p, Fxx)
+        blocks = Fxx.transpose(1, 3, 0, 2)[src, dst]       # (|E|, K, K)
+        comm = jnp.einsum("ekl,kl->e", blocks, C)
+        base = jnp.einsum("k,t,kt->", d, p, f)
+        u_i = (C1 + P * d) @ f
+        u_j = Ct1 @ f
+        q1f = 0.5 * (base + u_i[src] + u_j[dst])
+        inner = comp[src] + comm + 2.0 * q1f + corner * Fs[n, n]
+        r_q = inner / qs - 4.0 * v[idx_t] + v[idx_t + 1 :]
+        return jnp.concatenate([r_diag, r_a, r_q])
+
+    def rmatvec(y, dim):
+        y_d = y[:n1]
+        y_a = y[n1 : n1 + T]
+        y_raw = y[n1 + T :]
+        y_q = y_raw / qs
+        S = jnp.sum(y_q)
+        c_i = segment_sum(y_q, src, num_segments=T)
+        c_j = segment_sum(y_q, dst, num_segments=T)
+        W2 = segment_sum(y_q, src * T + dst, num_segments=T * T)
+        W2 = W2.reshape(T, T)
+        # X-X block: Σ_e y_e · sym(D ⊗ (p δ_iᵀ) + C ⊗ (δ_i δ_jᵀ))
+        M = 0.5 * (jnp.outer(p, c_i) + jnp.outer(c_i, p))
+        Z = jnp.einsum("kl,k,ts->ktls", eyeK, d, M)
+        T1 = jnp.einsum("kl,ts->ktls", C, W2)
+        Z = Z + 0.5 * (T1 + T1.transpose(2, 3, 0, 1))
+        # borders: Σ_e y_e q1_e + the A-row borders (0.5 per machine)
+        g = 0.5 * (
+            S * dp
+            + jnp.outer(C1 + P * d, c_i)
+            + jnp.outer(Ct1, c_j)
+            + jnp.broadcast_to(y_a[None, :], (K, T))
+        )
+        g = g.reshape(-1)
+        corner_y = S * corner + (K - 2.0) * jnp.sum(y_a)
+        Y1 = jnp.zeros((n1, n1), y.dtype)
+        Y1 = Y1.at[:n, :n].set(Z.reshape(n, n))
+        Y1 = Y1.at[:n, n].add(g)
+        Y1 = Y1.at[n, :n].add(g)
+        Y1 = Y1.at[n, n].add(corner_y)
+        di = jnp.arange(n1)
+        Y1 = Y1.at[di, di].add(y_d)
+        return jnp.concatenate(
+            [Y1.reshape(-1), -4.0 * jnp.sum(y_raw)[None], y_raw]
         )
 
-        def matvec(v):
-            F = v[:idx_t].reshape(n1, n1)
-            Fs = 0.5 * (F + F.T)
-            r_diag = jnp.diagonal(F)
-            f_row = F[:n, n].reshape(K, T)
-            f_col = F[n, :n].reshape(K, T)
-            r_a = 0.5 * (f_row.sum(0) + f_col.sum(0)) + (K - 2.0) * F[n, n]
-            # <Q̃_e, sym(F)> — same contraction as FactoredBQP.inner
-            Fxx = Fs[:n, :n].reshape(K, T, K, T)
-            f = Fs[:n, n].reshape(K, T)
-            comp = jnp.einsum("k,t,ktks->s", d, p, Fxx)
-            blocks = Fxx.transpose(1, 3, 0, 2)[src, dst]       # (|E|, K, K)
-            comm = jnp.einsum("ekl,kl->e", blocks, C)
-            base = jnp.einsum("k,t,kt->", d, p, f)
-            u_i = (C1 + P * d) @ f
-            u_j = Ct1 @ f
-            q1f = 0.5 * (base + u_i[src] + u_j[dst])
-            inner = comp[src] + comm + 2.0 * q1f + corner * Fs[n, n]
-            r_q = inner / qs - 4.0 * v[idx_t] + v[idx_t + 1 :]
-            return jnp.concatenate([r_diag, r_a, r_q])
+    return matvec, rmatvec, b
 
-        def rmatvec(y, dim):
-            y_d = y[:n1]
-            y_a = y[n1 : n1 + T]
-            y_raw = y[n1 + T :]
-            y_q = y_raw / qs
-            S = jnp.sum(y_q)
-            c_i = segment_sum(y_q, src, num_segments=T)
-            c_j = segment_sum(y_q, dst, num_segments=T)
-            W2 = segment_sum(y_q, src * T + dst, num_segments=T * T)
-            W2 = W2.reshape(T, T)
-            # X-X block: Σ_e y_e · sym(D ⊗ (p δ_iᵀ) + C ⊗ (δ_i δ_jᵀ))
-            M = 0.5 * (jnp.outer(p, c_i) + jnp.outer(c_i, p))
-            Z = jnp.einsum("kl,k,ts->ktls", eyeK, d, M)
-            T1 = jnp.einsum("kl,ts->ktls", C, W2)
-            Z = Z + 0.5 * (T1 + T1.transpose(2, 3, 0, 1))
-            # borders: Σ_e y_e q1_e + the A-row borders (0.5 per machine)
-            g = 0.5 * (
-                S * dp
-                + jnp.outer(C1 + P * d, c_i)
-                + jnp.outer(Ct1, c_j)
-                + jnp.broadcast_to(y_a[None, :], (K, T))
-            )
-            g = g.reshape(-1)
-            corner_y = S * corner + (K - 2.0) * jnp.sum(y_a)
-            Y1 = jnp.zeros((n1, n1), y.dtype)
-            Y1 = Y1.at[:n, :n].set(Z.reshape(n, n))
-            Y1 = Y1.at[:n, n].add(g)
-            Y1 = Y1.at[n, :n].add(g)
-            Y1 = Y1.at[n, n].add(corner_y)
-            di = jnp.arange(n1)
-            Y1 = Y1.at[di, di].add(y_d)
-            return jnp.concatenate(
-                [Y1.reshape(-1), -4.0 * jnp.sum(y_raw)[None], y_raw]
-            )
 
-        return matvec, rmatvec, b
+
+
+@functools.lru_cache(maxsize=16)
+def _cone_fns(k: int, eig_iters: int):
+    """PSD-cone projection pair shared by the single and batched loops.
+
+    ``cone_full`` is the O(n³) reference ``eigh`` and reseeds the tracked
+    basis with the k most-negative eigenvectors; ``cone_partial`` refines a
+    warm basis with ``eig_iters`` shifted subspace-iteration sweeps and
+    clips only the negative Ritz pairs, reporting ``ok=False`` when the
+    tracked subspace saturates or its Ritz residual exceeds eig_tol·σ.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    def cone_full(Y):
+        ew, EV = jnp.linalg.eigh(Y)
+        Yp = (EV * jnp.maximum(ew, 0.0)) @ EV.T
+        return Yp, EV[:, :k]          # basis <- k most-negative eigvecs
+
+    def cone_partial(Y, V, eig_tol):
+        # Shifted subspace iteration on (σI - Y): its top-k invariant
+        # subspace is Y's bottom-k.  σ = ‖Y‖_F ≥ λ_max keeps the shift
+        # positive; the basis is warm (last iteration's), so a few
+        # sweeps suffice near convergence.
+        sigma = jnp.linalg.norm(Y)
+
+        def sweep(_, Vc):
+            Q, _ = jnp.linalg.qr(sigma * Vc - Y @ Vc)
+            return Q
+
+        V = lax.fori_loop(0, eig_iters, sweep, V)
+        YV = Y @ V
+        theta, U = jnp.linalg.eigh(V.T @ YV)     # Ritz values, ascending
+        W = V @ U
+        neg = theta < 0.0
+        # Ritz residual of the negative pairs: ‖Y w - θ w‖ certifies the
+        # clip; saturation (num_neg == k) means negatives may extend
+        # beyond the tracked subspace — both force the full-eigh path.
+        R = YV @ U - W * theta
+        res = jnp.sqrt(jnp.sum(jnp.where(neg, jnp.sum(R * R, axis=0), 0.0)))
+        ok = (jnp.sum(neg) < k) & (res <= eig_tol * jnp.maximum(sigma, 1.0))
+        Yp = Y - (W * jnp.where(neg, theta, 0.0)) @ W.T
+        return ok, Yp, W
+
+    return cone_full, cone_partial
+
+
+@functools.lru_cache(maxsize=32)
+def _dr_jax_fn(
+    n1: int,
+    check_every: int,
+    k: int,
+    eig_iters: int,
+    eig_refresh: int,
+    kind: str,
+    n_tasks: int,
+    n_machines: int,
+):
+    """Build + jit the whole single-instance DR loop for one problem shape.
+
+    Everything that changes the traced graph is in the cache key; scalars
+    (rho, lam, tol, eig_tol, max_iters) stay traced arguments so retuning
+    them never recompiles.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.scipy.linalg import solve_triangular
+
+    idx_t = n1 * n1
+    cone_full, cone_partial = _cone_fns(k, eig_iters)
 
     def run(w0, V0, operands, CL, rho, lam, tol, eig_tol, max_iters):
         dim = w0.shape[0]
-        if kind == "factored":
-            matvec, rmatvec, b = _factored_ops(operands)
-        else:
-            matvec, rmatvec, b = _csr_ops(operands)
+        matvec, rmatvec, b = _make_device_ops(
+            kind, operands, n1, n_tasks, n_machines
+        )
 
         def affine(v):
             resid = matvec(v) - b
             z = solve_triangular(CL, resid, lower=True)
             y = solve_triangular(CL.T, z, lower=False)
             return v - rmatvec(y, dim)
-
-        def cone_full(Y):
-            ew, EV = jnp.linalg.eigh(Y)
-            Yp = (EV * jnp.maximum(ew, 0.0)) @ EV.T
-            return Yp, EV[:, :k]          # basis <- k most-negative eigvecs
-
-        def cone_partial(Y, V):
-            # Shifted subspace iteration on (σI - Y): its top-k invariant
-            # subspace is Y's bottom-k.  σ = ‖Y‖_F ≥ λ_max keeps the shift
-            # positive; the basis is warm (last iteration's), so a few
-            # sweeps suffice near convergence.
-            sigma = jnp.linalg.norm(Y)
-
-            def sweep(_, Vc):
-                Q, _ = jnp.linalg.qr(sigma * Vc - Y @ Vc)
-                return Q
-
-            V = lax.fori_loop(0, eig_iters, sweep, V)
-            YV = Y @ V
-            theta, U = jnp.linalg.eigh(V.T @ YV)     # Ritz values, ascending
-            W = V @ U
-            neg = theta < 0.0
-            # Ritz residual of the negative pairs: ‖Y w - θ w‖ certifies the
-            # clip; saturation (num_neg == k) means negatives may extend
-            # beyond the tracked subspace — both force the full-eigh path.
-            R = YV @ U - W * theta
-            res = jnp.sqrt(jnp.sum(jnp.where(neg, jnp.sum(R * R, axis=0), 0.0)))
-            ok = (jnp.sum(neg) < k) & (res <= eig_tol * jnp.maximum(sigma, 1.0))
-            Yp = Y - (W * jnp.where(neg, theta, 0.0)) @ W.T
-            return ok, Yp, W
 
         def chunk(state):
             w, V, vc, it, res, nf, npart = state
@@ -648,7 +684,7 @@ def _dr_jax_fn(
                 y = 2.0 * v_aff - w
                 Y = y[:idx_t].reshape(n1, n1)
                 Y = 0.5 * (Y + Y.T)
-                ok, Yp_p, V_p = cone_partial(Y, V)
+                ok, Yp_p, V_p = cone_partial(Y, V, eig_tol)
                 use_full = force | ~ok
                 Yp, Vn = lax.cond(
                     use_full,
@@ -687,6 +723,168 @@ def _dr_jax_fn(
     return jax.jit(run)
 
 
+@functools.lru_cache(maxsize=16)
+def _dr_jax_batch_fn(
+    n1: int,
+    check_every: int,
+    k: int,
+    eig_iters: int,
+    eig_refresh: int,
+    kind: str,
+    n_tasks: int,
+    n_machines: int,
+):
+    """Build + jit the BATCHED DR loop: B same-shape instances, one dispatch.
+
+    The per-instance math (constraint matvecs, affine projection, partial
+    cone projection) is vmapped, but the loop itself is written manually
+    rather than vmapping the single-instance body: under ``vmap`` a
+    ``lax.cond`` lowers to a select that executes BOTH branches, which
+    would run the O(n³) full eigh for the whole batch on every iteration.
+    Instead the full-eigh fallback is a ``lax.scan`` over lanes with a
+    per-lane ``lax.cond`` — under scan (unlike vmap) ``cond`` stays real
+    control flow, so each step runs the full ``eigh`` for exactly the
+    lanes that need it and no others (see the comment at the scan).  The
+    ``eig_refresh`` schedule is batch-uniform, so each instance's
+    full/partial decisions (and hence its iterates) match its own
+    sequential solve.
+
+    Per-instance convergence masking: every ``check_every`` steps the
+    chunk's end state is merged with ``jnp.where(done, old, new)`` so
+    converged instances freeze, ``it_conv`` records the iteration count at
+    which each instance's residual first crossed ``tol`` (the sequential
+    path's reported ``iterations``), and the while_loop exits once all
+    instances are done or ``max_iters`` hits.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.scipy.linalg import solve_triangular
+
+    idx_t = n1 * n1
+    cone_full, cone_partial = _cone_fns(k, eig_iters)
+
+    def run(w0, V0, operands, CL, rho, lam, tol, eig_tol, max_iters):
+        B, dim = w0.shape
+
+        def one_affine(w_i, ops_i, CL_i):
+            matvec, rmatvec, b = _make_device_ops(
+                kind, ops_i, n1, n_tasks, n_machines
+            )
+            resid = matvec(w_i) - b
+            z = solve_triangular(CL_i, resid, lower=True)
+            y = solve_triangular(CL_i.T, z, lower=False)
+            return w_i - rmatvec(y, dim)
+
+        affine_b = jax.vmap(one_affine, in_axes=(0, 0, 0))
+        cone_partial_b = jax.vmap(cone_partial, in_axes=(0, 0, None))
+
+        def chunk(state):
+            w, V, vc, it, res, done, it_conv, nf, npart = state
+            nsteps = jnp.minimum(check_every, max_iters - it)
+
+            def body(j, carry):
+                w, V, vc, nf, npart, _ = carry
+                git = it + j
+                if eig_refresh > 0:
+                    force = git % eig_refresh == 0
+                else:
+                    force = git == 0
+                v_aff = affine_b(w.at[:, idx_t].add(-rho), operands, CL)
+                y = 2.0 * v_aff - w
+                Y = y[:, :idx_t].reshape(B, n1, n1)
+                Y = 0.5 * (Y + jnp.transpose(Y, (0, 2, 1)))
+                ok, Yp_p, V_p = cone_partial_b(Y, V, eig_tol)
+                use_full = force | ~ok                        # (B,)
+
+                # Per-lane full-eigh fallback WITHOUT batch amplification.
+                # Under vmap a cond lowers to a select that evaluates both
+                # branches, and a batch-level cond(any(use_full)) charges
+                # the O(n1³) batched eigh to every lane whenever ONE lane
+                # fails — with B lanes failing independently at rate p the
+                # trigger fires at rate 1-(1-p)^B ≈ 1, so the "fallback"
+                # becomes the steady state.  A lax.scan over lanes keeps
+                # cond as real control flow (scan bodies run sequentially),
+                # so each step pays the full projection for exactly the
+                # lanes that need it — the same cost profile as B
+                # sequential solves.  The scan itself still re-stacks
+                # (Yp, V) for all B lanes, so an outer batch-level cond
+                # skips it entirely on the common no-failure iteration
+                # (identity: the scan with use_full all-False returns
+                # exactly (Yp_p, V_p)).
+                def lane(_, xs):
+                    Y_i, Yp_i, V_i, uf = xs
+                    Yp_i, V_i = lax.cond(
+                        uf, lambda: cone_full(Y_i), lambda: (Yp_i, V_i)
+                    )
+                    return None, (Yp_i, V_i)
+
+                def scan_lanes():
+                    _, out = lax.scan(
+                        lane, None, (Y, Yp_p, V_p, use_full)
+                    )
+                    return out
+
+                Yp, Vn = lax.cond(
+                    jnp.any(use_full), scan_lanes, lambda: (Yp_p, V_p)
+                )
+                v_cone = jnp.concatenate(
+                    [
+                        Yp.reshape(B, -1),
+                        y[:, idx_t : idx_t + 1],
+                        jnp.maximum(y[:, idx_t + 1 :], 0.0),
+                    ],
+                    axis=1,
+                )
+                step = v_cone - v_aff
+                w = w + lam * step
+                nf = nf + use_full.astype(jnp.int32)
+                npart = npart + (~use_full).astype(jnp.int32)
+                return w, Vn, v_cone, nf, npart, jnp.sum(step * step, axis=1)
+
+            w2, V2, vc2, nf2, npart2, sn = lax.fori_loop(
+                0,
+                nsteps,
+                body,
+                (w, V, vc, nf, npart, jnp.zeros((B,), w.dtype)),
+            )
+            it2 = it + nsteps
+            res_b = jnp.sqrt(sn / dim)
+            # Freeze converged instances: their iterate, basis, residual,
+            # and eig counters keep the values they had at first crossing.
+            keep = done[:, None]
+            w = jnp.where(keep, w, w2)
+            V = jnp.where(done[:, None, None], V, V2)
+            vc = jnp.where(keep, vc, vc2)
+            nf = jnp.where(done, nf, nf2)
+            npart = jnp.where(done, npart, npart2)
+            res = jnp.where(done, res, res_b)
+            newly = (~done) & (res_b < tol)
+            it_conv = jnp.where(newly, it2, it_conv)
+            done = done | newly
+            return w, V, vc, it2, res, done, it_conv, nf, npart
+
+        def cond(state):
+            it, done = state[3], state[5]
+            return (it < max_iters) & ~jnp.all(done)
+
+        zero_b = jnp.zeros((B,), jnp.int32)
+        state = (
+            w0,
+            V0,
+            w0,
+            jnp.zeros((), jnp.int32),
+            jnp.full((B,), jnp.inf, w0.dtype),
+            jnp.zeros((B,), bool),
+            zero_b,
+            zero_b,
+            zero_b,
+        )
+        return lax.while_loop(cond, chunk, state)
+
+    return jax.jit(run)
+
+
 @functools.lru_cache(maxsize=8)
 def _normalize_y_fn(n1: int):
     import jax
@@ -704,6 +902,50 @@ def _normalize_y_fn(n1: int):
     return normalize
 
 
+@functools.lru_cache(maxsize=8)
+def _normalize_y_batch_fn(n1: int):
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def normalize(vc):                                    # vc: (B, dim)
+        Y = vc[:, : n1 * n1].reshape(-1, n1, n1)
+        Y = 0.5 * (Y + jnp.transpose(Y, (0, 2, 1)))
+        d = jnp.sqrt(jnp.clip(jnp.diagonal(Y, axis1=1, axis2=2), 1e-12, None))
+        Y = Y / (d[:, :, None] * d[:, None, :])
+        eye = jnp.eye(n1, dtype=bool)
+        return jnp.where(eye[None], 1.0, Y)
+
+    return normalize
+
+
+def _host_operands(bqp, proj: _AffineProjector):
+    """Host-side operand arrays for ``_make_device_ops``.
+
+    Returns ``(kind, n_tasks, n_machines, arrays)`` with float32/int32
+    numpy leaves so a single solve can push them straight to device and a
+    batched solve can ``np.stack`` the per-instance leaves first.
+    """
+    if isinstance(bqp, FactoredBQP):
+        arrays = (
+            np.asarray(bqp.p, np.float32),
+            np.asarray(bqp.d, np.float32),
+            np.asarray(bqp.C, np.float32),
+            np.asarray(bqp.src, np.int32),
+            np.asarray(bqp.dst, np.int32),
+            np.asarray(bqp.q_scale, np.float32),
+        )
+        return "factored", bqp.n_tasks, bqp.n_machines, arrays
+    rows, cols, vals, b = proj.export_csr()
+    arrays = (
+        np.asarray(vals, np.float32),
+        np.asarray(rows, np.int32),
+        np.asarray(cols, np.int32),
+        np.asarray(b, np.float32),
+    )
+    return "csr", 0, 0, arrays
+
+
 def _solve_jax(bqp, opts: SDPOptions, proj: _AffineProjector, warm_start: dict | None):
     import jax.numpy as jnp
 
@@ -712,25 +954,8 @@ def _solve_jax(bqp, opts: SDPOptions, proj: _AffineProjector, warm_start: dict |
     k = min(opts.eig_k, n1)
     dtype = jnp.float32
 
-    if isinstance(bqp, FactoredBQP):
-        kind, n_t, n_k = "factored", bqp.n_tasks, bqp.n_machines
-        operands = (
-            jnp.asarray(bqp.p, dtype),
-            jnp.asarray(bqp.d, dtype),
-            jnp.asarray(bqp.C, dtype),
-            jnp.asarray(bqp.src, jnp.int32),
-            jnp.asarray(bqp.dst, jnp.int32),
-            jnp.asarray(bqp.q_scale, dtype),
-        )
-    else:
-        kind, n_t, n_k = "csr", 0, 0
-        rows, cols, vals, b = proj.export_csr()
-        operands = (
-            jnp.asarray(vals, dtype),
-            jnp.asarray(rows, jnp.int32),
-            jnp.asarray(cols, jnp.int32),
-            jnp.asarray(b, dtype),
-        )
+    kind, n_t, n_k, host_ops = _host_operands(bqp, proj)
+    operands = tuple(jnp.asarray(a) for a in host_ops)
 
     w_np = _warm_w(warm_start, dim)
     warm = w_np is not None
@@ -768,6 +993,108 @@ def _solve_jax(bqp, opts: SDPOptions, proj: _AffineProjector, warm_start: dict |
     state = {"w": np.asarray(w, np.float64), "V": np.asarray(V, np.float64)}
     v_cone_host = np.asarray(v_cone, np.float64)
     return v_cone_host, int(it), float(residual), stats, state, Y_device
+
+
+# Count of batched jit dispatches — smoke tests assert a B-instance solve
+# increments this by exactly one (i.e. the batch really was ONE dispatch).
+_BATCH_RUN_CALLS = 0
+
+
+class _BatchShapeError(ValueError):
+    """Same-shape instances whose device operands still disagree in shape
+
+    (e.g. CSR exports with different sparsity counts) — the caller falls
+    back to sequential solves instead of crashing.
+    """
+
+
+def _solve_jax_batch(bqps, opts: SDPOptions, projs, warm_starts):
+    """Stack B same-shape instances and run the batched DR jit ONCE."""
+    import jax.numpy as jnp
+
+    global _BATCH_RUN_CALLS
+    B = len(bqps)
+    n1, dim = projs[0].n1, projs[0].dim
+    k = min(opts.eig_k, n1)
+    dtype = jnp.float32
+
+    host = [_host_operands(bqp, proj) for bqp, proj in zip(bqps, projs)]
+    kind, n_t, n_k, _ = host[0]
+    for kk, tt, mm, arrays in host[1:]:
+        if (kk, tt, mm) != (kind, n_t, n_k) or any(
+            a.shape != a0.shape for a, a0 in zip(arrays, host[0][3])
+        ):
+            raise _BatchShapeError(
+                "instance device operands disagree in kind or shape"
+            )
+    operands = tuple(
+        jnp.asarray(np.stack([h[3][i] for h in host]))
+        for i in range(len(host[0][3]))
+    )
+    CL = jnp.asarray(np.stack([p.cholesky_lower() for p in projs]), dtype)
+
+    w_stack, V_stack, warm_flags = [], [], []
+    for ws in warm_starts:
+        w_np = _warm_w(ws, dim)
+        warm_flags.append(w_np is not None)
+        if w_np is None:
+            w_np = _identity_start(n1, dim)
+        V_np = ws.get("V") if ws else None
+        if V_np is None or np.asarray(V_np).shape != (n1, k):
+            V_np = np.eye(n1, k)   # placeholder; iteration 0 full-eigh reseeds
+        w_stack.append(np.asarray(w_np, np.float32))
+        V_stack.append(np.asarray(V_np, np.float32))
+
+    run = _dr_jax_batch_fn(
+        n1, opts.check_every, k, opts.eig_iters, opts.eig_refresh, kind, n_t, n_k
+    )
+    _BATCH_RUN_CALLS += 1
+    w, V, v_cone, it, res, done, it_conv, n_full, n_partial = run(
+        jnp.asarray(np.stack(w_stack)),
+        jnp.asarray(np.stack(V_stack)),
+        operands,
+        CL,
+        jnp.asarray(opts.rho, dtype),
+        jnp.asarray(opts.over_relax, dtype),
+        jnp.asarray(opts.tol, dtype),
+        jnp.asarray(opts.eig_tol, dtype),
+        jnp.asarray(opts.max_iters, jnp.int32),
+    )
+    Y_device = _normalize_y_batch_fn(n1)(v_cone)
+
+    it_total = int(it)
+    out = []
+    for i in range(B):
+        stats = {
+            "solver_backend": "jax",
+            "solver_dtype": "float32",
+            "constraint_kind": kind,
+            "warm_started": warm_flags[i],
+            "eig_full": int(n_full[i]),
+            "eig_partial": int(n_partial[i]),
+            "eig_k": k,
+            "batch": B,
+            "batch_index": i,
+            "batch_dispatches": 1,
+        }
+        state = {
+            "w": np.asarray(w[i], np.float64),
+            "V": np.asarray(V[i], np.float64),
+        }
+        # A converged instance reports the iteration at which its residual
+        # first crossed tol (it froze there), NOT the global loop count.
+        it_i = int(it_conv[i]) if bool(done[i]) else it_total
+        out.append(
+            (
+                np.asarray(v_cone[i], np.float64),
+                it_i,
+                float(res[i]),
+                stats,
+                state,
+                Y_device[i],
+            )
+        )
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -825,6 +1152,25 @@ def solve_sdp(
         v_cone, it, residual, bstats, state, Y_device = _solve_numpy(
             bqp, opts, proj, warm_start
         )
+    return _finish_solution(
+        bqp, opts, proj, v_cone, it, residual, bstats, state, Y_device,
+        time.perf_counter() - t0,
+    )
+
+
+def _finish_solution(
+    bqp,
+    opts: SDPOptions,
+    proj: _AffineProjector,
+    v_cone: np.ndarray,
+    it: int,
+    residual: float,
+    bstats: dict,
+    state: dict,
+    Y_device,
+    seconds: float,
+) -> SDPSolution:
+    """Host post-processing shared by single and batched solves."""
     n1 = proj.n1
 
     # Extract Y from the cone side (guaranteed PSD up to the projection
@@ -873,8 +1219,97 @@ def solve_sdp(
         residual=residual,
         converged=converged,
         bound_certified=converged,
-        solve_seconds=time.perf_counter() - t0,
+        solve_seconds=seconds,
         stats=stats,
         Y_device=Y_device,
         state=state,
     )
+
+
+def solve_sdp_batch(
+    bqps,
+    options: SDPOptions | None = None,
+    warm_starts=None,
+) -> list[SDPSolution]:
+    """Solve B same-shape instances in ONE jitted batched DR dispatch.
+
+    All instances must share representation type, ``n``, ``n_tasks``,
+    ``n_machines``, and constraint-edge count; their weights (p, d, C,
+    q_scale / CSR values) are free to differ — they become the vmapped
+    batch axis.  Per-instance convergence masking freezes instances the
+    moment their residual crosses ``tol`` while stragglers keep iterating,
+    so each returned ``SDPSolution`` matches its own sequential
+    ``solve_sdp`` call (iterate, residual, iteration count) to float32
+    tolerance.
+
+    ``warm_starts`` is an optional list of per-instance ``state`` payloads
+    (``None`` entries cold-start that lane).  Backend resolution differs
+    from ``solve_sdp``: "auto" takes the batched jax path whenever JAX is
+    importable regardless of ``jax_above`` — amortizing dispatch overhead
+    across the batch is the whole point — while "numpy" (or a missing JAX
+    under "auto") degrades to B sequential host solves.
+
+    Per-instance ``solve_seconds`` is the batch wall time divided by B;
+    the full wall time is in ``stats["batch_seconds"]``.
+    """
+    opts = options or SDPOptions()
+    bqps = list(bqps)
+    if not bqps:
+        return []
+    if warm_starts is None:
+        warm_starts = [None] * len(bqps)
+    warm_starts = list(warm_starts)
+    if len(warm_starts) != len(bqps):
+        raise ValueError("warm_starts must have one entry per instance")
+
+    first = bqps[0]
+    for b in bqps[1:]:
+        if (
+            type(b) is not type(first)
+            or b.n != first.n
+            or b.n_tasks != first.n_tasks
+            or b.n_machines != first.n_machines
+            or len(b.edges) != len(first.edges)
+        ):
+            raise ValueError(
+                "solve_sdp_batch requires same-shape instances "
+                "(same type, n, n_tasks, n_machines, and edge count)"
+            )
+
+    if opts.backend == "jax" and not compat.jax_available():
+        raise ImportError(
+            "SDPOptions(backend='jax') requested but jax is not importable; "
+            "use backend='auto' (or 'numpy') for a host fallback"
+        )
+    if opts.backend == "numpy" or not compat.jax_available():
+        return [solve_sdp(b, opts, ws) for b, ws in zip(bqps, warm_starts)]
+
+    t0 = time.perf_counter()
+    projs = [
+        _AffineProjector(
+            b,
+            sparse=opts.sparse,
+            cholesky_above=opts.cholesky_above,
+            keep_gram=True,
+        )
+        for b in bqps
+    ]
+    try:
+        raw = _solve_jax_batch(bqps, opts, projs, warm_starts)
+    except _BatchShapeError:
+        return [solve_sdp(b, opts, ws) for b, ws in zip(bqps, warm_starts)]
+    total = time.perf_counter() - t0
+
+    sols = []
+    for bqp, proj, (v_cone, it, residual, bstats, state, Y_dev) in zip(
+        bqps, projs, raw
+    ):
+        bstats = dict(bstats)
+        bstats["batch_seconds"] = total
+        sols.append(
+            _finish_solution(
+                bqp, opts, proj, v_cone, it, residual, bstats, state, Y_dev,
+                total / len(bqps),
+            )
+        )
+    return sols

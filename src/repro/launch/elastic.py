@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.core.bqp import bottleneck_time
 from repro.core.graphs import ComputeGraph, TaskGraph
-from repro.core.scheduler import Schedule, schedule
+from repro.core.scheduler import Schedule, schedule, schedule_batch
 
 
 @dataclasses.dataclass
@@ -104,6 +104,61 @@ class ElasticScheduler:
                 {"event": "migrate", "bottleneck": candidate.bottleneck}
             )
             return candidate
+        self.history.append({"event": "keep", "bottleneck": current_t})
+        return None
+
+    def on_delay_updates(self, C_list) -> Schedule | None:
+        """Batched drift re-solve across accumulated delay updates.
+
+        When delay telemetry arrives faster than the re-schedule cadence,
+        the backlog of matrices is solved as ONE batched SDP dispatch
+        (``schedule_batch``): every lane shares the task graph and machine
+        speeds and differs only in C, so the stacked solve amortizes
+        per-dispatch overhead and the batched warm-start cache restores
+        every lane from the previous consult's iterates at once.  The LAST
+        matrix is adopted as the current network state; each lane's
+        candidate assignment is re-evaluated under it and the best one is
+        adopted iff it beats the current assignment's bottleneck by
+        ``reschedule_threshold`` — an assignment tuned for an intermediate
+        delay snapshot can still win under the latest one.
+        """
+        C_list = list(C_list)
+        if not C_list:
+            return None
+        if len(C_list) == 1:
+            return self.on_delay_update(C_list[0])
+        cg = self.compute_graph
+        mats = []
+        for C_new in C_list:
+            C_new = np.asarray(C_new, dtype=np.float64)
+            if C_new.shape[0] != cg.num_machines:
+                C_new = C_new[np.ix_(self.machine_ids, self.machine_ids)]
+            mats.append(C_new)
+        self.compute_graph = ComputeGraph(e=cg.e, C=mats[-1])
+        candidates = schedule_batch(
+            [self.task_graph] * len(mats),
+            [ComputeGraph(e=cg.e, C=C) for C in mats],
+            self.method,
+            seed=self.seed,
+            warm_start=self.warm_start,
+            **self.schedule_kwargs,
+        )
+        current_t = bottleneck_time(
+            self.task_graph, self.compute_graph, self.current.assignment
+        )
+        times = [
+            bottleneck_time(self.task_graph, self.compute_graph, c.assignment)
+            for c in candidates
+        ]
+        best = int(np.argmin(times))
+        if times[best] < current_t * (1 - self.reschedule_threshold):
+            self.current = dataclasses.replace(
+                candidates[best], bottleneck=float(times[best])
+            )
+            self.history.append(
+                {"event": "migrate", "bottleneck": self.current.bottleneck}
+            )
+            return self.current
         self.history.append({"event": "keep", "bottleneck": current_t})
         return None
 

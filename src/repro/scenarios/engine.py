@@ -272,10 +272,19 @@ def _simulate_drift(
             if r % scenario.reschedule_every == 0
         ]
 
+    last_consult = {"round": 0}
+
     def consult(tg_, cg_, r):
-        # cg_ carries the drift.at(r) the engine already applied; the
-        # ElasticScheduler decides adopt-vs-keep under the same delays.
-        es.on_delay_update(cg_.C)
+        # cg_ carries the drift.at(r) the engine already applied.  Every
+        # delay snapshot since the previous consult goes into ONE batched
+        # warm-started re-solve (``on_delay_updates``): the lanes share
+        # structure and differ only in C, the last lane IS the current
+        # network state, and the ElasticScheduler adopts the best lane's
+        # assignment under it only if it clears the migration threshold.
+        lo = last_consult["round"] + 1
+        backlog = [drift.at(rr) for rr in range(lo, r)][-7:] + [cg_.C]
+        last_consult["round"] = r
+        es.on_delay_updates(backlog)
         return es.current.assignment
 
     spec = scenario.execution_spec()
@@ -366,7 +375,11 @@ def _method_entry(s) -> dict:
         info = s.info
         entry["sdp_converged"] = bool(info.get("sdp_converged", False))
         entry["representation"] = info.get("representation")
+        entry["solver_backend"] = info.get("solver_backend")
         entry["sdp_seconds"] = float(info.get("sdp_seconds", 0.0))
+        stats = info.get("solver_stats") or {}
+        if "batch" in stats:
+            entry["solve_batch"] = int(stats["batch"])
         for key in ("lower_bound", "lower_bound_uncertified",
                     "rounding_lower_bound", "upper_bound",
                     "expected_bottleneck"):
@@ -375,8 +388,16 @@ def _method_entry(s) -> dict:
     return entry
 
 
-def run_scenario(scenario: Scenario, *, quick: bool = False) -> dict:
-    """Execute one scenario end to end; returns a JSON-serializable record."""
+def run_scenario(
+    scenario: Scenario, *, quick: bool = False, _presolved: dict | None = None
+) -> dict:
+    """Execute one scenario end to end; returns a JSON-serializable record.
+
+    ``_presolved`` is ``run_sweep``'s batched-solve hand-off: a
+    ``compare_methods`` SDP cache (``{"bqp", "sol", "representation"}``)
+    whose solution came out of a ``solve_sdp_batch`` over same-shape
+    scenarios — the static path consumes it instead of re-solving.
+    """
     t0 = time.perf_counter()
     kw = _schedule_kwargs(scenario, quick)
     fl = scenario.fl
@@ -396,9 +417,11 @@ def run_scenario(scenario: Scenario, *, quick: bool = False) -> dict:
         cg, drift = build_compute_graph(scenario, rng)
         # Under drift each method's only solve lives in its
         # ElasticScheduler (below); static scenarios share one SDP solve
-        # across the sdp family through compare_methods' cache.
+        # across the sdp family through compare_methods' cache (possibly
+        # pre-filled by run_sweep's batched solve).
         schedules = None if drift is not None else compare_methods(
-            tg, cg, methods=tuple(scenario.schedulers), **kw
+            tg, cg, methods=tuple(scenario.schedulers),
+            _sdp_cache=_presolved, **kw
         )
 
     # An FL workload defines the round count; the simulated totals and the
@@ -442,6 +465,80 @@ def run_scenario(scenario: Scenario, *, quick: bool = False) -> dict:
 # ---------------------------------------------------------------------------
 
 
+def _presolve_groups(pending, quick: bool) -> dict:
+    """Batch the SDP solves of same-shape pending scenarios.
+
+    Groups static (no drift, no paper-setting FL) scenarios that request
+    an sdp-family scheduler by the shape the batched solver requires —
+    (num_tasks, num_machines, constraint-edge count) plus the resolved
+    representation, solver backend, and options — and runs each group of
+    two or more through ONE ``solve_sdp_batch`` dispatch.  The instances
+    are generated exactly as ``run_scenario`` will regenerate them (same
+    ``default_rng(seed)`` stream), and the backend is resolved per
+    instance with the same rule ``solve_sdp`` applies, so a record
+    computed through a batch is the record the sequential path produces.
+
+    Returns ``{scenario_key: sdp-cache dict}`` for the batched scenarios;
+    everything else solves inside its own ``run_scenario`` as before.
+    """
+    from repro.core import bqp as bqp_mod
+    from repro.core.scheduler import _pick_representation
+    from repro.core.sdp import _resolve_backend, solve_sdp_batch
+
+    groups: dict[tuple, list] = {}
+    for sc in pending:
+        if not any(m in _SDP_FAMILY for m in sc.schedulers):
+            continue
+        if sc.fl is not None and sc.fl.paper_setting:
+            continue
+        if sc.delay_model == "drift":
+            continue
+        kw = _schedule_kwargs(sc, quick)
+        rng = np.random.default_rng(sc.seed)
+        tg = build_task_graph(sc, rng)
+        cg, drift = build_compute_graph(sc, rng)
+        if drift is not None:
+            continue
+        rep = _pick_representation(tg, cg, kw.get("representation", "auto"))
+        opts = kw.get("sdp_options") or SDPOptions()
+        if kw.get("solver_backend") is not None:
+            opts = dataclasses.replace(opts, backend=kw["solver_backend"])
+        opts = dataclasses.replace(
+            opts,
+            backend=_resolve_backend(opts, tg.num_tasks * cg.num_machines + 1),
+        )
+        gkey = (
+            tg.num_tasks,
+            cg.num_machines,
+            len(tg.constraint_edges()),
+            rep,
+            opts,
+        )
+        groups.setdefault(gkey, []).append((sc, tg, cg))
+
+    out: dict = {}
+    for (n_t, n_k, n_e, rep, opts), items in groups.items():
+        if len(items) < 2:
+            continue
+        build = (
+            bqp_mod.build_factored_bqp
+            if rep == "factored"
+            else bqp_mod.build_bqp
+        )
+        bqps = [build(tg, cg) for _, tg, cg in items]
+        try:
+            sols = solve_sdp_batch(bqps, opts)
+        except (ValueError, ImportError):   # pragma: no cover — shape drift
+            continue
+        for (sc, tg, cg), bqp, sol in zip(items, bqps, sols):
+            out[scenario_key(sc, quick)] = {
+                "bqp": bqp,
+                "sol": sol,
+                "representation": rep,
+            }
+    return out
+
+
 def run_sweep(
     scenarios: Iterable[Scenario],
     out_path: str | pathlib.Path = "BENCH_scenarios.json",
@@ -449,6 +546,7 @@ def run_sweep(
     quick: bool = False,
     resume: bool = True,
     progress: Callable[[str], None] | None = None,
+    batch_solves: bool = True,
 ) -> dict:
     """Run scenarios in order, persisting after every record.
 
@@ -458,12 +556,26 @@ def run_sweep(
     killed sweep resumes where it left off, and quick-budget records never
     masquerade as (or block) full-budget ones.  ``resume=False`` starts
     fresh.
+
+    With ``batch_solves`` (the default) pending same-shape static
+    scenarios have their SDP relaxations solved up front in batched
+    ``solve_sdp_batch`` dispatches (``_presolve_groups``); each
+    ``run_scenario`` then consumes its pre-solved relaxation instead of
+    solving alone.
     """
     path = pathlib.Path(out_path)
     records: list[dict] = []
     if resume and path.exists():
         records = json.loads(path.read_text()).get("records", [])
     done = {record_key(r) for r in records}
+
+    scenarios = list(scenarios)
+    presolved: dict = {}
+    if batch_solves:
+        pending = [sc for sc in scenarios if scenario_key(sc, quick) not in done]
+        presolved = _presolve_groups(pending, quick)
+        if presolved and progress:
+            progress(f"batched {len(presolved)} same-shape SDP solves")
 
     payload = {"bench": "scenario_sweep", "records": records}
     for sc in scenarios:
@@ -474,7 +586,7 @@ def run_sweep(
             continue
         if progress:
             progress(f"run {sc.name} seed={sc.seed} ...")
-        rec = run_scenario(sc, quick=quick)
+        rec = run_scenario(sc, quick=quick, _presolved=presolved.get(key))
         records.append(rec)
         done.add(key)
         _write_atomic(path, payload)

@@ -1,0 +1,200 @@
+"""Batched SDP solves: batched == sequential, masking, cache hygiene.
+
+The batched Douglas-Rachford path (``solve_sdp_batch``) stacks B
+same-shape instances into ONE jitted dispatch with per-instance
+convergence masking.  Its contract with the sequential jax path is
+per-lane equivalence: each lane's iterate, residual, reported iteration
+count, and full/partial projection decisions match its own
+``solve_sdp`` call to float32 tolerance.  The batched fused rounding and
+the ``schedule_batch`` service wrapper inherit the same contract, and the
+rounding jit cache must keep batched and single-instance closures from
+evicting each other.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ComputeGraph,
+    SDPOptions,
+    build_factored_bqp,
+    random_compute_graph,
+    random_task_graph,
+    randomized_rounding,
+    randomized_rounding_batch,
+    schedule,
+    schedule_batch,
+    solve_sdp,
+    solve_sdp_batch,
+)
+from repro.core import rounding as rounding_mod
+from repro.core import sdp as sdp_mod
+
+jax = pytest.importorskip("jax")
+
+# float32 loop, two lowerings (vmapped vs single ops): agreement at a
+# converged iterate is a few f32 ulps over n²-sized contractions.
+F32_ATOL = 1e-3
+
+# Converging settings: every lane crosses tol well inside the budget, so
+# per-lane freezing (not the global loop exit) determines each lane's
+# reported iterate — exactly the semantics under test.
+OPTS = SDPOptions(max_iters=6000, check_every=50, tol=1e-4, backend="jax")
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    """One task graph, 8 compute graphs differing only in weights."""
+    rng = np.random.default_rng(42)
+    tg = random_task_graph(rng, 6, degree_low=1, degree_high=3)
+    cg = random_compute_graph(rng, 3)
+    cgs = [
+        ComputeGraph(
+            e=cg.e * rng.uniform(0.6, 1.5, size=cg.e.shape),
+            C=cg.C * rng.uniform(0.6, 1.5),
+        )
+        for _ in range(8)
+    ]
+    return tg, cgs
+
+
+@pytest.fixture(scope="module")
+def sequential_solutions(fleet):
+    tg, cgs = fleet
+    return [solve_sdp(build_factored_bqp(tg, cg), OPTS) for cg in cgs]
+
+
+@pytest.mark.parametrize("B", [2, 8])
+def test_batch_matches_sequential(fleet, sequential_solutions, B):
+    tg, cgs = fleet
+    bqps = [build_factored_bqp(tg, cg) for cg in cgs[:B]]
+    before = sdp_mod._BATCH_RUN_CALLS
+    sols = solve_sdp_batch(bqps, OPTS)
+    assert sdp_mod._BATCH_RUN_CALLS == before + 1   # ONE jitted dispatch
+    assert len(sols) == B
+    for i, (got, want) in enumerate(zip(sols, sequential_solutions)):
+        assert got.stats["solver_backend"] == "jax"
+        assert got.stats["batch"] == B
+        assert got.stats["batch_index"] == i
+        assert got.stats["batch_dispatches"] == 1
+        assert got.converged and want.converged
+        # identical projection decisions -> identical iteration trajectory
+        assert got.iterations == want.iterations
+        assert got.stats["eig_full"] == want.stats["eig_full"]
+        assert got.stats["eig_partial"] == want.stats["eig_partial"]
+        np.testing.assert_allclose(got.Y, want.Y, atol=F32_ATOL)
+        assert np.isclose(got.residual, want.residual, atol=F32_ATOL)
+        assert got.residual <= OPTS.tol
+
+
+def test_converged_lane_reports_first_crossing(fleet, sequential_solutions):
+    """A frozen lane reports the iteration its residual first crossed tol.
+
+    The batched while_loop runs until the SLOWEST lane finishes; a lane
+    that converged earlier must report its own crossing iteration (the
+    sequential path's ``iterations``), not the global loop count.
+    """
+    tg, cgs = fleet
+    bqps = [build_factored_bqp(tg, cg) for cg in cgs]
+    sols = solve_sdp_batch(bqps, OPTS)
+    iters = [s.iterations for s in sols]
+    # the fleet's perturbed weights make lanes converge at different
+    # iterations — otherwise freezing would be untested
+    assert len(set(iters)) > 1
+    global_count = max(iters)
+    for got, want in zip(sols, sequential_solutions):
+        assert got.iterations == want.iterations
+        assert got.iterations <= global_count
+
+
+def test_batch_rejects_mismatched_shapes(fleet):
+    tg, cgs = fleet
+    rng = np.random.default_rng(7)
+    other_tg = random_task_graph(rng, 9, degree_low=1, degree_high=3)
+    other_cg = random_compute_graph(rng, 3)
+    with pytest.raises(ValueError, match="same-shape"):
+        solve_sdp_batch(
+            [build_factored_bqp(tg, cgs[0]),
+             build_factored_bqp(other_tg, other_cg)],
+            OPTS,
+        )
+
+
+def test_batched_rounding_matches_single_fused(fleet, sequential_solutions):
+    """Batched rounding == the single fused jax backend, lane by lane."""
+    tg, cgs = fleet
+    B = 4
+    bqps = [build_factored_bqp(tg, cg) for cg in cgs[:B]]
+    sols = sequential_solutions[:B]
+    batched = randomized_rounding_batch(
+        bqps, [tg] * B, cgs[:B], [s.Y for s in sols],
+        num_samples=256,
+        rngs=[np.random.default_rng(0) for _ in range(B)],
+        backend="jax",
+        Y_devices=[s.Y_device for s in sols],
+    )
+    for bqp, cg, sol, got in zip(bqps, cgs, sols, batched):
+        want = randomized_rounding(
+            bqp, tg, cg, sol.Y,
+            num_samples=256,
+            rng=np.random.default_rng(0),
+            backend="jax",
+            Y_device=sol.Y_device,
+        )
+        np.testing.assert_array_equal(got.assignment, want.assignment)
+        assert np.isclose(got.bottleneck, want.bottleneck, rtol=1e-6)
+        assert got.num_feasible == want.num_feasible
+
+
+def test_rounding_cache_batch_and_single_coexist(fleet):
+    """Satellite regression: the rounding jit cache keys carry the batch
+    dimension, so batched and single closures of the SAME instance shape
+    are distinct entries and re-requests are LRU hits, not recompiles."""
+    tg, cgs = fleet
+    cg = cgs[0]
+    n_e = len(tg.constraint_edges())
+    single = rounding_mod._fused_rounding_fn(
+        tg, cg, tg.num_tasks, cg.num_machines, False
+    )
+    b2 = rounding_mod._fused_rounding_batch_fn(
+        2, tg.num_tasks, cg.num_machines, n_e, False
+    )
+    b4 = rounding_mod._fused_rounding_batch_fn(
+        4, tg.num_tasks, cg.num_machines, n_e, False
+    )
+    # distinct closures per (kind, B); stable identity on re-request
+    assert b2 is not b4
+    assert single is not b2
+    assert rounding_mod._fused_rounding_batch_fn(
+        2, tg.num_tasks, cg.num_machines, n_e, False
+    ) is b2
+    assert rounding_mod._fused_rounding_fn(
+        tg, cg, tg.num_tasks, cg.num_machines, False
+    ) is single
+    # both key shapes live in the one LRU; batched keys are shape-keyed
+    # and tagged, single keys are content-keyed
+    keys = list(rounding_mod._JAX_CACHE)
+    batch_keys = [k for k in keys if k[0] == "batch"]
+    assert ("batch", 2, tg.num_tasks, cg.num_machines, n_e, False) in keys
+    assert ("batch", 4, tg.num_tasks, cg.num_machines, n_e, False) in keys
+    assert len(batch_keys) < len(keys)
+
+
+def test_schedule_batch_matches_schedule(fleet):
+    """The service wrapper: per-lane Schedules == sequential schedule()."""
+    tg, cgs = fleet
+    B = 3
+    opts = SDPOptions(max_iters=3000, check_every=50, tol=1e-4)
+    batched = schedule_batch(
+        [tg] * B, cgs[:B], "sdp",
+        seed=0, num_samples=256, sdp_options=opts, solver_backend="jax",
+    )
+    for cg, got in zip(cgs[:B], batched):
+        want = schedule(
+            tg, cg, "sdp",
+            seed=0, num_samples=256, sdp_options=opts, solver_backend="jax",
+        )
+        np.testing.assert_array_equal(got.assignment, want.assignment)
+        assert np.isclose(got.bottleneck, want.bottleneck, rtol=1e-6)
+        assert got.info["sdp_iterations"] == want.info["sdp_iterations"]
+        assert got.info["solver_stats"]["batch"] == B
