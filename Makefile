@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke ci docs-check bench-scheduler bench-gossip bench-scenarios bench-async
+.PHONY: test smoke churn_smoke ci docs-check bench-scheduler bench-gossip bench-scenarios bench-async bench-churn
 
 # Tier-1 verification (ROADMAP.md)
 test:
@@ -14,8 +14,10 @@ test:
 # gossip run asserting the single-jit round path took effect), and the
 # sync-equivalence smoke (asserts the event engine's sync semantics still
 # reproduces Eq. 2 round times to 1e-9 — the engine cannot drift from the
-# paper's model), and the batched-solver smoke (asserts a B=8 stacked SDP
-# solve is ONE jitted dispatch with all lanes converged).
+# paper's model), the batched-solver smoke (asserts a B=8 stacked SDP
+# solve is ONE jitted dispatch with all lanes converged), and the churn
+# smoke (a short injected-timeout churn trace: arrivals re-solve, the
+# heft fallback activates, regret vs the oracle stays finite).
 smoke:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.small_instance_backends(quick=True); \
@@ -27,6 +29,14 @@ smoke:
 	b.batched_solver_smoke()"
 	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.stacked_smoke()"
 	$(PYTHON) -c "import benchmarks.async_bench as a; a.sync_equivalence_smoke()"
+	$(PYTHON) -c "import benchmarks.churn_bench as c; c.churn_smoke()"
+
+# Churn smoke alone: a short injected-timeout churn trace asserting that
+# arrivals trigger elastic re-solves, a stalled SDP degrades to the heft
+# fallback instead of wedging the trace, and regret vs the oracle stays
+# finite.
+churn_smoke:
+	$(PYTHON) -c "import benchmarks.churn_bench as c; c.churn_smoke()"
 
 # Docs health: intra-repo markdown links resolve and the documented
 # quickstart command still runs (see scripts/check_docs.py).
@@ -46,5 +56,8 @@ bench-scenarios:
 
 bench-async:
 	$(PYTHON) -c "import benchmarks.async_bench as a; a.main(quick=True, resume=False)"
+
+bench-churn:
+	$(PYTHON) -c "import benchmarks.churn_bench as c; c.main(quick=True, resume=False)"
 
 ci: test smoke

@@ -1,0 +1,115 @@
+"""Churn benchmark suite: trace-driven fleet dynamics, regret vs oracle.
+
+Runs every scenario in ``repro.scenarios.presets.CHURN_COMBINATIONS``
+(seeded churn trace → fail/join/recover/link events → one simulated run
+per churn policy) and records the sweep into ``BENCH_scenarios.json``
+(schema: ``docs/benchmarks.md``, churn records).  Each record carries an
+``oracle_total_time`` — a per-event COLD full SDP re-solve, always
+adopted — and each policy's ``regret_vs_oracle`` against it; the
+``er_churn_degraded`` preset injects a zero solve budget so the elastic
+policy's heft fallback is exercised on the record itself.
+
+Resume semantics are ``benchmarks.common.sweep_suite``'s (shared with
+``scenarios_bench`` / ``async_bench``): existing records are kept and
+labeled ``cached=yes``; ``resume=False`` (``make bench-churn``)
+re-measures this suite's grid points only.
+
+``churn_smoke()`` (``make churn_smoke``) is the CI guard: a short
+injected-timeout trace asserting that arrivals re-solve, the fallback
+activates, and regret stays finite.
+"""
+
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import emit, sweep_suite
+
+
+def main(
+    quick: bool = True, out_path: str = "BENCH_scenarios.json",
+    resume: bool = True,
+) -> dict:
+    from repro.scenarios.presets import CHURN_COMBINATIONS
+
+    def emit_row(rec, cached):
+        methods = rec["methods"]
+        churn = rec.get("churn", {})
+        regrets = ";".join(
+            f"{pol}={methods[pol]['regret_vs_oracle']:.4f}"
+            for pol in sorted(methods)
+        )
+        elastic = methods.get("sdp_elastic", {})
+        emit(
+            f"churn_{rec['scenario']}",
+            rec["elapsed_seconds"] * 1e6,
+            f"model={churn.get('model')};events={churn.get('num_events', 0)};"
+            f"{regrets};fallbacks={elastic.get('fallback_count', 0)};"
+            f"cached={'yes' if cached else 'no'}",
+        )
+
+    return sweep_suite(
+        CHURN_COMBINATIONS, emit_row, "churn_sweep_total",
+        quick=quick, out_path=out_path, resume=resume,
+    )
+
+
+def churn_smoke() -> dict:
+    """CI smoke: a short churn trace under an injected zero solve budget.
+
+    Asserts the three properties the churn subsystem exists for: fleet
+    arrivals trigger elastic re-solves, a stalled SDP degrades to the
+    heft fallback instead of wedging the trace, and every policy's regret
+    against the oracle is finite.  Returns the scenario record.
+    """
+    from repro.scenarios import Scenario, run_scenario
+    from repro.scenarios.engine import _churn_trace_for
+
+    sc = Scenario(
+        name="churn_smoke",
+        topology="small_world",
+        num_tasks=8,
+        num_machines=4,
+        machine_profile="lognormal",
+        delay_model="uniform",
+        schedulers=("sdp",),
+        rounds=12,
+        topology_params={"k": 4, "rewire_prob": 0.2},
+        churn="markov",
+        churn_params={
+            "p_fail": 0.15, "p_recover": 0.5,
+            "start_down_fraction": 0.25, "min_up": 2,
+            "link_outages": 1, "outage_len": 3, "outage_factor": 3.0,
+            "solve_timeout": 0.0,
+        },
+    )
+    trace = _churn_trace_for(sc)
+    counts = trace.counts
+    assert counts["join"] + counts["recover"] >= 1, counts
+    assert counts["fail"] >= 2, counts
+
+    rec = run_scenario(sc, quick=True)
+    elastic = rec["methods"]["sdp_elastic"]
+    assert elastic["num_elastic_resolves"] >= 1, (
+        "no arrival/failure re-solve reached the ElasticScheduler"
+    )
+    assert elastic["fallback_count"] >= 1, (
+        "the injected zero solve budget never activated the fallback"
+    )
+    for pol, entry in rec["methods"].items():
+        assert math.isfinite(entry["regret_vs_oracle"]), (
+            f"{pol}: non-finite regret {entry['regret_vs_oracle']}"
+        )
+        assert math.isfinite(entry["total_time"]), pol
+    emit(
+        "churn_smoke",
+        rec["elapsed_seconds"] * 1e6,
+        f"events={rec['churn']['num_events']};"
+        f"fallbacks={elastic['fallback_count']};"
+        f"elastic_regret={elastic['regret_vs_oracle']:.4f}",
+    )
+    return rec
+
+
+if __name__ == "__main__":
+    main(quick=False)

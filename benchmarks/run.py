@@ -18,13 +18,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig4,fig5,fig6,roofline,"
-                         "kernels,scheduler,scenarios,async")
+                         "kernels,scheduler,scenarios,async,churn")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
         async_bench,
+        churn_bench,
         fig4_tasks,
         fig5_density,
         fig6_gossip_fl,
@@ -43,6 +44,7 @@ def main() -> None:
         "scheduler": scheduler_bench.main,
         "scenarios": scenarios_bench.main,
         "async": async_bench.main,
+        "churn": churn_bench.main,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -5,6 +5,7 @@
     PYTHONPATH=src python scripts/sweep.py --preset ring_uniform,torus_cluster
     PYTHONPATH=src python scripts/sweep.py --new-combinations --quick
     PYTHONPATH=src python scripts/sweep.py --async-combinations --quick
+    PYTHONPATH=src python scripts/sweep.py --churn-combinations --quick
     PYTHONPATH=src python scripts/sweep.py --all --seeds 3 --out BENCH_scenarios.json
 
 The output file is rewritten after every completed scenario and already-
@@ -32,6 +33,8 @@ def main(argv: list[str] | None = None) -> int:
                       help="run the non-figure scenario combinations")
     what.add_argument("--async-combinations", action="store_true",
                       help="run the async/overlap event-engine combinations")
+    what.add_argument("--churn-combinations", action="store_true",
+                      help="run the trace-driven fleet-dynamics combinations")
     ap.add_argument("--out", default="BENCH_scenarios.json",
                     help="output JSON path (default: %(default)s)")
     ap.add_argument("--seeds", type=int, default=1,
@@ -43,7 +46,11 @@ def main(argv: list[str] | None = None) -> int:
     args = ap.parse_args(argv)
 
     from repro.scenarios import list_scenarios, run_sweep
-    from repro.scenarios.presets import ASYNC_COMBINATIONS, NEW_COMBINATIONS
+    from repro.scenarios.presets import (
+        ASYNC_COMBINATIONS,
+        CHURN_COMBINATIONS,
+        NEW_COMBINATIONS,
+    )
 
     registry = list_scenarios()
     if args.list:
@@ -52,7 +59,8 @@ def main(argv: list[str] | None = None) -> int:
             print(f"{name:24s} {ax['topology']:12s} N_T={ax['num_tasks']:<4d} "
                   f"N_K={ax['num_machines']:<3d} machines={ax['machine_profile']:10s} "
                   f"delays={ax['delay_model']:9s} exec={ax['execution']:7s} "
-                  f"fl={'yes' if ax['fl'] else 'no'}")
+                  f"fl={'yes' if ax['fl'] else 'no':3} "
+                  f"churn={ax['churn'] or '-'}")
         return 0
 
     if args.preset:
@@ -66,6 +74,8 @@ def main(argv: list[str] | None = None) -> int:
         base = list(NEW_COMBINATIONS)
     elif args.async_combinations:
         base = list(ASYNC_COMBINATIONS)
+    elif args.churn_combinations:
+        base = list(CHURN_COMBINATIONS)
     else:
         base = list(registry.values())
 

@@ -98,22 +98,64 @@ def _warm_fingerprint(task_graph: TaskGraph, compute_graph: ComputeGraph) -> tup
     )
 
 
-def clear_warm_start(task_graph: TaskGraph, compute_graph: ComputeGraph) -> bool:
-    """Drop any cached solver state for this problem structure.
+def clear_warm_start(
+    task_graph: TaskGraph | None = None,
+    compute_graph: ComputeGraph | None = None,
+) -> bool:
+    """Drop cached solver state for this problem structure (or all of it).
 
     The fingerprint deliberately ignores weights, so a later solve of a
     *different* instance with the same structure (e.g. the same ring
     topology under another seed) would otherwise resume from this one's
     iterate.  Callers that need runs reproducible from their own inputs
     alone (the scenario engine's drift simulation) clear the entry first.
-    Returns True if an entry was dropped.
+    Called with no arguments it wipes BOTH caches wholesale — the churn
+    simulation path uses this, since a churn trace re-solves at every
+    fleet size and clearing one structure would leave the others warm.
+    Returns True if anything was dropped.
     """
+    if task_graph is None and compute_graph is None:
+        hit = bool(_WARM_STARTS) or bool(_WARM_STARTS_BATCH)
+        _WARM_STARTS.clear()
+        _WARM_STARTS_BATCH.clear()
+        return hit
     fp = _warm_fingerprint(task_graph, compute_graph)
     hit = _WARM_STARTS.pop(fp, None) is not None
     stale = [k for k in _WARM_STARTS_BATCH if fp in k]
     for k in stale:
         del _WARM_STARTS_BATCH[k]
     return hit or bool(stale)
+
+
+def get_warm_start(
+    task_graph: TaskGraph, compute_graph: ComputeGraph
+) -> dict | None:
+    """Peek the cached solver state for this problem structure (or None).
+
+    With ``seed_warm_start`` this is the control layer's handle on the
+    warm-start cache: ``ElasticScheduler`` snapshots the state after each
+    re-solve into its own fleet-composition-keyed cache and restores it
+    when a composition recurs (fail → rejoin round trips), which the
+    structure-only fingerprint cannot distinguish.  Reading does not
+    touch LRU recency.
+    """
+    return _WARM_STARTS.get(_warm_fingerprint(task_graph, compute_graph))
+
+
+def seed_warm_start(
+    task_graph: TaskGraph, compute_graph: ComputeGraph, state: dict
+) -> None:
+    """Install ``state`` as the warm start for this problem structure.
+
+    The next ``schedule(..., warm_start=True)`` of the same (N_T, N_K,
+    edges) structure resumes from it.  Evicts LRU entries as needed, like
+    a solve-produced insertion.
+    """
+    fp = _warm_fingerprint(task_graph, compute_graph)
+    _WARM_STARTS.pop(fp, None)
+    while len(_WARM_STARTS) >= _WARM_STARTS_MAX:
+        _WARM_STARTS.pop(next(iter(_WARM_STARTS)))
+    _WARM_STARTS[fp] = state
 
 
 def _pick_representation(

@@ -1,10 +1,11 @@
 """Declarative scenario engine: topology × heterogeneity × dynamics sweeps.
 
 A scenario composes four axes — task-graph family, machine profile, delay
-model, scheduler set — plus an optional gossip-FL workload, and runs them
-through one generate → schedule → simulate → record pipeline (DESIGN.md
-§4).  Paper figures (fig4/fig5/fig6) are presets over the same engine;
-``scripts/sweep.py`` is the CLI.
+model, scheduler set — plus an optional gossip-FL workload or churn trace
+(trace-driven fleet dynamics with per-policy regret vs an oracle
+re-solve), and runs them through one generate → schedule → simulate →
+record pipeline (DESIGN.md §4, §10).  Paper figures (fig4/fig5/fig6) are
+presets over the same engine; ``scripts/sweep.py`` is the CLI.
 """
 
 from repro.scenarios.engine import (
@@ -14,14 +15,18 @@ from repro.scenarios.engine import (
     run_sweep,
 )
 from repro.scenarios.profiles import (
+    CHURN_MODELS,
     DELAY_MODELS,
     MACHINE_PROFILES,
+    ChurnTrace,
     DelayDrift,
+    churn_trace,
     delay_matrix,
     drifting_delays,
     machine_speeds,
 )
 from repro.scenarios.spec import (
+    CHURN_POLICIES,
     FLWorkload,
     Scenario,
     get_scenario,
@@ -30,6 +35,9 @@ from repro.scenarios.spec import (
 )
 
 __all__ = [
+    "CHURN_MODELS",
+    "CHURN_POLICIES",
+    "ChurnTrace",
     "DELAY_MODELS",
     "DelayDrift",
     "FLWorkload",
@@ -37,6 +45,7 @@ __all__ = [
     "Scenario",
     "build_compute_graph",
     "build_task_graph",
+    "churn_trace",
     "delay_matrix",
     "drifting_delays",
     "get_scenario",

@@ -20,7 +20,12 @@ JSON-serializable record:
      ``ElasticScheduler.on_delay_update`` consults enter the engine's
      queue as control events, and when the scenario perturbs machines
      (``execution_params`` jitter/stragglers) the engine's measured
-     busy times feed ``ElasticScheduler.observe_round`` every round;
+     busy times feed ``ElasticScheduler.observe_round`` every round.
+     Under a ``churn`` axis a seeded :class:`ChurnTrace` drives
+     fail / join / recover / link-outage events through the engine, each
+     churn POLICY (``sdp_elastic`` / ``sdp_static`` / ``heft``) reacts at
+     the consult, and the record carries each policy's bottleneck-time
+     regret against an oracle per-event cold re-solve;
   4. **train** (optional) — the gossip-FL workload on the stacked engine
      (``fl/runner.run_fl``), either on the engine's instance or — for the
      fig6 preset — delegating generation to the legacy §4.2 path so the
@@ -57,12 +62,14 @@ from repro.core.graphs import (
 from repro.core.scheduler import compare_methods
 from repro.core.sdp import SDPOptions
 from repro.scenarios.profiles import (
+    ChurnTrace,
     DelayDrift,
+    churn_trace,
     delay_matrix,
     drifting_delays,
     machine_speeds,
 )
-from repro.scenarios.spec import Scenario
+from repro.scenarios.spec import CHURN_POLICY_KEYS, Scenario
 from repro.sim import ControlEvent, simulate
 
 _SDP_FAMILY = ("sdp", "sdp_naive", "sdp_ls")
@@ -307,6 +314,208 @@ def _simulate_drift(
     return entry, initial
 
 
+# ---------------------------------------------------------------------------
+# Churn execution
+# ---------------------------------------------------------------------------
+
+
+def _churn_trace_for(scenario: Scenario) -> ChurnTrace:
+    """The scenario's churn trace — a pure function of (scenario, seed).
+
+    Drawn from the DERIVED stream ``(seed, 2)``: stream ``seed`` generates
+    the instance and ``(seed, 1)`` the execution jitter, so the fleet
+    dynamics must not replay either's variates.
+    """
+    trace_params = {
+        k: v for k, v in scenario.churn_params.items()
+        if k not in CHURN_POLICY_KEYS
+    }
+    return churn_trace(
+        np.random.default_rng((scenario.seed, 2)),
+        scenario.num_machines,
+        scenario.rounds,
+        model=scenario.churn,
+        **trace_params,
+    )
+
+
+def _churn_control_events(trace: ChurnTrace) -> tuple:
+    """Trace -> engine event stream.  Link transitions do not re-schedule
+    by themselves, so link-only rounds get an explicit ``reschedule``
+    event — every fleet or connectivity change consults the policy."""
+    events = trace.control_events()
+    membership_rounds = {
+        ev.round for ev in events if ev.kind in ("fail", "join", "recover")
+    }
+    link_only = sorted(
+        {ev.round for ev in events if ev.kind in ("link_down", "link_up")}
+        - membership_rounds
+    )
+    return tuple(
+        events + [ControlEvent(round=r, kind="reschedule") for r in link_only]
+    )
+
+
+def _policy_kwargs(scenario: Scenario) -> dict:
+    """The sdp_elastic degraded-mode budgets riding in ``churn_params``."""
+    p = {k: scenario.churn_params[k] for k in CHURN_POLICY_KEYS
+         if k in scenario.churn_params}
+    p.setdefault("fallback", "heft")
+    return p
+
+
+def _repair_assignment(
+    tg: TaskGraph, assign_lab: np.ndarray, live: list, e_live: np.ndarray
+) -> int:
+    """Greedy in-place repair of a label-space assignment after churn:
+    tasks on live machines stay put; orphans go (heaviest first) to the
+    machine with the least resulting compute load.  Communication is
+    deliberately ignored — this is the ``sdp_static`` "no re-solve"
+    lower bar the elastic policy is measured against.  Returns the
+    number of migrated tasks."""
+    idx = {m: j for j, m in enumerate(live)}
+    loads = np.zeros(len(live))
+    orphans = []
+    for t in range(tg.num_tasks):
+        j = idx.get(int(assign_lab[t]))
+        if j is None:
+            orphans.append(t)
+        else:
+            loads[j] += tg.p[t] / e_live[j]
+    for t in sorted(orphans, key=lambda t: -tg.p[t]):
+        j = int(np.argmin(loads + tg.p[t] / e_live))
+        loads[j] += tg.p[t] / e_live[j]
+        assign_lab[t] = live[j]
+    return len(orphans)
+
+
+def _simulate_churn(
+    scenario: Scenario,
+    tg: TaskGraph,
+    cg: ComputeGraph,
+    policy: str,
+    kw: dict,
+    trace: ChurnTrace,
+    events: tuple,
+):
+    """Run one churn policy through the trace; returns ``(entry, SimResult)``.
+
+    All policies replay the SAME engine event stream; they differ only in
+    how the ``schedule_fn`` consult reacts:
+
+      - ``sdp_elastic`` mirrors the fleet into an :class:`ElasticScheduler`
+        (warm-started incremental re-solves, heft fallback under the solve
+        budget) and folds the engine's live effective delays — link-outage
+        penalties included — back into it on every consult;
+      - ``sdp_static`` keeps the initial SDP assignment and only repairs
+        orphaned tasks greedily;
+      - ``heft`` re-solves the combinatorial heuristic from scratch at
+        every consult.
+    """
+    from repro.core.scheduler import clear_warm_start, schedule
+    from repro.launch.elastic import ElasticScheduler
+
+    spec = scenario.execution_spec()
+    stats = {"num_consults": 0}
+
+    def live_at(r):
+        return [int(m) for m in np.flatnonzero(trace.up_at[r])]
+
+    if policy == "sdp_elastic":
+        clear_warm_start()   # records are a function of (scenario, seed)
+        es = ElasticScheduler(
+            tg, cg, method="sdp", seed=scenario.seed,
+            schedule_kwargs={k: v for k, v in kw.items() if k != "seed"},
+            **_policy_kwargs(scenario),
+        )
+        initial = es.current
+
+        def consult(tg_, cg_live, r):
+            stats["num_consults"] += 1
+            live = live_at(r)
+            current = set(es.machine_ids)
+            for m in sorted(set(live) - current):
+                es.on_recovery(m, round=r)
+            for m in sorted(current - set(live)):
+                es.on_failure(m, round=r)
+            # cg_live.C carries the engine's effective delays (link-outage
+            # penalties applied); fold any difference back into the
+            # scheduler so outage windows influence the re-solve.
+            if not np.array_equal(es.compute_graph.C, cg_live.C):
+                es.on_delay_update(cg_live.C, round=r)
+            return es.current.assignment
+
+    elif policy == "sdp_static":
+        clear_warm_start()
+        initial = schedule(tg, cg, "sdp", **kw)
+        labels0 = np.arange(cg.num_machines)
+        assign_lab = labels0[initial.assignment].copy()
+        stats["num_migrated_tasks"] = 0
+
+        def consult(tg_, cg_live, r):
+            stats["num_consults"] += 1
+            live = live_at(r)
+            stats["num_migrated_tasks"] += _repair_assignment(
+                tg, assign_lab, live, cg_live.e
+            )
+            idx = {m: j for j, m in enumerate(live)}
+            return np.array([idx[int(l)] for l in assign_lab])
+
+    elif policy == "heft":
+        initial = schedule(tg, cg, "heft", seed=scenario.seed)
+
+        def consult(tg_, cg_live, r):
+            stats["num_consults"] += 1
+            return schedule(tg_, cg_live, "heft", seed=scenario.seed).assignment
+
+    else:  # pragma: no cover — Scenario.__post_init__ validates
+        raise ValueError(policy)
+
+    res = simulate(
+        tg, cg, initial.assignment, scenario.rounds, spec,
+        control_events=events, schedule_fn=consult,
+    )
+    entry = {**_method_entry(initial), **_sim_entry(scenario, res)}
+    entry["policy"] = policy
+    entry["num_consults"] = stats["num_consults"]
+    entry["final_fleet"] = [int(m) for m in res.machine_ids]
+    if policy == "sdp_elastic":
+        entry["fallback_count"] = es.fallback_count
+        entry["num_migrations"] = sum(
+            1 for h in es.history if h["event"] == "migrate"
+        )
+        entry["num_elastic_resolves"] = sum(
+            1 for h in es.history
+            if h["event"].startswith(("fail:", "recover:", "join:"))
+        )
+    if policy == "sdp_static":
+        entry["num_migrated_tasks"] = stats["num_migrated_tasks"]
+    return entry, res
+
+
+def _churn_oracle(
+    scenario: Scenario, tg: TaskGraph, cg: ComputeGraph, kw: dict, events: tuple
+) -> float:
+    """Total time of the oracle: a COLD full SDP re-solve at every event,
+    always adopted.  This is the quality ceiling a reactive policy could
+    reach with unlimited solve budget; ``regret_vs_oracle`` measures how
+    much of it the warm-started / degraded policies give up."""
+    from repro.core.scheduler import clear_warm_start, schedule
+
+    clear_warm_start()
+
+    def consult(tg_, cg_live, r):
+        clear_warm_start(tg_, cg_live)
+        return schedule(tg_, cg_live, "sdp", **kw).assignment
+
+    s0 = schedule(tg, cg, "sdp", **kw)
+    res = simulate(
+        tg, cg, s0.assignment, scenario.rounds, scenario.execution_spec(),
+        control_events=events, schedule_fn=consult,
+    )
+    return float(res.total_time)
+
+
 def _run_fl(scenario: Scenario, tg, cg, schedules=None) -> dict:
     """Run the FL workload; ``tg``/``cg`` None = legacy §4.2 generation.
 
@@ -416,10 +625,12 @@ def run_scenario(
         tg = build_task_graph(scenario, rng)
         cg, drift = build_compute_graph(scenario, rng)
         # Under drift each method's only solve lives in its
-        # ElasticScheduler (below); static scenarios share one SDP solve
-        # across the sdp family through compare_methods' cache (possibly
-        # pre-filled by run_sweep's batched solve).
-        schedules = None if drift is not None else compare_methods(
+        # ElasticScheduler (below), and under churn each POLICY owns its
+        # solves; static scenarios share one SDP solve across the sdp
+        # family through compare_methods' cache (possibly pre-filled by
+        # run_sweep's batched solve).
+        dynamic = drift is not None or scenario.churn is not None
+        schedules = None if dynamic else compare_methods(
             tg, cg, methods=tuple(scenario.schedulers),
             _sdp_cache=_presolved, **kw
         )
@@ -440,7 +651,27 @@ def run_scenario(
         "methods": {},
     }
 
-    if drift is not None:
+    if scenario.churn is not None:
+        trace = _churn_trace_for(scenario)
+        events = _churn_control_events(trace)
+        oracle_total = _churn_oracle(scenario, tg, cg, kw, events)
+        record["churn"] = {
+            "model": scenario.churn,
+            "counts": trace.counts,
+            "num_events": len(trace.machine_events) + len(trace.link_events),
+            "min_live": int(trace.up_at.sum(axis=1).min()),
+            "oracle_total_time": oracle_total,
+        }
+        for pol in scenario.churn_policies:
+            entry, _ = _simulate_churn(
+                scenario, tg, cg, pol, kw, trace, events
+            )
+            entry["regret_vs_oracle"] = (
+                entry["total_time"] / oracle_total - 1.0
+                if oracle_total > 0 else float("nan")
+            )
+            record["methods"][pol] = entry
+    elif drift is not None:
         for m in scenario.schedulers:
             sim, initial = _simulate_drift(scenario, tg, cg, drift, m, kw)
             record["methods"][m] = {**_method_entry(initial), **sim}
@@ -492,6 +723,10 @@ def _presolve_groups(pending, quick: bool) -> dict:
         if sc.fl is not None and sc.fl.paper_setting:
             continue
         if sc.delay_model == "drift":
+            continue
+        if sc.churn is not None:
+            # Churn policies own their solves (warm-started or per-event);
+            # a pre-solved static relaxation has no consumer there.
             continue
         kw = _schedule_kwargs(sc, quick)
         rng = np.random.default_rng(sc.seed)

@@ -21,6 +21,13 @@ Importing this module populates the registry (``spec.get_scenario`` /
     to the sync ``predicted_bottleneck``, and one ``overlap`` scenario
     records the pipelined period.  ``benchmarks/async_bench.py``
     (``make bench-async``) sweeps them into ``BENCH_scenarios.json``.
+  - Churn combinations (``CHURN_COMBINATIONS``) — trace-driven fleet
+    dynamics (Markov flapping, Weibull sessions, intermittent links,
+    and one preset with an injected zero solve budget that forces the
+    elastic policy through its heft fallback), each comparing
+    ``sdp_elastic`` / ``sdp_static`` / ``heft`` against an oracle
+    per-event cold re-solve.  ``benchmarks/churn_bench.py``
+    (``make bench-churn``) sweeps them into ``BENCH_scenarios.json``.
 """
 
 from __future__ import annotations
@@ -236,5 +243,75 @@ ASYNC_COMBINATIONS = (
         rounds=24,
         execution="overlap",
         topology_params={"k": 4, "rewire_prob": 0.2},
+    )),
+)
+
+# -- churn combinations: trace-driven fleet dynamics --------------------------
+
+CHURN_COMBINATIONS = (
+    # Memoryless flapping on a small-world gossip graph: one machine
+    # begins the trace absent (a mid-trace *join*), two links flap with a
+    # 4x outage penalty.
+    register(Scenario(
+        name="smallworld_churn_markov",
+        topology="small_world",
+        num_tasks=16,
+        num_machines=6,
+        machine_profile="lognormal",
+        delay_model="distance",
+        schedulers=("sdp",),
+        rounds=24,
+        topology_params={"k": 4, "rewire_prob": 0.2},
+        churn="markov",
+        churn_params={
+            "p_fail": 0.08, "p_recover": 0.35,
+            "start_down_fraction": 0.2, "min_up": 3,
+            "link_outages": 2, "outage_len": 4, "outage_factor": 4.0,
+        },
+    )),
+    # Weibull up/down sessions on an edge/cloud torus: shape_down < 1
+    # mixes quick blips with long absences, clustered delays make the
+    # re-solve's machine choice matter.
+    register(Scenario(
+        name="torus_churn_weibull",
+        topology="torus",
+        num_tasks=16,
+        num_machines=6,
+        machine_profile="bimodal",
+        delay_model="cluster",
+        schedulers=("sdp",),
+        rounds=24,
+        topology_params={"rows": 4},
+        machine_params={"fast": 4.0, "slow": 1.0, "fast_fraction": 0.34},
+        delay_params={"clusters": 2, "intra": 0.1, "inter": 1.0},
+        churn="weibull",
+        churn_params={
+            "shape_up": 1.5, "scale_up": 10.0,
+            "shape_down": 0.8, "scale_down": 3.0,
+            "start_down_fraction": 0.2, "min_up": 3,
+            "link_outages": 2, "outage_len": 4, "outage_factor": 3.0,
+        },
+    )),
+    # Degraded-mode drill: a zero wall-clock solve budget makes EVERY
+    # elastic SDP attempt fail (warm and cold retry), so the policy runs
+    # the whole trace on its heft fallback — the record pins that a
+    # stalled solver costs regret but never wedges the trace.
+    register(Scenario(
+        name="er_churn_degraded",
+        topology="erdos_renyi",
+        num_tasks=14,
+        num_machines=6,
+        machine_profile="lognormal",
+        delay_model="uniform",
+        schedulers=("sdp",),
+        rounds=20,
+        topology_params={"edge_prob": 0.2},
+        churn="markov",
+        churn_params={
+            "p_fail": 0.1, "p_recover": 0.4,
+            "start_down_fraction": 0.2, "min_up": 2,
+            "link_outages": 1, "outage_len": 5, "outage_factor": 4.0,
+            "solve_timeout": 0.0,
+        },
     )),
 )

@@ -25,6 +25,27 @@ Delay models (``delay_matrix``):
   - ``drift``    — time-varying: a static ``base`` model modulated per
     round (see :class:`DelayDrift`); the engine re-schedules mid-run via
     ``ElasticScheduler.on_delay_update``.
+
+Churn traces (``churn_trace``): seeded per-machine up↔down state machines
+plus intermittent-link outage windows, emitted as a round-indexed
+:class:`ChurnTrace` the scenario engine turns into ``ControlEvent``
+streams.  Models:
+
+  - ``markov``  — geometric dwell times: each round an up machine fails
+    with probability ``p_fail`` and a down machine returns with
+    probability ``p_recover`` (memoryless flapping).
+  - ``weibull`` — alternating up/down dwell durations drawn from Weibull
+    distributions (``shape_up``/``scale_up``, ``shape_down``/
+    ``scale_down``); ``shape > 1`` concentrates session lengths,
+    ``shape < 1`` gives the heavy-tailed mix of long-lived and flappy
+    machines seen in real device fleets.
+
+Both models share ``start_down_fraction`` (machines that begin the trace
+absent and later *join*), a ``min_up`` floor (a fail that would drop the
+live fleet below it is postponed — the trace never strands the engine
+without machines), and intermittent links: ``link_outages`` windows, each
+multiplying one pair's delay by ``outage_factor`` for a sampled number of
+rounds (non-overlapping per pair).
 """
 
 from __future__ import annotations
@@ -35,6 +56,23 @@ import numpy as np
 
 MACHINE_PROFILES = ("uniform", "bimodal", "lognormal", "paper")
 DELAY_MODELS = ("uniform", "distance", "cluster", "paper", "drift")
+CHURN_MODELS = ("markov", "weibull")
+
+_CHURN_COMMON = {
+    "start_down_fraction": 0.0,
+    "min_up": 1,
+    "link_outages": 0,
+    "outage_len": 6,
+    "outage_factor": 4.0,
+}
+CHURN_TRACE_PARAMS = {
+    "markov": {"p_fail": 0.05, "p_recover": 0.25, **_CHURN_COMMON},
+    "weibull": {
+        "shape_up": 1.5, "scale_up": 24.0,
+        "shape_down": 1.0, "scale_down": 6.0,
+        **_CHURN_COMMON,
+    },
+}
 
 
 def _take(kind: str, params: dict, defaults: dict) -> dict:
@@ -151,4 +189,191 @@ def drifting_delays(
         amplitude=float(params.get("amplitude", 0.5)),
         period=float(params.get("period", 16.0)),
         phase=phase,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnTrace:
+    """A round-indexed fleet-dynamics trace.
+
+    Attributes:
+      num_rounds / num_machines: trace dimensions (original labels).
+      machine_events: tuple of ``(round, kind, machine)`` with kind in
+        {``fail``, ``join``, ``recover``} — ``join`` is the FIRST arrival
+        of a machine that began the trace down, ``recover`` a return
+        after a mid-trace failure (the engine treats them identically;
+        the distinction is for trace analytics).  Within a round,
+        arrivals precede failures so the ``min_up`` floor composes.
+      link_events: tuple of ``(round, kind, machine, peer, factor)`` with
+        kind in {``link_down``, ``link_up``} — outage windows whose
+        ``link_up`` end falls inside the trace are closed explicitly.
+      up_at: (R, K) bool — liveness of each machine during round r,
+        AFTER that round's events (what the engine's fleet looks like).
+    """
+
+    num_rounds: int
+    num_machines: int
+    machine_events: tuple
+    link_events: tuple
+    up_at: np.ndarray
+
+    @property
+    def counts(self) -> dict:
+        """Event tallies: fails / joins / recovers / link_downs."""
+        c = {"fail": 0, "join": 0, "recover": 0}
+        for _, kind, _ in self.machine_events:
+            c[kind] += 1
+        c["link_down"] = sum(
+            1 for _, kind, *_ in self.link_events if kind == "link_down"
+        )
+        return c
+
+    def control_events(self) -> list:
+        """Materialize the trace as ``sim.ControlEvent`` objects, sorted by
+        round with arrivals before failures before link transitions."""
+        from repro.sim.events import ControlEvent
+
+        order = {"join": 0, "recover": 0, "fail": 1, "link_down": 2, "link_up": 2}
+        merged = sorted(
+            [(r, kind, m, -1, 1.0) for (r, kind, m) in self.machine_events]
+            + list(self.link_events),
+            key=lambda ev: (ev[0], order[ev[1]]),
+        )
+        return [
+            ControlEvent(round=r, kind=kind, machine=m, peer=peer, factor=factor)
+            for (r, kind, m, peer, factor) in merged
+        ]
+
+
+def _dwell(rng: np.random.Generator, shape: float, scale: float) -> int:
+    """One Weibull dwell duration, in whole rounds (>= 1)."""
+    return max(1, int(round(rng.weibull(shape) * scale)))
+
+
+def churn_trace(
+    rng: np.random.Generator,
+    num_machines: int,
+    num_rounds: int,
+    model: str = "markov",
+    **params,
+) -> ChurnTrace:
+    """Generate a seeded churn trace (see module docstring for models).
+
+    The trace is a pure function of ``(rng state, arguments)``.  Machines
+    that begin the trace down are emitted as ``fail`` events at round 0 —
+    the engine starts from the full universe, so round 0 is where the
+    initial absence is applied.
+    """
+    if model not in CHURN_MODELS:
+        raise ValueError(
+            f"unknown churn model {model!r}; choose from {CHURN_MODELS}"
+        )
+    p = _take(model, params, CHURN_TRACE_PARAMS[model])
+    min_up = int(p["min_up"])
+    if not (1 <= min_up <= num_machines):
+        raise ValueError(
+            f"min_up must be in [1, {num_machines}], got {min_up}"
+        )
+    n_down0 = min(
+        int(np.floor(float(p["start_down_fraction"]) * num_machines)),
+        num_machines - min_up,
+    )
+    start_down = set(
+        int(m)
+        for m in rng.choice(num_machines, size=n_down0, replace=False)
+    ) if n_down0 > 0 else set()
+
+    up = np.array([m not in start_down for m in range(num_machines)])
+    ever_up = up.copy()
+    events = [(0, "fail", m) for m in sorted(start_down)]
+    up_at = np.zeros((num_rounds, num_machines), dtype=bool)
+
+    if model == "weibull":
+        # Next transition round per machine: starting-up machines fail
+        # after an up-dwell, starting-down machines arrive after a
+        # down-dwell.
+        next_t = np.array([
+            _dwell(rng, float(p["shape_up"]), float(p["scale_up"]))
+            if up[m] else
+            _dwell(rng, float(p["shape_down"]), float(p["scale_down"]))
+            for m in range(num_machines)
+        ])
+
+    for r in range(num_rounds):
+        if r > 0:
+            if model == "markov":
+                arrive = [
+                    m for m in range(num_machines)
+                    if not up[m] and rng.random() < float(p["p_recover"])
+                ]
+                depart = [
+                    m for m in range(num_machines)
+                    if up[m] and rng.random() < float(p["p_fail"])
+                ]
+            else:
+                arrive = [
+                    m for m in range(num_machines)
+                    if not up[m] and next_t[m] <= r
+                ]
+                depart = [
+                    m for m in range(num_machines)
+                    if up[m] and next_t[m] <= r
+                ]
+            for m in arrive:
+                up[m] = True
+                events.append((r, "join" if not ever_up[m] else "recover", m))
+                ever_up[m] = True
+                if model == "weibull":
+                    next_t[m] = r + _dwell(
+                        rng, float(p["shape_up"]), float(p["scale_up"])
+                    )
+            for m in depart:
+                if int(np.sum(up)) <= min_up:
+                    # Postpone: under weibull the pending transition fires
+                    # at the next round with headroom; under markov the
+                    # machine simply re-rolls next round.
+                    continue
+                up[m] = False
+                events.append((r, "fail", m))
+                if model == "weibull":
+                    next_t[m] = r + _dwell(
+                        rng, float(p["shape_down"]), float(p["scale_down"])
+                    )
+        up_at[r] = up
+
+    link_events = []
+    n_outages = int(p["link_outages"])
+    if n_outages > 0 and num_machines >= 2 and num_rounds >= 2:
+        factor = float(p["outage_factor"])
+        if factor <= 1.0:
+            raise ValueError("outage_factor must be > 1 (a delay penalty)")
+        mean_len = max(1, int(p["outage_len"]))
+        occupied: dict[tuple, list] = {}
+        for _ in range(n_outages):
+            for _try in range(20):
+                i, j = rng.choice(num_machines, size=2, replace=False)
+                pair = (min(int(i), int(j)), max(int(i), int(j)))
+                r0 = int(rng.integers(0, num_rounds - 1))
+                length = int(rng.integers(1, 2 * mean_len + 1))
+                r1 = min(r0 + length, num_rounds)
+                if all(
+                    r1 <= a or r0 >= b for (a, b) in occupied.get(pair, [])
+                ):
+                    occupied.setdefault(pair, []).append((r0, r1))
+                    link_events.append(
+                        (r0, "link_down", pair[0], pair[1], factor)
+                    )
+                    if r1 < num_rounds:
+                        link_events.append(
+                            (r1, "link_up", pair[0], pair[1], 1.0)
+                        )
+                    break
+    link_events.sort(key=lambda ev: ev[0])
+
+    return ChurnTrace(
+        num_rounds=num_rounds,
+        num_machines=num_machines,
+        machine_events=tuple(events),
+        link_events=tuple(link_events),
+        up_at=up_at,
     )

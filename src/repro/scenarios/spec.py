@@ -18,10 +18,34 @@ from typing import Mapping
 
 from repro.core.graphs import TOPOLOGY_FAMILIES
 from repro.core.scheduler import METHODS
-from repro.scenarios.profiles import DELAY_MODELS, MACHINE_PROFILES
+from repro.scenarios.profiles import (
+    CHURN_MODELS,
+    CHURN_TRACE_PARAMS,
+    DELAY_MODELS,
+    MACHINE_PROFILES,
+    _take,
+)
 from repro.sim import SEMANTICS, ExecutionSpec
 
 _EXECUTION_PARAM_KEYS = ("jitter_sigma", "straggler_prob", "straggler_factor")
+
+# Churn policies are NOT plain scheduler methods — they are strategies for
+# reacting to trace events, each anchored on a method:
+#   - ``sdp_elastic``: warm-started ElasticScheduler re-solves at every
+#     fleet/link transition, with heft fallback under the solve budget.
+#   - ``sdp_static``:  one initial SDP solve; on fleet changes only the
+#     orphaned tasks are greedily repaired (no re-solve) — the "do
+#     nothing clever" lower bar.
+#   - ``heft``:        full combinatorial heft re-solve at every event —
+#     cheap, always converges, but never benefits from the SDP rounding.
+CHURN_POLICIES = ("sdp_elastic", "sdp_static", "heft")
+
+# ``churn_params`` keys that configure the sdp_elastic POLICY (degraded
+# mode budgets) rather than the trace generator — split off before the
+# params reach ``churn_trace``.
+CHURN_POLICY_KEYS = (
+    "fallback", "solve_timeout", "solver_max_iters", "require_converged",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +117,16 @@ class Scenario:
     delay_params: Mapping = dataclasses.field(default_factory=dict)
     schedule_params: Mapping = dataclasses.field(default_factory=dict)
     fl: FLWorkload | None = None
+    # -- churn axis ---------------------------------------------------------
+    # A churn model name activates trace-driven fleet dynamics: a seeded
+    # ChurnTrace (stream (seed, 2)) drives fail/join/recover/link events
+    # through the sync engine, each churn policy reacts per its strategy,
+    # and the record carries bottleneck-time regret vs an oracle per-event
+    # cold re-solve.  Mutually exclusive with drift delays and FL (one
+    # record = one dynamics regime).
+    churn: str | None = None
+    churn_params: Mapping = dataclasses.field(default_factory=dict)
+    churn_policies: tuple[str, ...] = CHURN_POLICIES
 
     def __post_init__(self):
         if self.topology not in TOPOLOGY_FAMILIES:
@@ -144,6 +178,44 @@ class Scenario:
                 "FL timeline assumes static delays, so one record would "
                 "describe two different runs"
             )
+        if self.churn is not None:
+            if self.churn not in CHURN_MODELS:
+                raise ValueError(
+                    f"unknown churn model {self.churn!r}; "
+                    f"choose from {CHURN_MODELS}"
+                )
+            if self.execution != "sync":
+                raise ValueError(
+                    "churn events fire at round barriers, so a churn trace "
+                    "requires sync execution semantics"
+                )
+            if self.delay_model == "drift":
+                raise ValueError(
+                    "churn and drift are separate dynamics axes; compose "
+                    "link outages via churn_params instead of drift delays"
+                )
+            if self.fl is not None:
+                raise ValueError(
+                    "an FL workload cannot ride on a churn trace: the FL "
+                    "timeline assumes a fixed fleet"
+                )
+            if not self.churn_policies:
+                raise ValueError("churn scenarios need >= 1 churn policy")
+            # Validate parameter NAMES eagerly — a misspelled churn knob
+            # must fail at construction, not mid-sweep.  Policy keys
+            # (solver budgets) ride in churn_params but never reach the
+            # trace generator.
+            trace_params = {
+                k: v for k, v in self.churn_params.items()
+                if k not in CHURN_POLICY_KEYS
+            }
+            _take(self.churn, trace_params, CHURN_TRACE_PARAMS[self.churn])
+            for pol in self.churn_policies:
+                if pol not in CHURN_POLICIES:
+                    raise ValueError(
+                        f"unknown churn policy {pol!r}; "
+                        f"choose from {CHURN_POLICIES}"
+                    )
 
     def with_seed(self, seed: int) -> "Scenario":
         return dataclasses.replace(self, seed=seed)
@@ -176,6 +248,10 @@ class Scenario:
             "schedulers": list(self.schedulers),
             "execution": self.execution,
             "fl": self.fl is not None,
+            "churn": self.churn,
+            "churn_policies": (
+                list(self.churn_policies) if self.churn is not None else []
+            ),
         }
 
 

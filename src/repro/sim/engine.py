@@ -19,12 +19,17 @@ The data plane is a single priority queue of timestamped events:
     zero-delay deliveries short-circuit the queue.
 
 Under ``sync`` the control plane shares the round structure:
-:class:`~repro.sim.events.ControlEvent` entries (machine failure,
-slowdown, delay drift, elastic re-schedule) fire at their round's
-barrier — the engine subsets/updates the live compute graph and consults
-``schedule_fn`` exactly where ``fl.simulator.timeline`` used to run its
-bespoke loop.  ``on_round_end(r, busy)`` exposes the engine-measured
-per-machine busy times after each barrier (the feed for
+:class:`~repro.sim.events.ControlEvent` entries (machine failure /
+arrival / recovery, slowdown, delay drift, link outages, elastic
+re-schedule) fire at their round's barrier — the engine keeps the fleet
+state in ORIGINAL machine labels (speeds ``e_full``, delay base
+``C_base``, a boolean ``up`` mask, and a multiplicative link-outage
+mask) and subsets to the live machines each round, so fail → rejoin →
+fail sequences of one label compose and absent machines report NaN busy
+times.  ``schedule_fn`` is consulted exactly where
+``fl.simulator.timeline`` used to run its bespoke loop.
+``on_round_end(r, busy)`` exposes the engine-measured per-machine busy
+times after each barrier (the feed for
 ``ElasticScheduler.observe_round``); returning an assignment adopts it.
 """
 
@@ -99,8 +104,10 @@ def simulate(
     """Simulate ``num_rounds`` of the assignment under ``execution``.
 
     ``schedule_fn(task_graph, compute_graph, round_idx) -> assignment``
-    is consulted by ``fail`` / ``slowdown`` / ``reschedule`` control
-    events; ``on_round_end(round_idx, busy) -> assignment | None`` fires
+    is consulted by ``fail`` / ``join`` / ``recover`` / ``slowdown`` /
+    ``reschedule`` control events (the compute graph it receives is the
+    live fleet in sorted original-label order, link-outage penalties
+    applied); ``on_round_end(round_idx, busy) -> assignment | None`` fires
     after every sync barrier with the live machines' measured busy times.
     Control events and round-end feedback require ``sync`` semantics —
     the barrier is the only globally quiescent point at which changing
@@ -123,8 +130,9 @@ def simulate(
         )
     if control_events:
         raise ValueError(
-            "control events (fail/slowdown/delay_update/reschedule) require "
-            "sync semantics — the round barrier is the only quiescent point"
+            "control events (fail/join/recover/slowdown/delay_update/"
+            "link_down/link_up/reschedule) require sync semantics — the "
+            "round barrier is the only quiescent point"
         )
     if on_round_end is not None:
         raise ValueError("on_round_end feedback requires sync semantics")
@@ -136,14 +144,32 @@ def simulate(
 # ---------------------------------------------------------------------------
 
 
+def _check_label(machine: int, k0: int, kind: str, r: int) -> None:
+    if not 0 <= machine < k0:
+        raise ValueError(
+            f"round {r}: {kind} event references machine {machine} outside "
+            f"the compute graph's universe of {k0} machines (grow the fleet "
+            f"at the control layer — ElasticScheduler.on_arrival — before "
+            f"simulating)"
+        )
+
+
 def _simulate_sync(
     task_graph, compute_graph, a, num_rounds, spec,
     control_events, schedule_fn, on_round_end,
 ) -> SimResult:
+    # Fleet state in ORIGINAL machine labels: ``up`` marks the live
+    # machines, ``e_full``/``C_base`` carry every machine's current speed
+    # and nominal delay rows (so a machine that fails and later rejoins
+    # gets its own state back), and ``link_mask`` holds the multiplicative
+    # outage penalties of intermittently-down links.  The live compute
+    # graph each round is (e_full, C_base * link_mask) subset to the
+    # sorted live labels.
     k0 = compute_graph.num_machines
-    machine_ids = list(range(k0))
-    e = compute_graph.e.copy()
-    C = compute_graph.C.copy()
+    up = np.ones(k0, dtype=bool)
+    e_full = compute_graph.e.copy()
+    C_base = compute_graph.C.copy()
+    link_mask = np.ones((k0, k0))
     a = a.copy()
     jitter = _Jitter(spec, k0)
     edges = task_graph.edges
@@ -154,6 +180,7 @@ def _simulate_sync(
 
     round_times = np.zeros(num_rounds)
     busy = np.full((num_rounds, k0), np.nan)
+    fleet_size = np.zeros(num_rounds, dtype=np.int64)
     reschedule_rounds: list[int] = []
     events_processed = 0
 
@@ -161,37 +188,94 @@ def _simulate_sync(
         # -- control plane: fires at the barrier opening round r --------
         resched = False
         for ev in by_round.get(r, ()):
+            m = ev.machine
             if ev.kind == "delay_update":
                 C_new = np.asarray(ev.C, dtype=np.float64)
-                if C_new.shape[0] != len(machine_ids):
-                    C_new = C_new[np.ix_(machine_ids, machine_ids)]
-                C = C_new
+                if C_new.shape == (k0, k0):
+                    C_base = C_new.copy()
+                else:
+                    live = np.flatnonzero(up)
+                    if C_new.shape != (live.size, live.size):
+                        raise ValueError(
+                            f"round {r}: delay_update matrix has shape "
+                            f"{C_new.shape}; expected the full universe "
+                            f"({k0},{k0}) or the live fleet "
+                            f"({live.size},{live.size})"
+                        )
+                    C_base[np.ix_(live, live)] = C_new
             elif ev.kind == "fail":
-                local = machine_ids.index(ev.machine)
-                keep = [j for j in range(len(machine_ids)) if j != local]
-                e = e[keep]
-                C = C[np.ix_(keep, keep)]
-                machine_ids.pop(local)
+                _check_label(m, k0, ev.kind, r)
+                if not up[m]:
+                    raise ValueError(
+                        f"round {r}: fail of machine {m}, which is already "
+                        f"down — double failures desynchronize the fleet"
+                    )
+                if up.sum() == 1:
+                    raise ValueError(
+                        f"round {r}: fail of machine {m} would empty the fleet"
+                    )
+                up[m] = False
+                resched = True
+            elif ev.kind in ("join", "recover"):
+                _check_label(m, k0, ev.kind, r)
+                if up[m]:
+                    raise ValueError(
+                        f"round {r}: {ev.kind} of machine {m}, which is "
+                        f"already up"
+                    )
+                up[m] = True
                 resched = True
             elif ev.kind == "slowdown":
-                e = e.copy()
-                e[machine_ids.index(ev.machine)] *= ev.factor
+                _check_label(m, k0, ev.kind, r)
+                if not up[m]:
+                    raise ValueError(
+                        f"round {r}: slowdown of machine {m}, which is down"
+                    )
+                e_full[m] *= ev.factor
                 resched = True
+            elif ev.kind == "link_down":
+                _check_label(m, k0, ev.kind, r)
+                _check_label(ev.peer, k0, ev.kind, r)
+                if link_mask[m, ev.peer] != 1.0:
+                    raise ValueError(
+                        f"round {r}: link_down of ({m},{ev.peer}), which is "
+                        f"already in an outage window"
+                    )
+                link_mask[m, ev.peer] = link_mask[ev.peer, m] = ev.factor
+            elif ev.kind == "link_up":
+                _check_label(m, k0, ev.kind, r)
+                _check_label(ev.peer, k0, ev.kind, r)
+                if link_mask[m, ev.peer] == 1.0:
+                    raise ValueError(
+                        f"round {r}: link_up of ({m},{ev.peer}), which is "
+                        f"not in an outage window"
+                    )
+                link_mask[m, ev.peer] = link_mask[ev.peer, m] = 1.0
             else:  # "reschedule" — validated by ControlEvent
                 resched = True
+
+        machine_ids = [int(j) for j in np.flatnonzero(up)]
+        k = len(machine_ids)
+        e = e_full[machine_ids]
+        C = (C_base * link_mask)[np.ix_(machine_ids, machine_ids)]
         if resched:
             if schedule_fn is None:
                 raise ValueError(
-                    "fail/slowdown/reschedule control events need schedule_fn"
+                    "fail/join/recover/slowdown/reschedule control events "
+                    "need schedule_fn"
                 )
             a = np.asarray(
                 schedule_fn(task_graph, ComputeGraph(e=e, C=C), r),
                 dtype=np.int64,
             )
             reschedule_rounds.append(r)
+        if np.any(a < 0) or np.any(a >= k):
+            raise ValueError(
+                f"round {r}: assignment references machines outside the "
+                f"live fleet of {k}"
+            )
 
         # -- data plane: one queue per round, round-local clock ---------
-        k = len(machine_ids)
         loads = _machine_loads(task_graph, a, k)
         factors = jitter.draw(machine_ids)
         busy_r = loads / e * factors
@@ -215,6 +299,7 @@ def _simulate_sync(
                     seq += 1
         round_times[r] = barrier
         busy[r, machine_ids] = busy_r
+        fleet_size[r] = k
 
         if on_round_end is not None:
             adopted = on_round_end(r, busy_r.copy())
@@ -230,6 +315,7 @@ def _simulate_sync(
         round_completion=completion,
         round_times=round_times,
         busy=busy,
+        fleet_size=fleet_size,
         total_time=float(completion[-1]),
         period=period,
         throughput=1.0 / period if period > 0 else float("inf"),
@@ -364,6 +450,7 @@ def _simulate_free(task_graph, compute_graph, a, num_rounds, spec) -> SimResult:
         round_completion=completion,
         round_times=round_times,
         busy=busy,
+        fleet_size=np.full(num_rounds, k, dtype=np.int64),
         total_time=float(completion[-1]),
         period=period,
         throughput=1.0 / period if period > 0 else float("inf"),

@@ -8,8 +8,9 @@ pieces shared by the engine and its callers:
     (``sync`` | ``overlap`` | ``async``) and the per-machine perturbation
     model (compute-time jitter and stragglers);
   - :class:`ControlEvent` — round-indexed control-plane events (machine
-    failure, slowdown, delay drift, elastic re-schedule) that enter the
-    same queue as the data-plane events;
+    failure/arrival/recovery, slowdown, delay drift, link outages,
+    elastic re-schedule) that enter the same queue as the data-plane
+    events;
   - :class:`SimResult` — round timings, per-machine busy times, staleness
     metrics, and steady-state throughput.
 
@@ -46,7 +47,16 @@ import numpy as np
 
 SEMANTICS = ("sync", "overlap", "async")
 
-CONTROL_KINDS = ("fail", "slowdown", "delay_update", "reschedule")
+CONTROL_KINDS = (
+    "fail",
+    "slowdown",
+    "delay_update",
+    "reschedule",
+    "join",
+    "recover",
+    "link_down",
+    "link_up",
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,11 +115,29 @@ class ControlEvent:
     like ``fl.simulator.SimEvent``).  Kinds:
 
       - ``fail``: machine leaves the fleet; triggers ``schedule_fn``.
-      - ``slowdown``: machine speed is multiplied by ``factor``;
-        triggers ``schedule_fn``.
+        Failing a machine that is already down raises at simulation
+        time (a silently-ignored double failure would desynchronize the
+        engine's fleet from the control layer's).
+      - ``join`` / ``recover``: machine (re-)enters the fleet with its
+        original speed and delay rows; triggers ``schedule_fn``.  The
+        two kinds carry trace semantics — ``join`` is the first arrival
+        of a machine that began the trace down (a ``fail`` at round 0),
+        ``recover`` a return after a mid-trace failure — the engine
+        treats them identically.  Labels must lie inside the original
+        compute graph (the machine *universe*); genuinely new machines
+        are grown at the control layer (``ElasticScheduler.on_arrival``)
+        before the simulation starts.
+      - ``slowdown``: machine speed is multiplied by ``factor`` (> 0;
+        the change persists across fail/recover round trips); triggers
+        ``schedule_fn``.
       - ``delay_update``: the delay matrix becomes ``C`` (indexed by
         original labels; subset to survivors automatically).  Does NOT
         re-schedule by itself — pair with a ``reschedule`` event.
+      - ``link_down`` / ``link_up``: the (undirected) link between
+        ``machine`` and ``peer`` enters/leaves an outage window — while
+        down, its delay is multiplied by ``factor`` (> 1; models the
+        retry/reroute cost of an intermittent link).  Like
+        ``delay_update`` these do not re-schedule by themselves.
       - ``reschedule``: call ``schedule_fn`` (e.g. an
         ``ElasticScheduler`` consult) and adopt its assignment.
 
@@ -122,6 +150,7 @@ class ControlEvent:
     machine: int = -1
     factor: float = 1.0
     C: np.ndarray | None = None
+    peer: int = -1
 
     def __post_init__(self):
         if self.kind not in CONTROL_KINDS:
@@ -132,8 +161,27 @@ class ControlEvent:
             raise ValueError("control events fire at round starts (round >= 0)")
         if self.kind == "delay_update" and self.C is None:
             raise ValueError("delay_update events need the new C matrix")
-        if self.kind in ("fail", "slowdown") and self.machine < 0:
+        if self.kind in ("fail", "slowdown", "join", "recover") and self.machine < 0:
             raise ValueError(f"{self.kind} events need a machine label >= 0")
+        if self.kind == "slowdown" and self.factor <= 0:
+            raise ValueError(
+                "slowdown factor must be > 0 — a non-positive factor would "
+                "corrupt the machine's speed instead of scaling it"
+            )
+        if self.kind in ("link_down", "link_up"):
+            if self.machine < 0 or self.peer < 0:
+                raise ValueError(
+                    f"{self.kind} events need machine and peer labels >= 0"
+                )
+            if self.machine == self.peer:
+                raise ValueError(
+                    f"{self.kind} events need two distinct endpoints "
+                    f"(self-links carry no delay)"
+                )
+        if self.kind == "link_down" and self.factor <= 1.0:
+            raise ValueError(
+                "link_down factor is an outage delay penalty and must be > 1"
+            )
 
 
 @dataclasses.dataclass
@@ -149,8 +197,12 @@ class SimResult:
       round_times: (R,) completion increments — under ``sync`` with no
         jitter each entry equals Eq. 2 exactly.
       busy: (R, N_K) per-round busy time per machine, indexed by ORIGINAL
-        machine label; NaN once a machine has failed.  Feed rows to
-        ``ElasticScheduler.observe_round`` (live machines only).
+        machine label; NaN while a machine is absent (failed, or not yet
+        joined).  Feed rows to ``ElasticScheduler.observe_round`` (live
+        machines only).
+      fleet_size: (R,) number of live machines during each round (after
+        that round's control events) — constant under overlap/async,
+        which admit no control plane.
       total_time: completion of the final round.
       period: steady-state time per round (second-half average of the
         completion increments); ``throughput`` is its reciprocal.
@@ -169,6 +221,7 @@ class SimResult:
     round_completion: np.ndarray
     round_times: np.ndarray
     busy: np.ndarray
+    fleet_size: np.ndarray
     total_time: float
     period: float
     throughput: float

@@ -1,0 +1,493 @@
+"""Churn subsystem: trace generation, engine join/recover/link events,
+elastic arrivals + degraded mode, and the churn scenario records."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.graphs import ComputeGraph, gossip_task_graph, ring_task_graph
+from repro.core.scheduler import schedule
+from repro.launch.elastic import ElasticScheduler
+from repro.scenarios import Scenario, churn_trace, run_scenario
+from repro.scenarios.engine import _churn_control_events, _churn_trace_for
+from repro.sim import ControlEvent, simulate
+
+
+def _instance(seed=0, n_tasks=8, n_machines=4):
+    rng = np.random.default_rng(seed)
+    tg = gossip_task_graph(rng, n_tasks, degree_low=2, degree_high=3)
+    C = rng.uniform(0.1, 1.0, (n_machines, n_machines))
+    np.fill_diagonal(C, 0.0)
+    cg = ComputeGraph(e=rng.uniform(0.5, 2.0, n_machines), C=C)
+    return tg, cg
+
+
+def _greedy(tg_, cg_, r):
+    return schedule(tg_, cg_, "greedy").assignment
+
+
+# ---------------------------------------------------------------------------
+# ControlEvent validation (satellite: no silent speed corruption)
+# ---------------------------------------------------------------------------
+
+
+def test_slowdown_factor_must_be_positive():
+    with pytest.raises(ValueError, match="slowdown factor"):
+        ControlEvent(round=1, kind="slowdown", machine=0, factor=0.0)
+    with pytest.raises(ValueError, match="slowdown factor"):
+        ControlEvent(round=1, kind="slowdown", machine=0, factor=-2.0)
+    ControlEvent(round=1, kind="slowdown", machine=0, factor=0.5)  # ok
+
+
+def test_link_event_validation():
+    with pytest.raises(ValueError, match="machine and peer"):
+        ControlEvent(round=0, kind="link_down", machine=0, factor=2.0)
+    with pytest.raises(ValueError, match="distinct"):
+        ControlEvent(round=0, kind="link_down", machine=1, peer=1, factor=2.0)
+    with pytest.raises(ValueError, match="must be > 1"):
+        ControlEvent(round=0, kind="link_down", machine=0, peer=1, factor=1.0)
+    ControlEvent(round=0, kind="link_down", machine=0, peer=1, factor=3.0)
+    ControlEvent(round=3, kind="link_up", machine=0, peer=1)
+
+
+def test_join_and_recover_need_machine_label():
+    for kind in ("join", "recover"):
+        with pytest.raises(ValueError, match="machine label"):
+            ControlEvent(round=0, kind=kind)
+
+
+# ---------------------------------------------------------------------------
+# Engine: join / recover / link events at the barrier
+# ---------------------------------------------------------------------------
+
+
+def test_double_fail_raises_in_engine():
+    tg, cg = _instance()
+    a = schedule(tg, cg, "greedy").assignment
+    events = (
+        ControlEvent(round=1, kind="fail", machine=2),
+        ControlEvent(round=2, kind="fail", machine=2),
+    )
+    with pytest.raises(ValueError, match="already down"):
+        simulate(tg, cg, a, 4, control_events=events, schedule_fn=_greedy)
+
+
+def test_recover_of_up_machine_raises_in_engine():
+    tg, cg = _instance()
+    a = schedule(tg, cg, "greedy").assignment
+    events = (ControlEvent(round=1, kind="recover", machine=2),)
+    with pytest.raises(ValueError, match="already up"):
+        simulate(tg, cg, a, 3, control_events=events, schedule_fn=_greedy)
+
+
+def test_fail_recover_round_trip_restores_round_times_exactly():
+    """fail → recover restores the original fleet: with a deterministic
+    scheduler the post-recovery rounds time EXACTLY like round 0, absent
+    machines report NaN busy, and fleet_size tracks the trace."""
+    tg, cg = _instance(seed=3)
+    a = schedule(tg, cg, "greedy").assignment
+    events = (
+        ControlEvent(round=1, kind="fail", machine=1),
+        ControlEvent(round=3, kind="recover", machine=1),
+    )
+    res = simulate(tg, cg, a, 5, control_events=events, schedule_fn=_greedy)
+    assert res.round_times[3] == res.round_times[0]
+    assert res.round_times[4] == res.round_times[0]
+    assert np.isnan(res.busy[1:3, 1]).all()
+    assert np.isfinite(res.busy[0, 1]) and np.isfinite(res.busy[3:, 1]).all()
+    assert list(res.fleet_size) == [4, 3, 3, 4, 4]
+    assert res.machine_ids == [0, 1, 2, 3]
+    assert res.reschedule_rounds == [1, 3]
+
+
+def test_fail_rejoin_fail_of_same_label_composes_in_engine():
+    tg, cg = _instance(seed=4)
+    a = schedule(tg, cg, "greedy").assignment
+    events = (
+        ControlEvent(round=1, kind="fail", machine=2),
+        ControlEvent(round=2, kind="recover", machine=2),
+        ControlEvent(round=3, kind="fail", machine=2),
+    )
+    res = simulate(tg, cg, a, 5, control_events=events, schedule_fn=_greedy)
+    assert res.machine_ids == [0, 1, 3]
+    assert list(res.fleet_size) == [4, 3, 4, 3, 3]
+    assert np.isnan(res.busy[1, 2]) and np.isfinite(res.busy[2, 2])
+    assert np.isnan(res.busy[3:, 2]).all()
+
+
+def test_link_outage_window_slows_rounds_then_restores_exactly():
+    tg, cg = _instance(seed=5)
+    a = schedule(tg, cg, "greedy").assignment
+    events = (
+        ControlEvent(round=1, kind="link_down", machine=0, peer=1, factor=5.0),
+        ControlEvent(round=3, kind="link_up", machine=0, peer=1),
+    )
+    res = simulate(tg, cg, a, 5, control_events=events)
+    assert res.round_times[1] == res.round_times[2] >= res.round_times[0]
+    assert res.round_times[3] == res.round_times[0]
+    # double link_down on an already-down link raises
+    bad = (
+        ControlEvent(round=1, kind="link_down", machine=0, peer=1, factor=5.0),
+        ControlEvent(round=2, kind="link_down", machine=1, peer=0, factor=5.0),
+    )
+    with pytest.raises(ValueError, match="already in an outage"):
+        simulate(tg, cg, a, 4, control_events=bad)
+    with pytest.raises(ValueError, match="not in an outage"):
+        simulate(
+            tg, cg, a, 3,
+            control_events=(ControlEvent(round=1, kind="link_up",
+                                         machine=0, peer=1),),
+        )
+
+
+def test_join_of_out_of_universe_label_raises():
+    tg, cg = _instance()
+    a = schedule(tg, cg, "greedy").assignment
+    events = (ControlEvent(round=1, kind="join", machine=7),)
+    with pytest.raises(ValueError, match="universe"):
+        simulate(tg, cg, a, 3, control_events=events, schedule_fn=_greedy)
+
+
+# ---------------------------------------------------------------------------
+# ElasticScheduler: arrivals, recoveries, composition
+# ---------------------------------------------------------------------------
+
+
+def test_elastic_fail_rejoin_restores_fleet_exactly():
+    """The acceptance pin: a fail → recover round trip restores speeds,
+    delays, and machine labels bit-for-bit."""
+    tg, cg = _instance(seed=7)
+    es = ElasticScheduler(tg, cg, method="greedy")
+    e0, C0 = es.compute_graph.e.copy(), es.compute_graph.C.copy()
+    es.on_failure(2, round=1)
+    assert es.machine_ids == [0, 1, 3]
+    es.on_recovery(2, round=3)
+    assert es.machine_ids == [0, 1, 2, 3]
+    assert np.array_equal(es.compute_graph.e, e0)
+    assert np.array_equal(es.compute_graph.C, C0)
+
+
+def test_elastic_fail_rejoin_fail_composes():
+    tg, cg = _instance(seed=8)
+    es = ElasticScheduler(tg, cg, method="greedy")
+    for r in range(3):
+        es.on_failure(1, round=2 * r)
+        assert es.machine_ids == [0, 2, 3]
+        es.on_recovery(1, round=2 * r + 1)
+        assert es.machine_ids == [0, 1, 2, 3]
+    events = [h["event"] for h in es.history]
+    assert events == ["init"] + ["fail:1", "recover:1"] * 3
+
+
+def test_elastic_double_fail_raises():
+    tg, cg = _instance()
+    es = ElasticScheduler(tg, cg, method="greedy")
+    es.on_failure(2)
+    with pytest.raises(ValueError, match="not in the live fleet"):
+        es.on_failure(2)
+    with pytest.raises(ValueError, match="already in the live fleet"):
+        es.on_recovery(0)
+
+
+def test_elastic_recovery_during_delay_drift_uses_current_delays():
+    """A machine that fails, sleeps through a delay update, and recovers
+    must rejoin under the drifted delays — not the ones of its departure."""
+    rng = np.random.default_rng(9)
+    tg, cg = _instance(seed=9)
+    es = ElasticScheduler(tg, cg, method="greedy", reschedule_threshold=10.0)
+    es.on_failure(1, round=1)
+    C2 = rng.uniform(2.0, 3.0, (4, 4))
+    C2 = 0.5 * (C2 + C2.T)
+    np.fill_diagonal(C2, 0.0)
+    es.on_delay_update(C2, round=2)          # full-universe update
+    es.on_recovery(1, round=3)
+    assert np.array_equal(es.compute_graph.C, C2)
+
+
+def test_elastic_on_arrival_grows_universe():
+    tg, cg = _instance(seed=10)
+    es = ElasticScheduler(tg, cg, method="greedy")
+    es.on_arrival(4, speed=1.5, delays_to=np.full(4, 0.3), round=2)
+    assert es.machine_ids == [0, 1, 2, 3, 4]
+    assert es.compute_graph.C.shape == (5, 5)
+    assert es.compute_graph.e[4] == 1.5
+    np.testing.assert_array_equal(es.compute_graph.C[4, :4], np.full(4, 0.3))
+    # the new label participates in fail/recover like any original one
+    es.on_failure(4, round=3)
+    es.on_recovery(4, round=4)
+    assert es.machine_ids == [0, 1, 2, 3, 4]
+
+
+def test_elastic_on_arrival_validation():
+    tg, cg = _instance()
+    es = ElasticScheduler(tg, cg, method="greedy")
+    with pytest.raises(ValueError, match="already in the live fleet"):
+        es.on_arrival(0, speed=1.0, delays_to=np.full(3, 0.1))
+    with pytest.raises(ValueError, match="no stashed state"):
+        es.on_arrival(4)                     # new label needs explicit stats
+    with pytest.raises(ValueError, match="speed must be > 0"):
+        es.on_arrival(4, speed=0.0, delays_to=np.full(4, 0.1))
+    with pytest.raises(ValueError, match="delays_to"):
+        es.on_arrival(4, speed=1.0)
+    with pytest.raises(ValueError, match="one entry per other"):
+        es.on_arrival(4, speed=1.0, delays_to=np.full(2, 0.1))
+    with pytest.raises(ValueError, match="dense"):
+        es.on_arrival(9, speed=1.0, delays_to=np.full(4, 0.1))
+    # arrival without stats delegates to recovery for stashed labels
+    es.on_failure(2)
+    es.on_arrival(2)
+    assert es.machine_ids == [0, 1, 2, 3]
+
+
+def test_elastic_history_invariants():
+    """History rounds are monotone and every entry records a finite
+    bottleneck plus the event name."""
+    tg, cg = _instance(seed=11)
+    es = ElasticScheduler(tg, cg, method="greedy")
+    es.on_failure(3, round=1)
+    es.on_delay_update(es._C_full * 1.1, round=2)
+    es.on_recovery(3, round=4)
+    es.observe_round(np.full(4, 0.5), round=5)
+    rounds = [h["round"] for h in es.history if h["round"] is not None]
+    assert rounds == sorted(rounds)
+    for h in es.history:
+        assert h["event"]
+        assert np.isfinite(h["bottleneck"])
+
+
+# ---------------------------------------------------------------------------
+# Degraded mode: retry-once-then-fallback under solve budgets
+# ---------------------------------------------------------------------------
+
+
+def _sdp_kwargs():
+    from repro.core.sdp import SDPOptions
+
+    return {"num_samples": 64, "sdp_options": SDPOptions(max_iters=200)}
+
+
+def test_injected_timeout_activates_fallback():
+    tg, cg = _instance(seed=12, n_tasks=6, n_machines=3)
+    es = ElasticScheduler(
+        tg, cg, method="sdp", fallback="heft", solve_timeout=0.0,
+        schedule_kwargs=_sdp_kwargs(),
+    )
+    assert es.fallback_count == 1                 # the init solve degraded
+    fb = [h for h in es.history if h["event"] == "fallback:heft"]
+    assert len(fb) == 1 and fb[0]["reason"].startswith("timeout:")
+    heft = schedule(tg, cg, "heft", seed=0)
+    assert es.current.bottleneck == heft.bottleneck
+    es.on_failure(1, round=2)                     # still degrades, never wedges
+    assert es.fallback_count == 2
+    assert np.isfinite(es.current.bottleneck)
+
+
+def test_no_fallback_configured_raises_after_two_attempts():
+    tg, cg = _instance(seed=13, n_tasks=6, n_machines=3)
+    with pytest.raises(RuntimeError, match="failed twice"):
+        ElasticScheduler(
+            tg, cg, method="sdp", solve_timeout=0.0,
+            schedule_kwargs=_sdp_kwargs(),
+        )
+
+
+def test_fallback_configuration_validation():
+    tg, cg = _instance()
+    with pytest.raises(ValueError, match="unknown fallback"):
+        ElasticScheduler(tg, cg, method="sdp", fallback="nope")
+    with pytest.raises(ValueError, match="differ from the primary"):
+        ElasticScheduler(tg, cg, method="sdp", fallback="sdp")
+
+
+def test_solver_max_iters_overrides_schedule_kwargs():
+    tg, cg = _instance()
+    es = ElasticScheduler(
+        tg, cg, method="greedy", solver_max_iters=7,
+    )
+    # greedy is not an SDP method: the budget must not leak into kwargs
+    assert "sdp_options" not in es._schedule_kwargs()
+    es2 = ElasticScheduler(
+        tg, cg, method="sdp", solver_max_iters=123,
+        schedule_kwargs=_sdp_kwargs(),
+    )
+    assert es2._schedule_kwargs()["sdp_options"].max_iters == 123
+
+
+# ---------------------------------------------------------------------------
+# Composition-keyed warm-start cache: bounded, evicts unreachable fleets
+# ---------------------------------------------------------------------------
+
+
+def test_comp_cache_is_lru_bounded():
+    tg, cg = _instance(seed=14, n_tasks=6, n_machines=4)
+    es = ElasticScheduler(
+        tg, cg, method="sdp", warm_cache_max=2, schedule_kwargs=_sdp_kwargs(),
+    )
+    for m in (1, 2, 3):                           # 4 distinct compositions
+        es.on_failure(m, round=m)
+        es.on_recovery(m, round=m)
+    assert len(es._comp_states) <= 2
+
+
+def test_permanent_failure_evicts_unreachable_compositions():
+    tg, cg = _instance(seed=15, n_tasks=6, n_machines=4)
+    es = ElasticScheduler(
+        tg, cg, method="sdp", schedule_kwargs=_sdp_kwargs(),
+    )
+    es.on_failure(1, round=1)
+    es.on_recovery(1, round=2)
+    assert any(1 in comp for comp in es._comp_states)
+    es.on_failure(1, round=3, permanent=True)
+    # every cached composition containing label 1 can no longer recur
+    assert all(1 not in comp for comp in es._comp_states)
+    with pytest.raises(ValueError, match="no stashed state"):
+        es.on_recovery(1)
+
+
+# ---------------------------------------------------------------------------
+# Churn trace generator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("model", ["markov", "weibull"])
+def test_churn_trace_deterministic_and_consistent(model):
+    kw = {"start_down_fraction": 0.2, "link_outages": 2}
+    t1 = churn_trace(np.random.default_rng((0, 2)), 6, 30, model=model, **kw)
+    t2 = churn_trace(np.random.default_rng((0, 2)), 6, 30, model=model, **kw)
+    assert t1.machine_events == t2.machine_events
+    assert t1.link_events == t2.link_events
+    t3 = churn_trace(np.random.default_rng((1, 2)), 6, 30, model=model, **kw)
+    assert (t1.machine_events != t3.machine_events
+            or t1.link_events != t3.link_events)
+    # replaying the events reproduces the recorded liveness exactly
+    up = np.ones(6, dtype=bool)
+    by_round: dict = {}
+    for (r, kind, m) in t1.machine_events:
+        by_round.setdefault(r, []).append((kind, m))
+    for r in range(30):
+        for kind, m in by_round.get(r, []):
+            assert up[m] == (kind == "fail"), (r, kind, m)
+            up[m] = kind != "fail"
+        assert (up == t1.up_at[r]).all()
+
+
+def test_churn_trace_min_up_floor():
+    for seed in range(5):
+        t = churn_trace(
+            np.random.default_rng(seed), 5, 40, model="markov",
+            p_fail=0.5, p_recover=0.1, min_up=2,
+        )
+        assert t.up_at.sum(axis=1).min() >= 2
+
+
+def test_churn_trace_start_down_machines_join():
+    t = churn_trace(
+        np.random.default_rng(0), 6, 40, model="markov",
+        start_down_fraction=0.5, p_recover=0.5, p_fail=0.0,
+    )
+    assert t.counts["join"] >= 1
+    # round-0 fails mark the initial absences
+    assert sum(1 for (r, k, _) in t.machine_events
+               if r == 0 and k == "fail") == 3
+
+
+def test_churn_trace_rejects_unknown_params_and_models():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="unknown churn model"):
+        churn_trace(rng, 4, 10, model="exponential")
+    with pytest.raises(ValueError, match="unknown markov parameter"):
+        churn_trace(rng, 4, 10, model="markov", p_fial=0.1)
+
+
+def test_churn_trace_link_outages_materialize_as_valid_events():
+    t = churn_trace(
+        np.random.default_rng(3), 6, 30, model="markov",
+        link_outages=4, outage_len=4, outage_factor=2.5,
+    )
+    evs = t.control_events()
+    downs = [e for e in evs if e.kind == "link_down"]
+    assert len(downs) == 4
+    for e in downs:
+        assert e.factor == 2.5 and e.machine != e.peer
+    # windows never overlap per pair: the engine's double-link_down check
+    # must accept every generated trace
+    tg, cg = _instance(seed=3, n_tasks=6, n_machines=6)
+    a = schedule(tg, cg, "greedy").assignment
+    res = simulate(
+        tg, cg, a, 30, control_events=_churn_control_events(t),
+        schedule_fn=_greedy,
+    )
+    assert np.isfinite(res.total_time)
+
+
+# ---------------------------------------------------------------------------
+# Scenario axis + end-to-end record
+# ---------------------------------------------------------------------------
+
+
+def _churn_scenario(**over):
+    base = dict(
+        name="churn_test",
+        topology="small_world",
+        num_tasks=8,
+        num_machines=4,
+        schedulers=("sdp",),
+        rounds=10,
+        topology_params={"k": 4, "rewire_prob": 0.2},
+        churn="markov",
+        churn_params={
+            "p_fail": 0.2, "p_recover": 0.5,
+            "start_down_fraction": 0.25, "min_up": 2,
+            "link_outages": 1, "outage_len": 3, "outage_factor": 3.0,
+        },
+    )
+    base.update(over)
+    return Scenario(**base)
+
+
+def test_churn_scenario_validation():
+    with pytest.raises(ValueError, match="unknown churn model"):
+        _churn_scenario(churn="exponential")
+    with pytest.raises(ValueError, match="unknown churn policy"):
+        _churn_scenario(churn_policies=("sdp_elastic", "nope"))
+    with pytest.raises(ValueError, match="sync execution"):
+        _churn_scenario(execution="async")
+    with pytest.raises(ValueError, match="separate dynamics axes"):
+        _churn_scenario(delay_model="drift")
+    with pytest.raises(ValueError, match="unknown markov parameter"):
+        _churn_scenario(churn_params={"p_fial": 0.1})
+    # policy keys ride in churn_params without reaching the generator
+    sc = _churn_scenario(churn_params={"solve_timeout": 0.5})
+    assert sc.axes()["churn"] == "markov"
+    trace = _churn_trace_for(sc)
+    assert trace.num_rounds == 10
+
+
+def test_churn_scenario_record_end_to_end():
+    """One small churn scenario through run_scenario: all three policies
+    recorded with finite regret vs the oracle, the injected zero solve
+    budget forcing the elastic policy through its fallback."""
+    sc = _churn_scenario(
+        churn_params={
+            "p_fail": 0.2, "p_recover": 0.5,
+            "start_down_fraction": 0.25, "min_up": 2,
+            "solve_timeout": 0.0,
+        },
+    )
+    rec = run_scenario(sc, quick=True)
+    assert rec["axes"]["churn"] == "markov"
+    assert set(rec["methods"]) == {"sdp_elastic", "sdp_static", "heft"}
+    assert rec["churn"]["oracle_total_time"] > 0
+    assert rec["churn"]["counts"]["fail"] >= 2
+    assert rec["churn"]["counts"]["join"] + rec["churn"]["counts"]["recover"] >= 1
+    for pol, entry in rec["methods"].items():
+        assert np.isfinite(entry["regret_vs_oracle"]), pol
+        assert np.isfinite(entry["total_time"]), pol
+        assert entry["num_consults"] >= 1, pol
+    elastic = rec["methods"]["sdp_elastic"]
+    assert elastic["fallback_count"] >= 1
+    assert elastic["num_elastic_resolves"] >= 1
+    # the oracle re-solves cold at every consult: the reactive policies
+    # cannot beat it by more than rounding noise
+    assert elastic["regret_vs_oracle"] > -0.05

@@ -165,11 +165,23 @@ def test_per_machine_straggler_hits_only_that_machine():
 
 def test_control_events_require_sync():
     tg, cg, a = _instance(0)
-    with pytest.raises(ValueError, match="sync"):
-        simulate(
-            tg, cg, a, 4, ExecutionSpec(semantics="async"),
-            control_events=(ControlEvent(round=1, kind="reschedule"),),
-        )
+    for kind, extra in (
+        ("reschedule", {}),
+        ("link_down", {"machine": 0, "peer": 1, "factor": 2.0}),
+        ("join", {"machine": 0}),
+    ):
+        with pytest.raises(ValueError, match="sync"):
+            simulate(
+                tg, cg, a, 4, ExecutionSpec(semantics="async"),
+                control_events=(ControlEvent(round=1, kind=kind, **extra),),
+            )
+
+
+def test_fleet_size_constant_without_churn():
+    tg, cg, a = _instance(0)
+    for sem in ("sync", "overlap", "async"):
+        res = simulate(tg, cg, a, 4, ExecutionSpec(semantics=sem))
+        assert list(res.fleet_size) == [cg.num_machines] * 4, sem
 
 
 def test_failure_and_drift_events_reproduce_elastic_history():
