@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke churn_smoke ci docs-check bench-scheduler bench-gossip bench-scenarios bench-async bench-churn
+.PHONY: test smoke churn_smoke async_fl_smoke ci docs-check bench-scheduler bench-gossip bench-scenarios bench-async bench-churn bench-async-fl
 
 # Tier-1 verification (ROADMAP.md)
 test:
@@ -17,7 +17,10 @@ test:
 # paper's model), the batched-solver smoke (asserts a B=8 stacked SDP
 # solve is ONE jitted dispatch with all lanes converged), and the churn
 # smoke (a short injected-timeout churn trace: arrivals re-solve, the
-# heft fallback activates, regret vs the oracle stays finite).
+# heft fallback activates, regret vs the oracle stays finite), and the
+# async-FL smoke (the barrier-free trainer's degenerate anchor reproduces
+# the stacked losses to fp32, and a straggler replay mixes stale
+# snapshots with zero barrier stalls).
 smoke:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.small_instance_backends(quick=True); \
@@ -30,6 +33,7 @@ smoke:
 	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.stacked_smoke()"
 	$(PYTHON) -c "import benchmarks.async_bench as a; a.sync_equivalence_smoke()"
 	$(PYTHON) -c "import benchmarks.churn_bench as c; c.churn_smoke()"
+	$(PYTHON) -c "import benchmarks.async_fl_bench as a; a.async_fl_smoke()"
 
 # Churn smoke alone: a short injected-timeout churn trace asserting that
 # arrivals trigger elastic re-solves, a stalled SDP degrades to the heft
@@ -37,6 +41,12 @@ smoke:
 # finite.
 churn_smoke:
 	$(PYTHON) -c "import benchmarks.churn_bench as c; c.churn_smoke()"
+
+# Async-FL smoke alone: the degenerate anchor (all-active + fresh
+# versions + s === 1 reproduces the stacked per-round losses to fp32) and
+# a straggler replay that mixes stale snapshots with zero barrier stalls.
+async_fl_smoke:
+	$(PYTHON) -c "import benchmarks.async_fl_bench as a; a.async_fl_smoke()"
 
 # Docs health: intra-repo markdown links resolve and the documented
 # quickstart command still runs (see scripts/check_docs.py).
@@ -59,5 +69,8 @@ bench-async:
 
 bench-churn:
 	$(PYTHON) -c "import benchmarks.churn_bench as c; c.main(quick=True, resume=False)"
+
+bench-async-fl:
+	$(PYTHON) -c "import benchmarks.async_fl_bench as a; a.main(quick=True)"
 
 ci: test smoke

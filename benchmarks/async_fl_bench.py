@@ -1,0 +1,249 @@
+"""Barrier-free gossip-FL benchmark: loss vs SIMULATED wall-clock.
+
+For each preset in ``repro.scenarios.presets.ASYNC_FL_COMBINATIONS`` with
+a straggler profile, runs the SAME instance (task graph, machine fleet,
+schedules, straggler draws) twice:
+
+  - ``sync``:  the barriered stacked trainer; the time axis is the sync
+    event engine's round completions, so every round pays the
+    max-over-machines straggler penalty at the barrier.
+  - ``async``: ``run_fl_async`` — the async event engine replays the
+    assignment barrier-free and the ``AsyncGossipTrainer`` mixes with the
+    snapshots the simulated network actually delivered, staleness-weighted.
+
+Both curves land in ``BENCH_gossip_fl.json`` under the ``async_fl`` key
+(read-modify-write: the stacked-engine throughput sweep in the same file
+is preserved), plus the comparison the record exists for: the sync loss
+reached by the time async finished, next to async's final loss.  The
+churn preset contributes the robustness evidence — finite losses,
+frozen-then-recovered replicas, zero barrier stalls.  Schema:
+``docs/benchmarks.md`` (async-FL records).
+
+``async_fl_smoke()`` (``make async_fl_smoke``) is the CI guard: the
+degenerate anchor (all-active + fresh versions + ``s === 1`` reproduces
+the stacked per-round losses to fp32) plus a straggler replay that must
+mix at least one stale snapshot with zero barrier stalls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+from benchmarks.common import Timer, emit
+
+# Losses are fp32 accumulations over a few thousand samples; the stacked
+# and async engines may order reductions differently only through the
+# mixing path, which the degenerate anchor pins to this tolerance.
+DEGENERATE_ATOL = 1e-5
+
+
+def _fl_experiment(sc, quick: bool):
+    """The preset's FL workload as an FLExperiment (quick mode shrinks it)."""
+    from repro.fl.gossip import GossipConfig
+    from repro.fl.runner import FLExperiment
+
+    fl = sc.fl
+    rounds = min(fl.rounds, 4) if quick else fl.rounds
+    samples = min(fl.num_samples, 512) if quick else fl.num_samples
+    return FLExperiment(
+        dataset=fl.dataset,
+        num_users=sc.num_tasks,
+        num_machines=sc.num_machines,
+        rounds=rounds,
+        num_samples=samples,
+        seed=sc.seed,
+        gossip=GossipConfig(local_steps=fl.local_steps, batch_size=fl.batch_size),
+    )
+
+
+def _sync_loss_at(t: float, losses: list, times: list) -> float:
+    """Step-interpolate the sync curve: loss of the last round done by t."""
+    done = [loss for loss, tr in zip(losses, times) if tr <= t]
+    return float(done[-1]) if done else float("inf")
+
+
+def _compare_preset(name: str, quick: bool) -> dict:
+    """Sync-vs-async loss curves of one straggler preset, shared instance."""
+    from repro.fl.runner import run_fl, run_fl_async
+    from repro.scenarios import get_scenario
+    from repro.scenarios.engine import build_compute_graph, build_task_graph
+    from repro.sim import simulate
+
+    sc = get_scenario(name)
+    rng = np.random.default_rng(sc.seed)
+    tg = build_task_graph(sc, rng)
+    cg, _ = build_compute_graph(sc, rng)
+    exp = _fl_experiment(sc, quick)
+    spec = sc.execution_spec()
+    sw = sc.staleness_weights()
+
+    # Barriered twin: same instance + straggler draws, sync semantics.
+    sync = run_fl(exp, methods=sc.schedulers, compute_graph=cg, task_graph=tg)
+    sync_losses = [float(h["mean_loss"]) for h in sync["history"]]
+    sync_spec = dataclasses.replace(spec, semantics="sync")
+    sync_times = {}
+    for m, sched in sync["schedules"].items():
+        res = simulate(
+            tg, cg, np.asarray(sched.assignment, dtype=np.int64),
+            exp.rounds, sync_spec,
+        )
+        sync_times[m] = [float(t) for t in res.round_completion]
+
+    ares = run_fl_async(
+        exp, methods=sc.schedulers, compute_graph=cg, task_graph=tg,
+        schedules=sync["schedules"], execution=spec, staleness=sw,
+        archive_depth=sc.fl.archive_depth,
+    )
+
+    methods = {}
+    for m, rows in ares["history"].items():
+        a_losses = [float(h["mean_loss"]) for h in rows]
+        a_times = [float(h["sim_time"]) for h in rows]
+        t_final = a_times[-1]
+        sync_at_t = _sync_loss_at(t_final, sync_losses, sync_times[m])
+        methods[m] = {
+            "sync": {"losses": sync_losses, "sim_time": sync_times[m]},
+            "async": {
+                "losses": a_losses,
+                "sim_time": a_times,
+                "stale_mixes": int(ares["stale_mixes"][m]),
+                "barrier_stalls": int(ares["barrier_stalls"][m]),
+            },
+            "async_final_time": t_final,
+            "async_final_loss": a_losses[-1],
+            "sync_loss_at_async_time": sync_at_t,
+            # async made >= as much progress by its own finish time
+            "async_progress_ge_sync": bool(a_losses[-1] <= sync_at_t + 1e-6),
+        }
+        emit(
+            f"async_fl_{name}_{m}",
+            0.0,
+            f"async_loss={a_losses[-1]:.4f};sync_loss_at_t={sync_at_t:.4f};"
+            f"stale={ares['stale_mixes'][m]};"
+            f"stalls={ares['barrier_stalls'][m]}",
+        )
+    return {
+        "preset": name,
+        "rounds": exp.rounds,
+        "staleness": {"kind": sw.kind, "a": float(sw.a), "b": int(sw.b)},
+        "methods": methods,
+    }
+
+
+def _churn_point(name: str, quick: bool) -> dict:
+    """Churn-trace evidence: the scenario engine's async-FL record."""
+    from repro.scenarios import get_scenario, run_scenario
+
+    rec = run_scenario(get_scenario(name), quick=quick)
+    fl = rec["fl"]
+    point = {
+        "preset": name,
+        "churn": rec["churn"],
+        "staleness": fl["staleness"],
+        "per_method": fl["per_method"],
+    }
+    for m, d in fl["per_method"].items():
+        active = d["active_users"]
+        n = max(active)
+        dipped = min(active) < n
+        recovered = dipped and any(
+            active[i] > min(active[: i + 1]) for i in range(1, len(active))
+        )
+        point["per_method"][m]["frozen_then_recovered"] = bool(
+            dipped and recovered
+        )
+        emit(
+            f"async_fl_churn_{m}",
+            0.0,
+            f"finite={all(np.isfinite(d['losses']))};"
+            f"stalls={d['barrier_stalls']};froze_recovered={dipped and recovered};"
+            f"active={'/'.join(str(a) for a in active)}",
+        )
+    return point
+
+
+def main(
+    quick: bool = True, out_path: str = "BENCH_gossip_fl.json",
+) -> dict:
+    from repro.scenarios.presets import ASYNC_FL_COMBINATIONS
+
+    straggler = [sc.name for sc in ASYNC_FL_COMBINATIONS if sc.churn is None]
+    churn = [sc.name for sc in ASYNC_FL_COMBINATIONS if sc.churn is not None]
+    with Timer() as t:
+        payload = {
+            "bench": "async_fl",
+            "quick": quick,
+            "points": [_compare_preset(n, quick) for n in straggler],
+            "churn_points": [_churn_point(n, quick) for n in churn],
+        }
+    payload["elapsed_seconds"] = t.seconds
+
+    path = pathlib.Path(out_path)
+    data = json.loads(path.read_text()) if path.exists() else {}
+    data["async_fl"] = payload
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    emit("async_fl_sweep_total", t.seconds * 1e6, f"out={out_path}")
+    return payload
+
+
+def async_fl_smoke() -> None:
+    """CI smoke for the barrier-free FL path.
+
+    Asserts (1) the degenerate anchor: an ``AsyncGossipTrainer`` stepped
+    with defaults (all users active, fresh versions, constant ``s === 1``)
+    reproduces the stacked ``GossipTrainer``'s per-round losses to fp32;
+    (2) a straggler replay mixes at least one stale snapshot, stalls at no
+    barrier, and keeps losses finite.
+    """
+    from benchmarks.fig6_gossip_fl import _mlp_init, _mlp_loss
+    from repro.core.graphs import gossip_task_graph
+    from repro.data.synthetic import image_dataset
+    from repro.fl.async_gossip import AsyncGossipTrainer
+    from repro.fl.gossip import GossipConfig, GossipTrainer
+    from repro.fl.runner import FLExperiment, run_fl_async
+    from repro.sim import ExecutionSpec
+
+    # (1) degenerate anchor, MLP-sized so the smoke stays fast
+    rng = np.random.default_rng(0)
+    tg = gossip_task_graph(rng, 8, degree_low=6, degree_high=7)
+    train, _ = image_dataset("mnist", 256, seed=0)
+    shards = train.split(8, rng)
+    cfg = GossipConfig(local_steps=2, batch_size=8, backend="stacked")
+    sync_tr = GossipTrainer(tg, _mlp_init, _mlp_loss, shards, cfg, seed=0)
+    async_tr = AsyncGossipTrainer(tg, _mlp_init, _mlp_loss, shards, cfg, seed=0)
+    for r in range(3):
+        ls = sync_tr.step_round()["mean_loss"]
+        la = async_tr.step_round()["mean_loss"]
+        assert abs(ls - la) <= DEGENERATE_ATOL, (
+            f"round {r}: degenerate async loss {la} != stacked {ls}"
+        )
+    assert async_tr.total_stale_mixes == 0, async_tr.total_stale_mixes
+
+    # (2) straggler replay: stale snapshots flow, no barrier stalls
+    exp = FLExperiment(
+        num_users=8, num_machines=3, rounds=3, num_samples=256, seed=0,
+        gossip=GossipConfig(local_steps=2, batch_size=8),
+    )
+    spec = ExecutionSpec(
+        semantics="async", jitter_sigma=0.1,
+        straggler_prob=0.4, straggler_factor=3.0,
+    )
+    res = run_fl_async(exp, methods=("heft",), execution=spec)
+    rows = res["history"]["heft"]
+    losses = [h["mean_loss"] for h in rows]
+    assert all(np.isfinite(losses)), losses
+    assert res["stale_mixes"]["heft"] >= 1, res["stale_mixes"]
+    assert res["barrier_stalls"]["heft"] == 0, res["barrier_stalls"]
+    emit(
+        "smoke_async_fl", 0.0,
+        f"degenerate_atol={DEGENERATE_ATOL};stale={res['stale_mixes']['heft']};"
+        f"stalls=0;loss_final={losses[-1]:.3f}",
+    )
+
+
+if __name__ == "__main__":
+    main(quick=False)

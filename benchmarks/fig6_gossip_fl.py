@@ -169,7 +169,12 @@ def sweep(
         "config": BENCH_CONFIG,
         "points": points,
     }
-    pathlib.Path(out_path).write_text(json.dumps(result, indent=2) + "\n")
+    # Read-modify-write: async_fl_bench records into the same file under
+    # its own key; re-running this sweep must not clobber that section.
+    path = pathlib.Path(out_path)
+    data = json.loads(path.read_text()) if path.exists() else {}
+    data.update(result)
+    path.write_text(json.dumps(data, indent=2) + "\n")
     return result
 
 

@@ -18,13 +18,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig4,fig5,fig6,roofline,"
-                         "kernels,scheduler,scenarios,async,churn")
+                         "kernels,scheduler,scenarios,async,churn,async_fl")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (
         async_bench,
+        async_fl_bench,
         churn_bench,
         fig4_tasks,
         fig5_density,
@@ -45,6 +46,7 @@ def main() -> None:
         "scenarios": scenarios_bench.main,
         "async": async_bench.main,
         "churn": churn_bench.main,
+        "async_fl": async_fl_bench.main,
     }
     print("name,us_per_call,derived")
     failed = []

@@ -6,6 +6,7 @@
     PYTHONPATH=src python scripts/sweep.py --new-combinations --quick
     PYTHONPATH=src python scripts/sweep.py --async-combinations --quick
     PYTHONPATH=src python scripts/sweep.py --churn-combinations --quick
+    PYTHONPATH=src python scripts/sweep.py --async-fl-combinations --quick
     PYTHONPATH=src python scripts/sweep.py --all --seeds 3 --out BENCH_scenarios.json
 
 The output file is rewritten after every completed scenario and already-
@@ -35,6 +36,8 @@ def main(argv: list[str] | None = None) -> int:
                       help="run the async/overlap event-engine combinations")
     what.add_argument("--churn-combinations", action="store_true",
                       help="run the trace-driven fleet-dynamics combinations")
+    what.add_argument("--async-fl-combinations", action="store_true",
+                      help="run the barrier-free gossip-FL combinations")
     ap.add_argument("--out", default="BENCH_scenarios.json",
                     help="output JSON path (default: %(default)s)")
     ap.add_argument("--seeds", type=int, default=1,
@@ -48,6 +51,7 @@ def main(argv: list[str] | None = None) -> int:
     from repro.scenarios import list_scenarios, run_sweep
     from repro.scenarios.presets import (
         ASYNC_COMBINATIONS,
+        ASYNC_FL_COMBINATIONS,
         CHURN_COMBINATIONS,
         NEW_COMBINATIONS,
     )
@@ -76,6 +80,8 @@ def main(argv: list[str] | None = None) -> int:
         base = list(ASYNC_COMBINATIONS)
     elif args.churn_combinations:
         base = list(CHURN_COMBINATIONS)
+    elif args.async_fl_combinations:
+        base = list(ASYNC_FL_COMBINATIONS)
     else:
         base = list(registry.values())
 

@@ -1,0 +1,257 @@
+"""Barrier-free gossip training on delivered snapshots (DESIGN.md §11).
+
+:class:`AsyncGossipTrainer` couples the stacked gossip engine
+(``repro.fl.gossip``) to the discrete-event simulator's barrier-free
+timing (``repro.sim``): instead of every user mixing with its neighbors'
+CURRENT round-``r`` messages, each edge mixes the *latest delivered*
+snapshot — the per-(round, edge) version the engine recorded in
+``SimResult.mix_versions`` — weighted by a staleness discount ``s(Δτ)``
+(``repro.fl.staleness``).
+
+Mechanics, all inside one jitted round:
+
+  - a ring-buffer **message archive** with a leading ``(N_T, S, …)`` axis
+    keeps each user's last ``S`` published (possibly compressed) gossip
+    messages; version ``v`` lives in slot ``v mod S`` and a ``(N_T, S)``
+    version table detects eviction — an edge whose delivered version was
+    evicted (or never delivered, ``v = -1``) contributes nothing and its
+    mixing mass returns to the receiver's self-weight;
+  - **staleness-weighted aggregation**: edge ``e`` into user ``j`` mixes
+    with effective weight ``w_e · s(r - v_e)``, and the discounted mass
+    is refunded to ``j``'s self-weight (``deficit_j``), so every mixing
+    row still sums to one and a user cut off from fresh snapshots decays
+    to plain local SGD instead of shrinking its parameters;
+  - **churn freezing**: users on a machine the engine marked down for the
+    round skip local training, publishing, and mixing entirely — their
+    replica, optimizer moments, data cursor, and compression
+    error-feedback residual are frozen bit-for-bit until recovery (the
+    engine's anti-entropy then re-delivers their archived snapshot to
+    neighbors and refreshes their mailbox).
+
+Degenerate anchor (pinned in ``tests/test_async_fl.py`` and the
+``async_fl_smoke`` CI target): all users active, every edge fresh
+(``v_e = r``), ``s ≡ 1`` makes the archive gather return exactly this
+round's messages with exactly the stacked mixing weights — the update is
+the stacked engine's, so per-round losses reproduce to fp32 tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphs import TaskGraph
+from repro.fl.gossip import GossipConfig, GossipTrainer
+from repro.fl.staleness import StalenessWeights
+
+
+class AsyncGossipTrainer(GossipTrainer):
+    """Stacked gossip trainer whose exchange runs on delivered versions.
+
+    Public API on top of :class:`GossipTrainer`:
+
+    ``step_round(active=None, edge_versions=None)``
+        One barrier-free round.  ``active`` is an ``(N_T,)`` bool mask of
+        users whose machine is up this round (default all); ``edge_versions``
+        an ``(|E|,)`` int array of the snapshot version delivered on each
+        task-graph edge, in ``task_graph.edges`` order — exactly one row
+        of ``SimResult.mix_versions`` (default: this round's own version,
+        the degenerate fresh case).  Returns the usual round record plus
+        ``stale_mixes`` (edges mixed with Δτ > 0) and ``invalid_edges``
+        (versions never delivered or evicted from the archive).
+
+    ``archive_depth``
+        Ring-buffer depth ``S``: snapshots older than ``S`` rounds are
+        evicted, so it bounds both the archive memory (``S`` extra model
+        copies per user) and the maximum usable staleness.
+    """
+
+    def __init__(
+        self,
+        task_graph: TaskGraph,
+        init_params,
+        loss_fn,
+        shards,
+        cfg: GossipConfig | None = None,
+        seed: int = 0,
+        staleness: StalenessWeights | None = None,
+        archive_depth: int = 8,
+    ):
+        if archive_depth < 1:
+            raise ValueError(f"archive_depth must be >= 1 (got {archive_depth})")
+        self.staleness = staleness if staleness is not None else StalenessWeights()
+        self.archive_depth = int(archive_depth)
+        self.total_stale_mixes = 0
+        super().__init__(
+            task_graph, init_params, loss_fn, shards, cfg, seed,
+            backend="stacked",
+        )
+
+    def _build_stacked_round(self):
+        # Called by GossipTrainer.__init__; builds the async round instead.
+        cfg = self.cfg
+        n, n_e = self.n, len(self._src)
+        S = self.archive_depth
+        comp = cfg.compressor
+        self._data = (jnp.asarray(self._xs), jnp.asarray(self._ys))
+        self_w = jnp.asarray(self._self_w)
+        src = jnp.asarray(self._src)
+        dst = jnp.asarray(self._dst)
+        w_edge = jnp.asarray(self._w_edge)
+        local_scan = self._make_local_scan()
+        s_of = self.staleness.jax_weights
+
+        def sel(mask, new, old):
+            """Per-user select across a pytree (mask is (N_T,) bool)."""
+            return jax.tree.map(
+                lambda a, b: jnp.where(
+                    mask.reshape((n,) + (1,) * (a.ndim - 1)), a, b
+                ),
+                new, old,
+            )
+
+        def round_fn(state, xs, ys, active, edge_ver, r):
+            (params, opt_state, cursor, epoch, perm, residual,
+             archive, arch_ver) = state
+            frozen = (params, opt_state, cursor, epoch, perm, residual)
+            # Local training runs for every user (vmap computes all lanes
+            # anyway); down users' state is then frozen by selection.
+            (params, opt_state, cursor, epoch, perm), losses = local_scan(
+                params, opt_state, cursor, epoch, perm, xs, ys
+            )
+            if comp is None:
+                msgs = params
+            else:
+                delta = jax.tree.map(jnp.add, params, residual)
+                msgs = jax.vmap(comp.roundtrip)(delta)
+                residual = jax.tree.map(jnp.subtract, delta, msgs)
+                residual = sel(active, residual, frozen[5])
+            params = sel(active, params, frozen[0])
+            opt_state = sel(active, opt_state, frozen[1])
+            cursor = jnp.where(active, cursor, frozen[2])
+            epoch = jnp.where(active, epoch, frozen[3])
+            perm = sel(active, perm, frozen[4])
+
+            # Publish version r into ring slot r mod S (active users only).
+            slot = r % S
+            archive = jax.tree.map(
+                lambda arch, m: arch.at[:, slot].set(
+                    jnp.where(
+                        active.reshape((n,) + (1,) * (m.ndim - 1)), m,
+                        arch[:, slot],
+                    )
+                ),
+                archive, msgs,
+            )
+            arch_ver = arch_ver.at[:, slot].set(
+                jnp.where(active, r, arch_ver[:, slot])
+            )
+
+            if n_e:
+                # Per-edge gather of the delivered version from the ring.
+                v = edge_ver
+                e_slot = jnp.maximum(v, 0) % S
+                stored = arch_ver[src, e_slot]
+                valid = (v >= 0) & (stored == v)
+                lag = r - v
+                s_w = s_of(lag)
+                w_eff = jnp.where(
+                    valid & active[dst], w_edge * s_w, 0.0
+                ).astype(jnp.float32)
+
+                def mix_leaf(p, arch):
+                    flat = arch.reshape(n, S, -1)
+                    contrib = (
+                        flat[src, e_slot].astype(jnp.float32)
+                        * w_eff[:, None]
+                    )
+                    inc = jax.ops.segment_sum(contrib, dst, num_segments=n)
+                    return inc.reshape(p.shape).astype(p.dtype)
+
+                incoming = jax.tree.map(mix_leaf, params, archive)
+                # Refund discounted/invalid mass to the self-weight so the
+                # mixing row still sums to one; inactive receivers keep
+                # their frozen params untouched.
+                deficit = jax.ops.segment_sum(
+                    jnp.where(active[dst], w_edge - w_eff, 0.0),
+                    dst, num_segments=n,
+                ).astype(jnp.float32)
+                row_self = self_w + deficit
+                mixed = jax.tree.map(
+                    lambda p, m: (
+                        row_self.reshape((n,) + (1,) * (p.ndim - 1)) * p + m
+                    ),
+                    params, incoming,
+                )
+                params = sel(active, mixed, params)
+                stale = jnp.sum(valid & (lag > 0) & active[dst])
+                invalid = jnp.sum(~valid & active[dst])
+            else:
+                stale = jnp.zeros((), jnp.int32)
+                invalid = jnp.zeros((), jnp.int32)
+
+            act_steps = jnp.maximum(jnp.sum(active), 1) * cfg.local_steps
+            mean_loss = jnp.sum(losses * active[None, :]) / act_steps
+            state = (params, opt_state, cursor, epoch, perm, residual,
+                     archive, arch_ver)
+            return state, (mean_loss, stale, invalid)
+
+        # Extend the inherited state tuple with the archive + versions.
+        params0 = self._state[0]
+        msg_like = params0  # messages share the params pytree structure
+        archive0 = jax.tree.map(
+            lambda l: jnp.zeros((n, S) + l.shape[1:], l.dtype), msg_like
+        )
+        arch_ver0 = jnp.full((n, S), -1, jnp.int32)
+        self._state = self._state + (archive0, arch_ver0)
+
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        return jax.jit(round_fn, donate_argnums=donate)
+
+    def step_round(self, active=None, edge_versions=None) -> dict:
+        """One barrier-free gossip round on delivered snapshot versions."""
+        n_e = len(self._src)
+        if active is None:
+            active = np.ones(self.n, dtype=bool)
+        else:
+            active = np.asarray(active, dtype=bool)
+            if active.shape != (self.n,):
+                raise ValueError(
+                    f"active mask shape {active.shape} != ({self.n},)"
+                )
+        if edge_versions is None:
+            edge_versions = np.full(n_e, self.round, dtype=np.int64)
+        else:
+            edge_versions = np.asarray(edge_versions, dtype=np.int64)
+            if edge_versions.shape != (n_e,):
+                raise ValueError(
+                    f"edge_versions shape {edge_versions.shape} != ({n_e},) "
+                    f"— one delivered version per task-graph edge"
+                )
+            if np.any(edge_versions > self.round):
+                raise ValueError(
+                    f"edge_versions reference round "
+                    f"{int(edge_versions.max())} > current round "
+                    f"{self.round} — a snapshot cannot be delivered before "
+                    f"it is published"
+                )
+        calls_before = self._jit_calls
+        self._state, (mean_loss, stale, invalid) = self._dispatch(
+            self._round_jit,
+            self._state,
+            *self._data,
+            jnp.asarray(active),
+            jnp.asarray(edge_versions, dtype=jnp.int32),
+            jnp.int32(self.round),
+        )
+        self.last_round_dispatches = self._jit_calls - calls_before
+        self.round += 1
+        stale = int(stale)
+        self.total_stale_mixes += stale
+        return {
+            "round": self.round,
+            "mean_loss": float(mean_loss),
+            "stale_mixes": stale,
+            "invalid_edges": int(invalid),
+        }

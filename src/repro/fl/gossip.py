@@ -312,23 +312,21 @@ class GossipTrainer:
     # Stacked engine: one jitted call per round
     # ======================================================================
 
-    def _build_stacked_round(self):
+    def _make_local_scan(self):
+        """The shared local-training stage of one stacked round.
+
+        Returns ``local_scan(params, opt_state, cursor, epoch, perm, xs,
+        ys) -> ((params, opt_state, cursor, epoch, perm), losses)`` —
+        ``cfg.local_steps`` of vmapped SGDM with the in-jit epoch
+        reshuffle, fully unrolled.  Extracted so the barrier-free trainer
+        (``repro.fl.async_gossip``) traces the IDENTICAL math: that is
+        what makes its degenerate case reproduce this engine's losses.
+        """
         cfg = self.cfg
-        n, chunk, batch = self.n, self._chunk, cfg.batch_size
-        opt, comp = self.opt, cfg.compressor
+        chunk, batch = self._chunk, cfg.batch_size
+        opt = self.opt
         grad_fn = jax.value_and_grad(self._loss_fn)
-        # The dataset is a jit ARGUMENT, not a closure constant: closed-over
-        # arrays get inlined into the compiled executable (a second copy of
-        # the full training set, again on every retrace).
-        self._data = (jnp.asarray(self._xs), jnp.asarray(self._ys))
         user_keys = self._user_keys
-        self_w = jnp.asarray(self._self_w)
-        src = jnp.asarray(self._src)
-        dst = jnp.asarray(self._dst)
-        w_edge = jnp.asarray(self._w_edge)
-        W = jnp.asarray(self._W)
-        mix_backend = self.mix_backend
-        interpret = jax.default_backend() == "cpu"
 
         def one_user(p, o, cur, ep, pm, x_u, y_u, key_u):
             wrap = cur + batch > chunk
@@ -355,6 +353,38 @@ class GossipTrainer:
                 params, opt_state, cursor, epoch, perm, xs, ys, user_keys
             )
             return (params, opt_state, cursor, epoch, perm), losses
+
+        def local_scan(params, opt_state, cursor, epoch, perm, xs, ys):
+            # Full unroll: XLA CPU optimizes loop bodies poorly (a rolled
+            # scan body runs ~5x slower here); local_steps is single-digit,
+            # so straight-line code costs little compile time and lets XLA
+            # fuse across steps.
+            return jax.lax.scan(
+                lambda carry, _: local_step(xs, ys, carry),
+                (params, opt_state, cursor, epoch, perm),
+                None,
+                length=cfg.local_steps,
+                unroll=cfg.local_steps,
+            )
+
+        return local_scan
+
+    def _build_stacked_round(self):
+        cfg = self.cfg
+        n = self.n
+        comp = cfg.compressor
+        # The dataset is a jit ARGUMENT, not a closure constant: closed-over
+        # arrays get inlined into the compiled executable (a second copy of
+        # the full training set, again on every retrace).
+        self._data = (jnp.asarray(self._xs), jnp.asarray(self._ys))
+        self_w = jnp.asarray(self._self_w)
+        src = jnp.asarray(self._src)
+        dst = jnp.asarray(self._dst)
+        w_edge = jnp.asarray(self._w_edge)
+        W = jnp.asarray(self._W)
+        mix_backend = self.mix_backend
+        interpret = jax.default_backend() == "cpu"
+        local_scan = self._make_local_scan()
 
         def mix_segment(msgs):
             def seg(m):
@@ -393,16 +423,8 @@ class GossipTrainer:
 
         def round_fn(state, xs, ys):
             params, opt_state, cursor, epoch, perm, residual = state
-            # Full unroll: XLA CPU optimizes loop bodies poorly (a rolled
-            # scan body runs ~5x slower here); local_steps is single-digit,
-            # so straight-line code costs little compile time and lets XLA
-            # fuse across steps.
-            (params, opt_state, cursor, epoch, perm), losses = jax.lax.scan(
-                lambda carry, _: local_step(xs, ys, carry),
-                (params, opt_state, cursor, epoch, perm),
-                None,
-                length=cfg.local_steps,
-                unroll=cfg.local_steps,
+            (params, opt_state, cursor, epoch, perm), losses = local_scan(
+                params, opt_state, cursor, epoch, perm, xs, ys
             )
             if comp is None:
                 msgs = params

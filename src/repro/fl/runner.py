@@ -18,10 +18,13 @@ import numpy as np
 from repro.core.graphs import ComputeGraph, TaskGraph, gossip_task_graph
 from repro.core.scheduler import compare_methods
 from repro.data.synthetic import image_dataset
+from repro.fl.async_gossip import AsyncGossipTrainer
 from repro.fl.cnn import cnn_accuracy, cnn_loss, init_cnn_params
 from repro.fl.gossip import GossipConfig, GossipTrainer
 from repro.fl.pilot import stacked_task_work
 from repro.fl.simulator import round_time
+from repro.fl.staleness import StalenessWeights
+from repro.sim import ExecutionSpec, simulate
 
 
 @dataclasses.dataclass
@@ -130,4 +133,125 @@ def run_fl(
             m: [t * (r + 1) for r in range(exp.rounds)]
             for m, t in per_round_time.items()
         },
+    }
+
+
+def run_fl_async(
+    exp: FLExperiment,
+    methods: tuple[str, ...] = ("heft", "sdp"),
+    compute_graph: ComputeGraph | None = None,
+    task_graph: TaskGraph | None = None,
+    schedules: dict[str, Any] | None = None,
+    execution: ExecutionSpec | None = None,
+    control_events: tuple = (),
+    staleness: StalenessWeights | None = None,
+    archive_depth: int = 8,
+    busy_factors: np.ndarray | None = None,
+) -> dict[str, Any]:
+    """Barrier-free gossip FL: train on the event engine's delivery record.
+
+    For each scheduler method the assignment is replayed through
+    ``repro.sim.simulate`` under async semantics (jitter/stragglers from
+    ``execution``, optional fail/recover churn from ``control_events``),
+    and an :class:`AsyncGossipTrainer` then consumes, round by round, the
+    per-edge delivered versions (``SimResult.mix_versions``) and the
+    machine up/down mask mapped to users through the assignment — so the
+    model updates flow exactly as the simulated network delivered them
+    (DESIGN.md §11).  The returned history carries loss vs SIMULATED
+    wall-clock (``sim_time`` = the engine's round completion), which is
+    the async-vs-sync comparison axis of ``benchmarks/async_fl_bench.py``.
+    """
+    spec = execution if execution is not None else ExecutionSpec(semantics="async")
+    if spec.semantics != "async":
+        raise ValueError(
+            f"run_fl_async requires async execution semantics (got "
+            f"{spec.semantics!r}); use run_fl for the barriered path"
+        )
+    rng = np.random.default_rng(exp.seed)
+    if task_graph is None:
+        tg = gossip_task_graph(
+            rng, exp.num_users,
+            degree_low=exp.degree_low, degree_high=exp.degree_high,
+        )
+    else:
+        if task_graph.num_tasks != exp.num_users:
+            raise ValueError(
+                f"task_graph has {task_graph.num_tasks} tasks, "
+                f"exp.num_users is {exp.num_users}"
+            )
+        tg = task_graph
+    if compute_graph is None:
+        C = rng.uniform(0.0, 1.0, size=(exp.num_machines, exp.num_machines))
+        np.fill_diagonal(C, 0.0)
+        compute_graph = ComputeGraph(e=np.ones(exp.num_machines), C=C)
+
+    train, test = image_dataset(exp.dataset, exp.num_samples, seed=exp.seed)
+    shards = train.split(exp.num_users, rng)
+    shape = train.x.shape[1:]
+
+    if schedules is None:
+        schedules = compare_methods(
+            tg, compute_graph, methods=tuple(methods),
+            seed=exp.seed, warm_start=True,
+        )
+
+    history: dict[str, list] = {}
+    sims: dict[str, Any] = {}
+    for m, sched in schedules.items():
+        a = np.asarray(sched.assignment, dtype=np.int64)
+        res = simulate(
+            tg, compute_graph, a, exp.rounds, spec,
+            control_events=tuple(control_events),
+            busy_factors=busy_factors,
+        )
+        sims[m] = res
+        trainer = AsyncGossipTrainer(
+            tg,
+            lambda k: init_cnn_params(k, shape, train.num_classes),
+            cnn_loss,
+            shards,
+            exp.gossip,
+            seed=exp.seed,
+            staleness=staleness,
+            archive_depth=archive_depth,
+        )
+        rows = []
+        for r in range(exp.rounds):
+            active = (
+                ~res.machine_down[r, a] if res.machine_down is not None
+                else np.ones(exp.num_users, dtype=bool)
+            )
+            # The engine can deliver versions AHEAD of the destination's
+            # local round (a fast neighbor computed round v > r before the
+            # slow dst hit its boundary r).  The stacked replay advances
+            # every user in lockstep, so clamp to the current round: src's
+            # round-r snapshot existed even earlier than round v, keeping
+            # the replay causal with lag 0 (the -1 "never delivered"
+            # sentinel passes through the minimum unchanged).
+            versions = (
+                np.minimum(res.mix_versions[r], r)
+                if res.mix_versions is not None else None
+            )
+            info = trainer.step_round(active=active, edge_versions=versions)
+            info["sim_time"] = float(res.round_completion[r])
+            info["active_users"] = int(active.sum())
+            info["accuracy_user0"] = cnn_accuracy(
+                trainer.user_params(0), test.x, test.y
+            )
+            rows.append(info)
+        history[m] = rows
+
+    return {
+        "task_graph": tg,
+        "compute_graph": compute_graph,
+        "schedules": schedules,
+        "sim": sims,
+        "history": history,
+        "cumulative_time": {
+            m: [float(t) for t in sims[m].round_completion] for m in sims
+        },
+        "stale_mixes": {
+            m: int(sum(row["stale_mixes"] for row in history[m])) for m in history
+        },
+        "barrier_stalls": {m: int(sims[m].barrier_stalls) for m in sims},
     }

@@ -495,7 +495,11 @@ class ElasticScheduler:
 
     # -- stragglers ----------------------------------------------------------
     def observe_round(
-        self, per_machine_time: np.ndarray, *, round: int | None = None
+        self,
+        per_machine_time: np.ndarray,
+        *,
+        round: int | None = None,
+        work_fraction: np.ndarray | None = None,
     ) -> Schedule | None:
         """Update speed estimates from measured times; maybe re-schedule.
 
@@ -505,11 +509,30 @@ class ElasticScheduler:
         within ``speed_clamp``× of the current estimate — a loaded machine
         reporting a time of ~0 would otherwise imply a near-infinite speed
         and poison the EMA with one spike no later round can wash out.
+
+        ``work_fraction[j]`` (optional, default 1) is the fraction of its
+        assigned work machine j actually completed this round — the
+        completeness dimension of ``scenarios.profiles.churn_trace``.  A
+        partial-work round finishes early NOT because the machine is fast,
+        so implied speed uses the completed work ``loads · work_fraction``;
+        without it the shortened busy time reads as a speedup and poisons
+        the EMA.
         """
         cg = self.compute_graph
         per_machine_time = np.asarray(per_machine_time, dtype=np.float64)
         loads = np.zeros(cg.num_machines)
         np.add.at(loads, self.current.assignment, self.task_graph.p)
+        if work_fraction is not None:
+            work_fraction = np.asarray(work_fraction, dtype=np.float64)
+            if work_fraction.shape != loads.shape:
+                raise ValueError(
+                    f"work_fraction shape {work_fraction.shape} != "
+                    f"{loads.shape} (one completed-work fraction per live "
+                    f"machine)"
+                )
+            if np.any(work_fraction <= 0) or np.any(work_fraction > 1):
+                raise ValueError("work_fraction entries must be in (0, 1]")
+            loads = loads * work_fraction
         implied = np.where(
             per_machine_time > 0, loads / np.maximum(per_machine_time, 1e-12), cg.e
         )

@@ -217,6 +217,9 @@ def _sim_entry(scenario: Scenario, res) -> dict:
         entry["staleness_per_task"] = [
             float(s) for s in res.staleness_per_task
         ]
+        entry["barrier_stalls"] = int(res.barrier_stalls)
+        entry["send_skips"] = int(res.send_skips)
+        entry["antientropy_msgs"] = int(res.antientropy_msgs)
     if res.semantics != "sync" or scenario.execution_spec().perturbed:
         entry["round_times"] = [float(t) for t in res.round_times]
     return entry
@@ -319,12 +322,14 @@ def _simulate_drift(
 # ---------------------------------------------------------------------------
 
 
-def _churn_trace_for(scenario: Scenario) -> ChurnTrace:
+def _churn_trace_for(scenario: Scenario, rounds: int | None = None) -> ChurnTrace:
     """The scenario's churn trace — a pure function of (scenario, seed).
 
     Drawn from the DERIVED stream ``(seed, 2)``: stream ``seed`` generates
     the instance and ``(seed, 1)`` the execution jitter, so the fleet
-    dynamics must not replay either's variates.
+    dynamics must not replay either's variates.  ``rounds`` overrides the
+    trace length (churn×FL traces span the FL round count, which defines
+    the simulated timeline there).
     """
     trace_params = {
         k: v for k, v in scenario.churn_params.items()
@@ -333,7 +338,7 @@ def _churn_trace_for(scenario: Scenario) -> ChurnTrace:
     return churn_trace(
         np.random.default_rng((scenario.seed, 2)),
         scenario.num_machines,
-        scenario.rounds,
+        scenario.rounds if rounds is None else rounds,
         model=scenario.churn,
         **trace_params,
     )
@@ -471,9 +476,28 @@ def _simulate_churn(
     else:  # pragma: no cover — Scenario.__post_init__ validates
         raise ValueError(policy)
 
+    # Responsiveness/completeness device states (slow-responder and
+    # partial-work rounds) perturb the engine's busy times for every
+    # policy; the elastic policy additionally observes the measured times,
+    # told which fraction of the work each machine completed so a
+    # partial-work round is not mistaken for a fast machine.
+    bf = trace.busy_factors()
+    on_round_end = None
+    if policy == "sdp_elastic" and bf is not None:
+        def on_round_end(r, busy):
+            live = live_at(r)
+            if list(es.machine_ids) != live:   # pragma: no cover — guard
+                return None
+            wf = (
+                trace.work_at[r, live] if trace.work_at is not None else None
+            )
+            migrated = es.observe_round(busy, round=r, work_fraction=wf)
+            return None if migrated is None else migrated.assignment
+
     res = simulate(
         tg, cg, initial.assignment, scenario.rounds, spec,
         control_events=events, schedule_fn=consult,
+        on_round_end=on_round_end, busy_factors=bf,
     )
     entry = {**_method_entry(initial), **_sim_entry(scenario, res)}
     entry["policy"] = policy
@@ -494,7 +518,8 @@ def _simulate_churn(
 
 
 def _churn_oracle(
-    scenario: Scenario, tg: TaskGraph, cg: ComputeGraph, kw: dict, events: tuple
+    scenario: Scenario, tg: TaskGraph, cg: ComputeGraph, kw: dict,
+    events: tuple, busy_factors=None,
 ) -> float:
     """Total time of the oracle: a COLD full SDP re-solve at every event,
     always adopted.  This is the quality ceiling a reactive policy could
@@ -512,6 +537,7 @@ def _churn_oracle(
     res = simulate(
         tg, cg, s0.assignment, scenario.rounds, scenario.execution_spec(),
         control_events=events, schedule_fn=consult,
+        busy_factors=busy_factors,
     )
     return float(res.total_time)
 
@@ -546,6 +572,80 @@ def _run_fl(scenario: Scenario, tg, cg, schedules=None) -> dict:
         exp, methods=scenario.schedulers, compute_graph=cg, task_graph=tg,
         schedules=schedules,
     )
+
+
+def _run_fl_async(
+    scenario: Scenario, tg, cg, schedules, trace: ChurnTrace | None
+) -> dict:
+    """Barrier-free FL on the engine's instance (DESIGN.md §11).
+
+    ``fl.runner.run_fl_async`` replays each method's assignment through
+    the async event engine and trains an ``AsyncGossipTrainer`` on the
+    recorded deliveries.  A churn trace contributes its machine events
+    (fail/join/recover — machine-local, async-legal; link outages are
+    rejected at Scenario construction) and its responsiveness /
+    completeness busy factors.
+    """
+    from repro.fl.gossip import GossipConfig
+    from repro.fl.runner import FLExperiment, run_fl_async
+
+    fl = scenario.fl
+    exp = FLExperiment(
+        dataset=fl.dataset,
+        num_users=scenario.num_tasks,
+        num_machines=scenario.num_machines,
+        rounds=fl.rounds,
+        num_samples=fl.num_samples,
+        seed=scenario.seed,
+        gossip=GossipConfig(local_steps=fl.local_steps, batch_size=fl.batch_size),
+    )
+    control: tuple = ()
+    busy = None
+    if trace is not None:
+        control = tuple(
+            ev for ev in trace.control_events()
+            if ev.kind in ("fail", "join", "recover")
+        )
+        busy = trace.busy_factors()
+    return run_fl_async(
+        exp,
+        methods=scenario.schedulers,
+        compute_graph=cg,
+        task_graph=tg,
+        schedules=schedules,
+        execution=scenario.execution_spec(),
+        control_events=control,
+        staleness=scenario.staleness_weights(),
+        archive_depth=fl.archive_depth,
+        busy_factors=busy,
+    )
+
+
+def _fl_async_summary(scenario: Scenario, res: dict) -> dict:
+    """Async-FL record: per-method loss-vs-simulated-wall-clock curves
+    (unlike the sync path, training DIFFERS per method — each assignment
+    delivers snapshots on a different timetable)."""
+    sw = scenario.staleness_weights()
+    return {
+        "mode": "async",
+        "staleness": {"kind": sw.kind, "a": float(sw.a), "b": int(sw.b)},
+        "per_method": {
+            m: {
+                "losses": [float(h["mean_loss"]) for h in rows],
+                "accuracy_user0": [
+                    float(h["accuracy_user0"]) for h in rows
+                ],
+                "sim_time": [float(h["sim_time"]) for h in rows],
+                "active_users": [int(h["active_users"]) for h in rows],
+                "stale_mixes": int(res["stale_mixes"][m]),
+                "invalid_edges": int(
+                    sum(h["invalid_edges"] for h in rows)
+                ),
+                "barrier_stalls": int(res["barrier_stalls"][m]),
+            }
+            for m, rows in res["history"].items()
+        },
+    }
 
 
 def _fl_summary(res: dict) -> dict:
@@ -625,11 +725,14 @@ def run_scenario(
         tg = build_task_graph(scenario, rng)
         cg, drift = build_compute_graph(scenario, rng)
         # Under drift each method's only solve lives in its
-        # ElasticScheduler (below), and under churn each POLICY owns its
-        # solves; static scenarios share one SDP solve across the sdp
-        # family through compare_methods' cache (possibly pre-filled by
-        # run_sweep's batched solve).
-        dynamic = drift is not None or scenario.churn is not None
+        # ElasticScheduler (below), and under sync churn each POLICY owns
+        # its solves; static scenarios — including barrier-free FL, where
+        # the assignment is fixed and churn only freezes machines — share
+        # one SDP solve across the sdp family through compare_methods'
+        # cache (possibly pre-filled by run_sweep's batched solve).
+        dynamic = drift is not None or (
+            scenario.churn is not None and fl is None
+        )
         schedules = None if dynamic else compare_methods(
             tg, cg, methods=tuple(scenario.schedulers),
             _sdp_cache=_presolved, **kw
@@ -651,10 +754,12 @@ def run_scenario(
         "methods": {},
     }
 
-    if scenario.churn is not None:
+    if scenario.churn is not None and fl is None:
         trace = _churn_trace_for(scenario)
         events = _churn_control_events(trace)
-        oracle_total = _churn_oracle(scenario, tg, cg, kw, events)
+        oracle_total = _churn_oracle(
+            scenario, tg, cg, kw, events, busy_factors=trace.busy_factors()
+        )
         record["churn"] = {
             "model": scenario.churn,
             "counts": trace.counts,
@@ -675,6 +780,27 @@ def run_scenario(
         for m in scenario.schedulers:
             sim, initial = _simulate_drift(scenario, tg, cg, drift, m, kw)
             record["methods"][m] = {**_method_entry(initial), **sim}
+    elif fl is not None and scenario.execution == "async":
+        # Barrier-free FL: one async sim + one AsyncGossipTrainer run per
+        # method (training differs per assignment), optionally under a
+        # churn trace spanning the FL rounds.
+        trace = (
+            _churn_trace_for(scenario, rounds=fl.rounds)
+            if scenario.churn is not None else None
+        )
+        flres = _run_fl_async(scenario, tg, cg, schedules, trace)
+        for m, s in schedules.items():
+            record["methods"][m] = {
+                **_method_entry(s),
+                **_sim_entry(scenario, flres["sim"][m]),
+            }
+        if trace is not None:
+            record["churn"] = {
+                "model": scenario.churn,
+                "counts": trace.counts,
+                "num_events": len(trace.machine_events),
+                "min_live": int(trace.up_at.sum(axis=1).min()),
+            }
     else:
         for m, s in schedules.items():
             record["methods"][m] = {
@@ -683,9 +809,12 @@ def run_scenario(
             }
 
     if fl is not None:
-        if flres is None:
-            flres = _run_fl(scenario, tg, cg, schedules=schedules)
-        record["fl"] = _fl_summary(flres)
+        if scenario.execution == "async":
+            record["fl"] = _fl_async_summary(scenario, flres)
+        else:
+            if flres is None:
+                flres = _run_fl(scenario, tg, cg, schedules=schedules)
+            record["fl"] = _fl_summary(flres)
 
     record["elapsed_seconds"] = time.perf_counter() - t0
     return record

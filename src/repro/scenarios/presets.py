@@ -246,6 +246,89 @@ ASYNC_COMBINATIONS = (
     )),
 )
 
+# -- barrier-free FL combinations: async training on the event engine --------
+
+ASYNC_FL_COMBINATIONS = (
+    # fig6-style gossip instance trained barrier-free under a straggler
+    # profile: per-round 3x slowdowns hit 15% of machine-rounds, hinge
+    # staleness weights discount the late snapshots.  The sync twin of
+    # this preset (same instance, execution="sync") is what
+    # benchmarks/async_fl_bench.py compares against at equal simulated
+    # time.
+    register(Scenario(
+        name="gossip_async_fl",
+        topology="gossip",
+        num_tasks=10,
+        num_machines=4,
+        machine_profile="lognormal",
+        delay_model="uniform",
+        schedulers=("sdp", "heft"),
+        execution="async",
+        execution_params={
+            "jitter_sigma": 0.1,
+            "straggler_prob": 0.15,
+            "straggler_factor": 3.0,
+        },
+        topology_params={"degree_low": 6, "degree_high": 7},
+        staleness_params={"kind": "hinge", "a": 0.5, "b": 1},
+        fl=FLWorkload(
+            dataset="mnist", rounds=6, local_steps=2, batch_size=32,
+            num_samples=1024,
+        ),
+    )),
+    # Small-world users on an edge/cloud fleet: the bimodal speeds make
+    # the cloud machines run rounds ahead, polynomial staleness decay
+    # absorbs the version gap.
+    register(Scenario(
+        name="smallworld_async_fl",
+        topology="small_world",
+        num_tasks=8,
+        num_machines=4,
+        machine_profile="bimodal",
+        delay_model="distance",
+        schedulers=("sdp", "heft"),
+        execution="async",
+        execution_params={
+            "jitter_sigma": 0.1,
+            "straggler_prob": 0.1,
+            "straggler_factor": 3.0,
+        },
+        topology_params={"k": 4, "rewire_prob": 0.1},
+        machine_params={"fast": 4.0, "slow": 1.0, "fast_fraction": 0.25},
+        staleness_params={"kind": "poly", "a": 0.5},
+        fl=FLWorkload(
+            dataset="mnist", rounds=6, local_steps=2, batch_size=32,
+            num_samples=512,
+        ),
+    )),
+    # Churn×FL: Markov flapping freezes replicas mid-training; the
+    # barrier-free trainer recovers them via anti-entropy with bounded
+    # in-flight sends.  Evidence target: finite losses, frozen-then-
+    # recovered replicas, zero barrier stalls.
+    register(Scenario(
+        name="gossip_churn_fl",
+        topology="gossip",
+        num_tasks=10,
+        num_machines=4,
+        machine_profile="uniform",
+        delay_model="uniform",
+        schedulers=("sdp", "heft"),
+        execution="async",
+        execution_params={"token_capacity": 8.0, "token_refill": 4.0},
+        topology_params={"degree_low": 6, "degree_high": 7},
+        staleness_params={"kind": "hinge", "a": 1.0, "b": 2},
+        churn="markov",
+        churn_params={
+            "p_fail": 0.15, "p_recover": 0.5, "min_up": 2,
+            "p_slow": 0.2, "slow_factor": 2.0,
+        },
+        fl=FLWorkload(
+            dataset="mnist", rounds=8, local_steps=2, batch_size=32,
+            num_samples=1024, archive_depth=10,
+        ),
+    )),
+)
+
 # -- churn combinations: trace-driven fleet dynamics --------------------------
 
 CHURN_COMBINATIONS = (

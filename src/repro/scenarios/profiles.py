@@ -64,6 +64,17 @@ _CHURN_COMMON = {
     "link_outages": 0,
     "outage_len": 6,
     "outage_factor": 4.0,
+    # FLGo-style device-state dimensions on top of up/down availability:
+    # responsiveness (a slow-responder round multiplies the machine's
+    # busy time by ``slow_factor``) and completeness (a partial-work
+    # round completes only a ``[partial_floor, 1)`` fraction of the
+    # round's work — busy time shrinks proportionally, and the elastic
+    # speed estimator must be told or the shortened round poisons its
+    # EMA — ``ElasticScheduler.observe_round(work_fraction=...)``).
+    "p_slow": 0.0,
+    "slow_factor": 3.0,
+    "p_partial": 0.0,
+    "partial_floor": 0.5,
 }
 CHURN_TRACE_PARAMS = {
     "markov": {"p_fail": 0.05, "p_recover": 0.25, **_CHURN_COMMON},
@@ -209,6 +220,16 @@ class ChurnTrace:
         ``link_up`` end falls inside the trace are closed explicitly.
       up_at: (R, K) bool — liveness of each machine during round r,
         AFTER that round's events (what the engine's fleet looks like).
+      slow_at: (R, K) float or None — responsiveness state: the
+        multiplicative busy-time factor of machine k in round r
+        (``slow_factor`` in slow-responder rounds, 1 otherwise).  None
+        when the trace was generated without the dimension
+        (``p_slow = p_partial = 0``), keeping legacy traces bit-identical.
+      work_at: (R, K) float or None — completeness state: the fraction of
+        round r's work machine k actually performs (< 1 in partial-work
+        rounds).  Busy time scales by the same fraction; feed it to
+        ``ElasticScheduler.observe_round(work_fraction=...)`` so the
+        shortened round is not mistaken for a speedup.
     """
 
     num_rounds: int
@@ -216,6 +237,21 @@ class ChurnTrace:
     machine_events: tuple
     link_events: tuple
     up_at: np.ndarray
+    slow_at: np.ndarray | None = None
+    work_at: np.ndarray | None = None
+
+    def busy_factors(self) -> np.ndarray | None:
+        """The (R, K) multiplicative busy-time matrix the event engine
+        applies (``simulate(busy_factors=...)``): slow-responder factor ×
+        completed-work fraction.  None when neither dimension is active."""
+        if self.slow_at is None and self.work_at is None:
+            return None
+        out = np.ones((self.num_rounds, self.num_machines))
+        if self.slow_at is not None:
+            out = out * self.slow_at
+        if self.work_at is not None:
+            out = out * self.work_at
+        return out
 
     @property
     def counts(self) -> dict:
@@ -370,10 +406,41 @@ def churn_trace(
                     break
     link_events.sort(key=lambda ev: ev[0])
 
+    # Responsiveness/completeness states draw LAST, and only when active:
+    # traces generated with the legacy parameter set consume exactly the
+    # legacy rng stream and stay bit-identical.
+    slow_at = work_at = None
+    p_slow, p_partial = float(p["p_slow"]), float(p["p_partial"])
+    if not (0.0 <= p_slow <= 1.0 and 0.0 <= p_partial <= 1.0):
+        raise ValueError(
+            f"p_slow/p_partial must be probabilities, got "
+            f"{p_slow}/{p_partial}"
+        )
+    if p_slow > 0.0:
+        slow_factor = float(p["slow_factor"])
+        if slow_factor <= 1.0:
+            raise ValueError(
+                f"slow_factor must be > 1 (a busy-time penalty), got "
+                f"{slow_factor}"
+            )
+        mask = rng.random((num_rounds, num_machines)) < p_slow
+        slow_at = np.where(mask, slow_factor, 1.0)
+    if p_partial > 0.0:
+        floor = float(p["partial_floor"])
+        if not 0.0 < floor < 1.0:
+            raise ValueError(
+                f"partial_floor must be in (0, 1), got {floor}"
+            )
+        mask = rng.random((num_rounds, num_machines)) < p_partial
+        frac = rng.uniform(floor, 1.0, size=(num_rounds, num_machines))
+        work_at = np.where(mask, frac, 1.0)
+
     return ChurnTrace(
         num_rounds=num_rounds,
         num_machines=num_machines,
         machine_events=tuple(events),
         link_events=tuple(link_events),
         up_at=up_at,
+        slow_at=slow_at,
+        work_at=work_at,
     )

@@ -18,6 +18,7 @@ from typing import Mapping
 
 from repro.core.graphs import TOPOLOGY_FAMILIES
 from repro.core.scheduler import METHODS
+from repro.fl.staleness import StalenessWeights
 from repro.scenarios.profiles import (
     CHURN_MODELS,
     CHURN_TRACE_PARAMS,
@@ -27,7 +28,10 @@ from repro.scenarios.profiles import (
 )
 from repro.sim import SEMANTICS, ExecutionSpec
 
-_EXECUTION_PARAM_KEYS = ("jitter_sigma", "straggler_prob", "straggler_factor")
+_EXECUTION_PARAM_KEYS = (
+    "jitter_sigma", "straggler_prob", "straggler_factor",
+    "token_capacity", "token_refill",
+)
 
 # Churn policies are NOT plain scheduler methods — they are strategies for
 # reacting to trace events, each anchored on a method:
@@ -70,6 +74,11 @@ class FLWorkload:
     num_samples: int = 1024
     backend: str = "stacked"
     paper_setting: bool = False
+    # Barrier-free training (execution="async" scenarios): ring-buffer
+    # depth of the AsyncGossipTrainer's message archive — snapshots older
+    # than this many rounds are evicted and their edges fall back to
+    # self-weight (DESIGN.md §11).
+    archive_depth: int = 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +136,10 @@ class Scenario:
     churn: str | None = None
     churn_params: Mapping = dataclasses.field(default_factory=dict)
     churn_policies: tuple[str, ...] = CHURN_POLICIES
+    # Staleness-weight family for barrier-free FL (``repro.fl.staleness``
+    # keys: kind/a/b).  Only meaningful with fl + execution="async" —
+    # under sync every mix is fresh, so s(Δτ) never fires.
+    staleness_params: Mapping = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         if self.topology not in TOPOLOGY_FAMILIES:
@@ -161,16 +174,33 @@ class Scenario:
                 f"accepted: {sorted(_EXECUTION_PARAM_KEYS)}"
             )
         self.execution_spec()  # validate parameter values eagerly
+        if (
+            self.execution_params.get("token_capacity") is not None
+            and self.execution != "async"
+        ):
+            raise ValueError(
+                f"execution_params['token_capacity'] requires "
+                f"execution='async' (got execution={self.execution!r}): "
+                f"under sync/overlap every send is a dependency, so a "
+                f"skipped send would deadlock its consumer; nearest legal "
+                f"config: execution='async', or drop token_capacity"
+            )
         if self.delay_model == "drift" and self.execution != "sync":
             raise ValueError(
-                "the drift delay model re-schedules at round barriers, so "
-                "it requires sync execution semantics"
+                f"delay_model='drift' requires execution='sync' (got "
+                f"execution={self.execution!r}): drift re-schedules at "
+                f"round barriers, which barrier-free semantics do not "
+                f"have; nearest legal config: execution='sync', or "
+                f"delay_model='distance' with execution={self.execution!r}"
             )
-        if self.fl is not None and self.execution != "sync":
+        if self.fl is not None and self.execution == "overlap":
             raise ValueError(
-                "an FL workload requires sync execution semantics: the "
-                "gossip trainer runs synchronous rounds, so one record "
-                "would describe two different execution regimes"
+                f"fl with execution='overlap' is not supported: the "
+                f"pipelined engine overlaps sends with compute but still "
+                f"consumes every input fresh, which no trainer models; "
+                f"nearest legal config: execution='sync' "
+                f"(GossipTrainer barriers) or execution='async' "
+                f"(AsyncGossipTrainer on delivered snapshots)"
             )
         if self.fl is not None and self.delay_model == "drift":
             raise ValueError(
@@ -178,26 +208,60 @@ class Scenario:
                 "FL timeline assumes static delays, so one record would "
                 "describe two different runs"
             )
+        if (
+            self.fl is not None
+            and self.fl.paper_setting
+            and self.execution != "sync"
+        ):
+            raise ValueError(
+                f"fl.paper_setting=True with execution={self.execution!r} "
+                f"is not supported: the paper_setting path replays the "
+                f"legacy synchronous §4.2 benchmark bit-for-bit; nearest "
+                f"legal config: execution='sync', or paper_setting=False "
+                f"for barrier-free training on the engine's instance"
+            )
+        if self.staleness_params and (
+            self.fl is None or self.execution != "async"
+        ):
+            raise ValueError(
+                f"staleness_params only apply to barrier-free FL training "
+                f"(got fl={'set' if self.fl is not None else None}, "
+                f"execution={self.execution!r}): under sync every mix is "
+                f"fresh, so s(Δτ) never fires; nearest legal config: "
+                f"execution='async' with an fl workload, or drop "
+                f"staleness_params"
+            )
+        # Validate the family eagerly — a bad kind/a/b must fail at
+        # construction, not when the trainer first mixes.
+        StalenessWeights(**dict(self.staleness_params))
         if self.churn is not None:
             if self.churn not in CHURN_MODELS:
                 raise ValueError(
                     f"unknown churn model {self.churn!r}; "
                     f"choose from {CHURN_MODELS}"
                 )
-            if self.execution != "sync":
+            if self.fl is None and self.execution != "sync":
                 raise ValueError(
-                    "churn events fire at round barriers, so a churn trace "
-                    "requires sync execution semantics"
+                    f"churn={self.churn!r} without an fl workload requires "
+                    f"execution='sync' (got execution={self.execution!r}): "
+                    f"the churn policies re-schedule at round barriers; "
+                    f"nearest legal config: execution='sync', or add an fl "
+                    f"workload with execution='async' for barrier-free "
+                    f"churn-tolerant training"
+                )
+            if self.fl is not None and self.execution != "async":
+                raise ValueError(
+                    f"churn={self.churn!r} composed with fl requires "
+                    f"execution='async' (got execution={self.execution!r}): "
+                    f"only the barrier-free AsyncGossipTrainer freezes and "
+                    f"recovers replicas mid-training; nearest legal config: "
+                    f"execution='async', or drop fl to run the sync churn "
+                    f"policies"
                 )
             if self.delay_model == "drift":
                 raise ValueError(
                     "churn and drift are separate dynamics axes; compose "
                     "link outages via churn_params instead of drift delays"
-                )
-            if self.fl is not None:
-                raise ValueError(
-                    "an FL workload cannot ride on a churn trace: the FL "
-                    "timeline assumes a fixed fleet"
                 )
             if not self.churn_policies:
                 raise ValueError("churn scenarios need >= 1 churn policy")
@@ -210,6 +274,18 @@ class Scenario:
                 if k not in CHURN_POLICY_KEYS
             }
             _take(self.churn, trace_params, CHURN_TRACE_PARAMS[self.churn])
+            if self.fl is not None and int(
+                trace_params.get("link_outages", 0)
+            ) != 0:
+                raise ValueError(
+                    f"churn_params['link_outages']="
+                    f"{trace_params['link_outages']} cannot compose with "
+                    f"fl: link events are a sync-only control kind (the "
+                    f"async engine has no barrier at which to swap the "
+                    f"delay matrix); nearest legal config: "
+                    f"link_outages=0, or drop fl for the sync churn "
+                    f"policies"
+                )
             for pol in self.churn_policies:
                 if pol not in CHURN_POLICIES:
                     raise ValueError(
@@ -236,6 +312,11 @@ class Scenario:
         return ExecutionSpec(
             semantics=self.execution, seed=(self.seed, 1), **params
         )
+
+    def staleness_weights(self) -> StalenessWeights:
+        """The validated ``s(Δτ)`` family for barrier-free FL training
+        (the constant family — no discount — when unset)."""
+        return StalenessWeights(**dict(self.staleness_params))
 
     def axes(self) -> dict:
         """The scenario's grid coordinates (for sweep records / --list)."""

@@ -4,12 +4,16 @@
 the machines (DESIGN.md §9); ``ExecutionSpec`` picks the semantics and
 the per-machine jitter/straggler model, ``ControlEvent`` injects
 failures, slowdowns, delay drift, and elastic re-schedules into the same
-queue, and ``SimResult`` carries round timings, per-machine busy times,
-staleness metrics, and steady-state throughput.
+queue (the machine-local subset — ``ASYNC_CONTROL_KINDS`` — also
+composes with barrier-free execution, DESIGN.md §11), ``TokenAccount``
+bounds in-flight async sends, and ``SimResult`` carries round timings,
+per-machine busy times, staleness metrics, per-(round, edge) delivered
+versions, and steady-state throughput.
 """
 
 from repro.sim.engine import simulate
 from repro.sim.events import (
+    ASYNC_CONTROL_KINDS,
     CONTROL_KINDS,
     SEMANTICS,
     ControlEvent,
@@ -17,13 +21,16 @@ from repro.sim.events import (
     SimResult,
     steady_period,
 )
+from repro.sim.flow import TokenAccount
 
 __all__ = [
+    "ASYNC_CONTROL_KINDS",
     "CONTROL_KINDS",
     "ControlEvent",
     "ExecutionSpec",
     "SEMANTICS",
     "SimResult",
+    "TokenAccount",
     "simulate",
     "steady_period",
 ]

@@ -36,7 +36,20 @@ Semantics (DESIGN.md §9):
       Communication moves off the critical path entirely; its cost
       resurfaces as per-task staleness (rounds behind the synchronous
       reference), and the barrier time is replaced by steady-state round
-      throughput.
+      throughput.  ``async`` additionally admits a machine-local control
+      plane (``fail``/``join``/``recover``/``slowdown`` — DESIGN.md §11)
+      and token-account flow control (``token_capacity``/``token_refill``,
+      ``repro.sim.flow``), and records the per-(round, edge) consumed
+      versions (``SimResult.mix_versions``) that couple the engine to the
+      barrier-free gossip trainer (``repro.fl.async_gossip``).
+
+Event ordering is a documented total order: queue keys are
+``(time, kind, index, round)`` with ``arrive < compute < boundary`` at
+equal time — all same-instant deliveries settle before any machine's
+round boundary reads its mailbox, and boundaries process in machine-index
+order (which also fixes the jitter-draw order).  No insertion sequence
+number participates, so permuting event insertion order leaves results
+bit-identical (regression-tested).
 """
 
 from __future__ import annotations
@@ -58,6 +71,10 @@ CONTROL_KINDS = (
     "link_up",
 )
 
+# The machine-local subset that also composes with ``async`` semantics
+# (no global quiescent point needed — see ControlEvent's docstring).
+ASYNC_CONTROL_KINDS = ("fail", "join", "recover", "slowdown")
+
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionSpec:
@@ -77,6 +94,11 @@ class ExecutionSpec:
         pure function of (instance, assignment, spec).  Use a stream
         distinct from the one that generated the instance, or the
         "noise" replays the instance's own variates.
+      token_capacity: per-machine send-token budget (``repro.sim.flow``;
+        async only).  None disables flow control; a value >= 1 bounds
+        each machine's in-flight gossip sends per round to the capacity.
+      token_refill: tokens deposited per completed round (>= 0), saturating
+        at the capacity.
     """
 
     semantics: str = "sync"
@@ -84,6 +106,8 @@ class ExecutionSpec:
     straggler_prob: float | tuple = 0.0
     straggler_factor: float = 4.0
     seed: int | tuple = 0
+    token_capacity: float | None = None
+    token_refill: float = 1.0
 
     def __post_init__(self):
         if self.semantics not in SEMANTICS:
@@ -97,6 +121,13 @@ class ExecutionSpec:
             raise ValueError("straggler_prob must be in [0, 1]")
         if self.straggler_factor <= 0:
             raise ValueError("straggler_factor must be > 0")
+        if self.token_capacity is not None and not self.token_capacity >= 1.0:
+            raise ValueError(
+                f"token_capacity must be >= 1 or None (got "
+                f"{self.token_capacity})"
+            )
+        if not self.token_refill >= 0.0:
+            raise ValueError(f"token_refill must be >= 0 (got {self.token_refill})")
 
     @property
     def perturbed(self) -> bool:
@@ -141,8 +172,17 @@ class ControlEvent:
       - ``reschedule``: call ``schedule_fn`` (e.g. an
         ``ElasticScheduler`` consult) and adopt its assignment.
 
-    Control events require ``sync`` semantics: they are applied at the
-    round barrier, the only globally quiescent point.
+    ``delay_update``, ``link_down``/``link_up``, and ``reschedule``
+    require ``sync`` semantics: they change global state (the delay
+    matrix or the assignment), and the round barrier is the only globally
+    quiescent point for that.  ``fail``/``join``/``recover``/``slowdown``
+    are machine-LOCAL and additionally compose with ``async`` semantics:
+    a fail takes effect when the machine would start local round
+    ``round`` (freezing it there), a recover at round r2 fires once the
+    live fleet's frontier — the minimum round any up machine is computing
+    — reaches r2 (the barrier-free analog of "everyone reached the
+    barrier"), and a slowdown applies from the machine's local round
+    onward.  See DESIGN.md §11.
     """
 
     round: int
@@ -214,6 +254,21 @@ class SimResult:
       machine_ids: surviving original machine labels.
       assignment: final task→machine assignment (local indices).
       events_processed: total data-plane events popped from the queue.
+      barrier_stalls: executions blocked on a neighbor — under ``sync``
+        the machines that finished a round strictly before its barrier,
+        under ``overlap`` the starts gated on missing inputs.  0 under
+        ``async`` by construction (machines never wait).
+      send_skips: gossip sends dropped by token-account flow control.
+      antientropy_msgs: push/pull catch-up messages exchanged when a
+        churned-out machine recovered (async churn only).
+      mix_versions: async only — (R, |E|) freshest delivered source round
+        in each edge's mailbox when its destination machine finished
+        local round r (-1: nothing delivered yet).  This is the mix
+        schedule ``repro.fl.async_gossip.AsyncGossipTrainer`` replays.
+      machine_round_end: async only — (R, N_K) wall-clock time machine j
+        finished local round r (NaN: skipped while churned out).
+      machine_down: async only — (R, N_K) bool, True where machine j
+        skipped round r between a fail and its recovery.
     """
 
     semantics: str
@@ -232,6 +287,12 @@ class SimResult:
     machine_ids: list[int]
     assignment: np.ndarray
     events_processed: int
+    barrier_stalls: int = 0
+    send_skips: int = 0
+    antientropy_msgs: int = 0
+    mix_versions: np.ndarray | None = None
+    machine_round_end: np.ndarray | None = None
+    machine_down: np.ndarray | None = None
 
 
 def steady_period(round_completion: np.ndarray) -> float:

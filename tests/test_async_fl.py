@@ -1,0 +1,251 @@
+"""Barrier-free gossip FL: degenerate anchor, staleness weighting, churn
+freeze/recover, scenario validation messages, responsiveness dimensions."""
+
+import numpy as np
+import pytest
+
+from repro.core.graphs import gossip_task_graph
+from repro.data.synthetic import image_dataset
+from repro.fl.async_gossip import AsyncGossipTrainer
+from repro.fl.cnn import cnn_loss, init_cnn_params
+from repro.fl.gossip import GossipConfig, GossipTrainer
+from repro.fl.runner import FLExperiment, run_fl_async
+from repro.fl.staleness import StalenessWeights
+from repro.launch.elastic import ElasticScheduler
+from repro.scenarios import Scenario
+from repro.scenarios.profiles import churn_trace
+from repro.sim import ControlEvent, ExecutionSpec
+from repro.train.compression import TopK
+
+
+def _pair(n_users=4, compressor=None, seed=0, staleness=None, archive_depth=8):
+    """A stacked GossipTrainer and an AsyncGossipTrainer on one instance."""
+    rng = np.random.default_rng(seed)
+    tg = gossip_task_graph(rng, n_users, degree_low=2, degree_high=3)
+    train, _ = image_dataset("mnist", 512, seed=seed)
+    shards = train.split(n_users, rng)
+    cfg = GossipConfig(local_steps=2, batch_size=32, lr=0.05,
+                       compressor=compressor, backend="stacked")
+    init = lambda k: init_cnn_params(k, (28, 28, 1), 10)
+    sync = GossipTrainer(tg, init, cnn_loss, shards, cfg, seed=seed)
+    asyn = AsyncGossipTrainer(
+        tg, init, cnn_loss, shards, cfg, seed=seed,
+        staleness=staleness, archive_depth=archive_depth,
+    )
+    return sync, asyn, tg
+
+
+# ---------------------------------------------------------------------------
+# Degenerate anchor: all-active + fresh versions + s === 1 == stacked engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("compressor", [None, TopK(fraction=0.5)])
+def test_degenerate_anchor_reproduces_stacked_losses(compressor):
+    sync, asyn, _ = _pair(compressor=compressor)
+    for r in range(3):
+        ls = sync.step_round()["mean_loss"]
+        info = asyn.step_round()     # defaults: all active, fresh versions
+        assert info["mean_loss"] == pytest.approx(ls, abs=1e-5), (
+            f"round {r}: async degenerate loss diverged from stacked"
+        )
+        assert info["stale_mixes"] == 0
+        assert info["invalid_edges"] == 0
+    # and the replicas themselves agree to fp32 roundoff
+    for u in range(len(sync.params)):
+        a = np.concatenate([np.ravel(v) for v in
+                            jax_leaves(asyn.params[u])])
+        s = np.concatenate([np.ravel(v) for v in
+                            jax_leaves(sync.params[u])])
+        np.testing.assert_allclose(a, s, atol=1e-5)
+
+
+def jax_leaves(tree):
+    import jax
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def test_stale_versions_are_discounted_and_counted():
+    _, asyn, tg = _pair(staleness=StalenessWeights(kind="hinge", a=1.0, b=0))
+    asyn.step_round()
+    n_edges = len(tg.edges)
+    info = asyn.step_round(edge_versions=np.zeros(n_edges, dtype=np.int64))
+    assert info["stale_mixes"] == n_edges       # every edge lagged by 1
+    assert np.isfinite(info["mean_loss"])
+    assert asyn.total_stale_mixes == n_edges
+
+
+def test_never_delivered_edges_fall_back_to_self_weight():
+    _, asyn, tg = _pair()
+    info = asyn.step_round(
+        edge_versions=np.full(len(tg.edges), -1, dtype=np.int64)
+    )
+    # nothing delivered: every edge invalid, no stale mixes, finite loss
+    assert info["invalid_edges"] == len(tg.edges)
+    assert info["stale_mixes"] == 0
+    assert np.isfinite(info["mean_loss"])
+
+
+def test_future_versions_rejected_at_the_trainer():
+    _, asyn, tg = _pair()
+    with pytest.raises(ValueError, match="cannot be delivered"):
+        asyn.step_round(edge_versions=np.ones(len(tg.edges), dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Churn: frozen replicas are bit-exact, recovery keeps training finite
+# ---------------------------------------------------------------------------
+
+
+def test_inactive_user_freezes_replica_bit_exact():
+    _, asyn, _ = _pair()
+    asyn.step_round()
+    before = jax_leaves(asyn.params[2])
+    active = np.ones(4, dtype=bool)
+    active[2] = False
+    info = asyn.step_round(active=active)
+    after = jax_leaves(asyn.params[2])
+    for b, a in zip(before, after):
+        np.testing.assert_array_equal(b, a)
+    assert np.isfinite(info["mean_loss"])
+    # recovery round: everyone trains again, still finite
+    info = asyn.step_round()
+    assert np.isfinite(info["mean_loss"])
+
+
+def test_run_fl_async_churn_trace_completes():
+    exp = FLExperiment(
+        num_users=8, num_machines=4, rounds=5, num_samples=512, seed=0,
+        gossip=GossipConfig(local_steps=2, batch_size=32),
+    )
+    events = (
+        ControlEvent(round=1, kind="fail", machine=0),
+        ControlEvent(round=3, kind="recover", machine=0),
+    )
+    res = run_fl_async(
+        exp, methods=("heft",),
+        execution=ExecutionSpec(semantics="async", jitter_sigma=0.1),
+        control_events=events,
+        staleness=StalenessWeights(kind="poly", a=0.5),
+    )
+    rows = res["history"]["heft"]
+    losses = [h["mean_loss"] for h in rows]
+    assert all(np.isfinite(losses)), losses
+    active = [h["active_users"] for h in rows]
+    assert min(active) < 8, active          # the failure froze some users
+    assert active[-1] == 8, active          # and recovery brought them back
+    assert res["barrier_stalls"]["heft"] == 0
+    sim = res["sim"]["heft"]
+    assert sim.machine_down[1, 0] and not sim.machine_down[4, 0]
+
+
+def test_run_fl_async_rejects_sync_spec():
+    with pytest.raises(ValueError, match="async"):
+        run_fl_async(FLExperiment(), execution=ExecutionSpec(semantics="sync"))
+
+
+# ---------------------------------------------------------------------------
+# Scenario validation: messages name the offending field + the legal config
+# ---------------------------------------------------------------------------
+
+_FL_KW = dict(
+    topology="gossip", num_tasks=10, num_machines=4,
+    machine_profile="uniform", delay_model="uniform",
+    schedulers=("heft",), topology_params={"degree_low": 6, "degree_high": 7},
+)
+
+
+def _fl():
+    from repro.scenarios.spec import FLWorkload
+    return FLWorkload(rounds=2, num_samples=256)
+
+
+def test_staleness_params_require_async_fl():
+    with pytest.raises(ValueError, match="staleness_params.*async"):
+        Scenario(name="x", fl=_fl(), execution="sync",
+                 staleness_params={"kind": "hinge"}, **_FL_KW)
+    with pytest.raises(ValueError, match="staleness_params"):
+        Scenario(name="x", execution="async",
+                 staleness_params={"kind": "hinge"}, **_FL_KW)
+
+
+def test_token_params_require_async():
+    with pytest.raises(ValueError, match="token_capacity.*async"):
+        Scenario(name="x", execution="sync",
+                 execution_params={"token_capacity": 4.0}, **_FL_KW)
+
+
+def test_fl_overlap_rejected_with_legal_alternatives_named():
+    with pytest.raises(ValueError, match="overlap.*(sync|async)"):
+        Scenario(name="x", fl=_fl(), execution="overlap", **_FL_KW)
+
+
+def test_churn_fl_requires_async_and_no_link_outages():
+    with pytest.raises(ValueError, match="async"):
+        Scenario(name="x", fl=_fl(), execution="sync", churn="markov",
+                 churn_params={"p_fail": 0.1, "p_recover": 0.5}, **_FL_KW)
+    with pytest.raises(ValueError, match="link_outages"):
+        Scenario(name="x", fl=_fl(), execution="async", churn="markov",
+                 churn_params={"p_fail": 0.1, "p_recover": 0.5,
+                               "link_outages": 1}, **_FL_KW)
+
+
+def test_async_fl_scenario_accepted():
+    sc = Scenario(name="x", fl=_fl(), execution="async",
+                  staleness_params={"kind": "hinge", "a": 0.5, "b": 1},
+                  **_FL_KW)
+    sw = sc.staleness_weights()
+    assert sw.kind == "hinge" and sw(np.array([0]))[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Responsiveness/completeness churn dimensions + scheduler feedback
+# ---------------------------------------------------------------------------
+
+
+def test_churn_trace_responsiveness_dimensions():
+    trace = churn_trace(
+        np.random.default_rng(0), 4, 12, model="markov",
+        p_fail=0.1, p_recover=0.5, p_slow=0.5, slow_factor=3.0,
+        p_partial=0.5, partial_floor=0.5,
+    )
+    assert trace.slow_at.shape == (12, 4)
+    assert set(np.unique(trace.slow_at)) <= {1.0, 3.0}
+    assert trace.work_at.shape == (12, 4)
+    assert np.all((trace.work_at >= 0.5) & (trace.work_at <= 1.0))
+    bf = trace.busy_factors()
+    np.testing.assert_allclose(bf, trace.slow_at * trace.work_at)
+
+
+def test_responsiveness_draws_do_not_shift_legacy_event_stream():
+    kw = dict(model="markov", p_fail=0.2, p_recover=0.5)
+    legacy = churn_trace(np.random.default_rng(7), 4, 12, **kw)
+    extended = churn_trace(
+        np.random.default_rng(7), 4, 12, **kw,
+        p_slow=0.3, slow_factor=2.0, p_partial=0.3,
+    )
+    assert legacy.control_events() == extended.control_events()
+    assert legacy.busy_factors() is None
+
+
+def test_observe_round_work_fraction_scales_implied_speed():
+    from repro.core.graphs import ComputeGraph
+
+    rng = np.random.default_rng(6)
+    tg = gossip_task_graph(rng, 8, degree_low=2, degree_high=3)
+    C = rng.uniform(0, 1, (3, 3))
+    np.fill_diagonal(C, 0)
+    cg = ComputeGraph(e=np.ones(3), C=C)
+    es = ElasticScheduler(tg, cg, method="greedy")
+    loads = np.zeros(3)
+    np.add.at(loads, es.current.assignment, tg.p)
+    times = loads / es.compute_graph.e
+    # Each machine reports its nominal time but only HALF the work done:
+    # the EMA must see loads * work_fraction, not the nominal load, or
+    # partial rounds poison the speed estimates upward.
+    es.observe_round(times, work_fraction=np.full(3, 0.5))
+    assert np.all(es.compute_graph.e < 1.0)
+    with pytest.raises(ValueError, match="work_fraction"):
+        es.observe_round(times, work_fraction=np.array([1.0, 1.5, 1.0]))
+    with pytest.raises(ValueError, match="work_fraction"):
+        es.observe_round(times, work_fraction=np.array([1.0]))

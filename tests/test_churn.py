@@ -451,7 +451,7 @@ def test_churn_scenario_validation():
         _churn_scenario(churn="exponential")
     with pytest.raises(ValueError, match="unknown churn policy"):
         _churn_scenario(churn_policies=("sdp_elastic", "nope"))
-    with pytest.raises(ValueError, match="sync execution"):
+    with pytest.raises(ValueError, match="requires execution='sync'"):
         _churn_scenario(execution="async")
     with pytest.raises(ValueError, match="separate dynamics axes"):
         _churn_scenario(delay_model="drift")

@@ -104,3 +104,87 @@ def test_bqp_scale_invariance(inst):
     data = build_bqp(tg, cg)
     assert data.q_scale > 0
     assert np.isfinite(data.Q_tilde).all()
+
+
+# ---------------------------------------------------------------------------
+# Barrier-free FL invariants: staleness weights and token-account flow
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def staleness_weights(draw):
+    from repro.fl.staleness import STALENESS_KINDS, StalenessWeights
+
+    kind = draw(st.sampled_from(STALENESS_KINDS))
+    a = draw(st.floats(0.0, 10.0, allow_nan=False))
+    b = draw(st.integers(0, 10)) if kind == "hinge" else 0
+    return StalenessWeights(kind=kind, a=a, b=b)
+
+
+@given(staleness_weights())
+@settings(max_examples=60, deadline=None)
+def test_staleness_fresh_snapshot_has_unit_weight(sw):
+    """s(0) = 1 for every kind/parameterization — the degenerate anchor."""
+    assert sw(np.array([0]))[0] == 1.0
+    # negative lags (clock skew artifacts) clamp to the fresh weight
+    assert sw(np.array([-3]))[0] == 1.0
+
+
+@given(staleness_weights())
+@settings(max_examples=60, deadline=None)
+def test_staleness_monotone_nonincreasing_and_bounded(sw):
+    lags = np.arange(0, 25)
+    w = sw(lags)
+    assert np.all(w <= 1.0 + 1e-12) and np.all(w > 0.0)
+    assert np.all(np.diff(w) <= 1e-12), (sw, w)
+    # the jax path computes the same weights (float32 roundoff)
+    jw = np.asarray(sw.jax_weights(lags))
+    np.testing.assert_allclose(jw, w.astype(np.float32), rtol=1e-6, atol=1e-7)
+
+
+def test_staleness_rejects_bad_params():
+    from repro.fl.staleness import StalenessWeights
+
+    with pytest.raises(ValueError, match="kind"):
+        StalenessWeights(kind="exp")
+    with pytest.raises(ValueError, match="a"):
+        StalenessWeights(kind="poly", a=-0.5)
+    with pytest.raises(ValueError, match="b"):
+        StalenessWeights(kind="hinge", b=-1)
+
+
+@given(
+    st.floats(1.0, 16.0, allow_nan=False),
+    st.floats(0.0, 8.0, allow_nan=False),
+    st.lists(st.sampled_from(["send", "replenish"]), max_size=60),
+)
+@settings(max_examples=60, deadline=None)
+def test_token_account_invariants(capacity, refill, ops):
+    """0 <= tokens <= capacity always; between any two replenishes at most
+    floor(capacity) sends succeed; every try_send is tallied."""
+    from repro.sim.flow import TokenAccount
+
+    acct = TokenAccount(capacity=capacity, refill=refill)
+    assert acct.tokens == capacity
+    sends_since_replenish = 0
+    tries = 0
+    for op in ops:
+        if op == "send":
+            tries += 1
+            if acct.try_send():
+                sends_since_replenish += 1
+            assert sends_since_replenish <= int(np.floor(capacity))
+        else:
+            acct.replenish()
+            sends_since_replenish = 0
+        assert 0.0 <= acct.tokens <= capacity + 1e-12
+    assert acct.sent + acct.skipped == tries
+
+
+def test_token_account_rejects_bad_config():
+    from repro.sim.flow import TokenAccount
+
+    with pytest.raises(ValueError, match="capacity"):
+        TokenAccount(capacity=0.5)
+    with pytest.raises(ValueError, match="refill"):
+        TokenAccount(capacity=2.0, refill=-1.0)

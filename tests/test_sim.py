@@ -165,16 +165,138 @@ def test_per_machine_straggler_hits_only_that_machine():
 
 def test_control_events_require_sync():
     tg, cg, a = _instance(0)
+    # Global kinds stay sync-only even under async...
     for kind, extra in (
         ("reschedule", {}),
         ("link_down", {"machine": 0, "peer": 1, "factor": 2.0}),
-        ("join", {"machine": 0}),
     ):
         with pytest.raises(ValueError, match="sync"):
             simulate(
                 tg, cg, a, 4, ExecutionSpec(semantics="async"),
                 control_events=(ControlEvent(round=1, kind=kind, **extra),),
             )
+    # ...and overlap admits no control plane at all, not even the
+    # machine-local kinds that async accepts.
+    with pytest.raises(ValueError, match="sync"):
+        simulate(
+            tg, cg, a, 4, ExecutionSpec(semantics="overlap"),
+            control_events=(
+                ControlEvent(round=1, kind="fail", machine=0),
+            ),
+        )
+
+
+def test_async_accepts_machine_local_control_events():
+    """fail/recover compose with async: the machine freezes at its local
+    round, rejoins via anti-entropy once the fleet frontier catches up,
+    and every loss-bearing round still completes (finite completion)."""
+    tg, cg, a = _instance(0)
+    res = simulate(
+        tg, cg, a, 6, ExecutionSpec(semantics="async"),
+        control_events=(
+            ControlEvent(round=1, kind="fail", machine=0),
+            ControlEvent(round=3, kind="recover", machine=0),
+        ),
+    )
+    assert np.all(np.isfinite(res.round_completion))
+    assert res.barrier_stalls == 0
+    assert res.machine_down is not None
+    assert res.machine_down[1, 0] and res.machine_down[2, 0]
+    assert not res.machine_down[3, 0] and not res.machine_down[0, 0]
+    # the frozen machine's rounds 1-2 never ran: no busy entry
+    assert np.isnan(res.busy[1, 0]) and np.isnan(res.busy[2, 0])
+    assert np.isfinite(res.busy[3, 0])
+    assert res.antientropy_msgs > 0
+    assert list(res.fleet_size) == [3, 2, 2, 3, 3, 3]
+
+
+def test_async_token_account_bounds_inflight_sends():
+    """A capacity-1 account skips sends once the budget drains; sync
+    rejects the combination outright."""
+    tg, cg, a = _instance(0)
+    spec = ExecutionSpec(
+        semantics="async", token_capacity=1.0, token_refill=0.0
+    )
+    res = simulate(tg, cg, a, 4, spec)
+    # after the initial token each machine can never send again
+    assert res.send_skips > 0
+    assert np.all(np.isfinite(res.round_completion))
+    with pytest.raises(ValueError, match="async"):
+        simulate(tg, cg, a, 4, ExecutionSpec(token_capacity=4.0))
+
+
+def test_event_order_insertion_permutation_bit_identical():
+    """Satellite: the queue's (t, kind, index, round) total order has no
+    insertion sequence number, so permuting the order same-time events are
+    pushed leaves SimResult bit-identical.  Exercised by permuting machine
+    start order (round-0 events all share t=0) under async WITH jitter and
+    overlap without."""
+    import heapq
+    import random as pyrandom
+
+    from repro.sim import engine as engine_mod
+
+    def run(seed, sem, shuffle_seed):
+        tg, cg, a = _instance(seed)
+        orig_heappush = heapq.heappush
+        rng = pyrandom.Random(shuffle_seed)
+        pending = []
+
+        def chaotic_push(heap, item):
+            # buffer pushes and flush in random order — heapq's pop order
+            # only depends on the keys, but this also perturbs internal
+            # tree shape, catching any hidden reliance on push order
+            pending.append((heap, item))
+            if len(pending) >= 3:
+                rng.shuffle(pending)
+                while pending:
+                    h, it = pending.pop()
+                    orig_heappush(h, it)
+
+        spec = ExecutionSpec(
+            semantics=sem,
+            jitter_sigma=0.3 if sem == "async" else 0.0,
+            seed=seed,
+        )
+        engine_mod.heapq.heappush = chaotic_push
+        try:
+            res = simulate(tg, cg, a, 5, spec)
+        finally:
+            engine_mod.heapq.heappush = orig_heappush
+            while pending:
+                h, it = pending.pop()
+                orig_heappush(h, it)
+        return res
+
+    for sem in ("async", "overlap"):
+        base = run(1, sem, 0)
+        for shuffle_seed in (7, 99):
+            other = run(1, sem, shuffle_seed)
+            for f in dataclasses.fields(base):
+                x, y = getattr(base, f.name), getattr(other, f.name)
+                if isinstance(x, np.ndarray):
+                    assert np.array_equal(x, y, equal_nan=True), (sem, f.name)
+                else:
+                    assert x == y, (sem, f.name)
+
+
+def test_async_zero_delay_ties_deliver_before_boundary():
+    """At equal timestamps arrivals settle before boundaries, so with
+    zero link delay every mix is fresh: staleness 0 and
+    mix_versions[r] == r on every edge."""
+    rng = np.random.default_rng(3)
+    tg = gossip_task_graph(rng, 8, degree_low=2, degree_high=3)
+    a = rng.integers(0, 3, size=8)
+    loads = np.zeros(3)
+    np.add.at(loads, a, tg.p)
+    # speeds == loads: every machine's round takes exactly 1.0, so all
+    # round-r computes and their zero-delay deliveries share a timestamp
+    cg = ComputeGraph(e=loads, C=np.zeros((3, 3)))
+    res = simulate(tg, cg, a, 4, ExecutionSpec(semantics="async"))
+    assert res.staleness_mean == 0.0
+    assert res.mix_versions is not None
+    for r in range(4):
+        assert np.all(res.mix_versions[r] == r)
 
 
 def test_fleet_size_constant_without_churn():
