@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke churn_smoke async_fl_smoke ci docs-check bench-scheduler bench-gossip bench-scenarios bench-async bench-churn bench-async-fl
+.PHONY: test smoke churn_smoke async_fl_smoke kernel_diff_smoke ci docs-check bench-scheduler bench-gossip bench-kernels bench-scenarios bench-async bench-churn bench-async-fl
 
 # Tier-1 verification (ROADMAP.md)
 test:
@@ -20,7 +20,10 @@ test:
 # heft fallback activates, regret vs the oracle stays finite), and the
 # async-FL smoke (the barrier-free trainer's degenerate anchor reproduces
 # the stacked losses to fp32, and a straggler replay mixes stale
-# snapshots with zero barrier stalls).
+# snapshots with zero barrier stalls), and the kernel-diff smoke (every
+# fused Pallas kernel matches its jnp oracle in interpret mode, and a
+# tiny seeded SDP solve with the fused projection on vs off follows the
+# identical iteration trajectory).
 smoke:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.small_instance_backends(quick=True); \
@@ -34,6 +37,7 @@ smoke:
 	$(PYTHON) -c "import benchmarks.async_bench as a; a.sync_equivalence_smoke()"
 	$(PYTHON) -c "import benchmarks.churn_bench as c; c.churn_smoke()"
 	$(PYTHON) -c "import benchmarks.async_fl_bench as a; a.async_fl_smoke()"
+	$(PYTHON) -c "import benchmarks.kernels_bench as k; k.kernel_diff_smoke()"
 
 # Churn smoke alone: a short injected-timeout churn trace asserting that
 # arrivals trigger elastic re-solves, a stalled SDP degrades to the heft
@@ -48,6 +52,14 @@ churn_smoke:
 async_fl_smoke:
 	$(PYTHON) -c "import benchmarks.async_fl_bench as a; a.async_fl_smoke()"
 
+# Kernel-diff smoke alone: every fused Pallas kernel (SDP subspace
+# projection, rank-k clip, top-k/int8 delta compression, one-hot
+# bottleneck evaluation) vs its jnp oracle in interpret mode, plus a
+# tiny seeded solve_sdp with kernel_backend on vs off asserting the
+# identical iteration trajectory.
+kernel_diff_smoke:
+	$(PYTHON) -c "import benchmarks.kernels_bench as k; k.kernel_diff_smoke()"
+
 # Docs health: intra-repo markdown links resolve and the documented
 # quickstart command still runs (see scripts/check_docs.py).
 docs-check:
@@ -60,6 +72,12 @@ bench-scheduler:
 
 bench-gossip:
 	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.sweep()"
+
+bench-kernels:
+	$(PYTHON) -c "import benchmarks.kernels_bench as k; \
+	k.main(quick=False, record_json=True)"
+	$(PYTHON) -c "import benchmarks.roofline as r; \
+	r.sdp_batch_profile(batch=8, record_json=True)"
 
 bench-scenarios:
 	$(PYTHON) -c "import benchmarks.scenarios_bench as s; s.main(quick=True, resume=False)"

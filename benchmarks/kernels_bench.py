@@ -31,7 +31,7 @@ def _time(fn, *args, iters=5) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main(quick: bool = True):
+def main(quick: bool = True, record_json: bool = False):
     from repro.kernels import ref as kref
 
     rng = np.random.default_rng(0)
@@ -112,6 +112,244 @@ def main(quick: bool = True):
         f"pallas={'interpret_ok' if on_cpu else 'compiled_ok'}",
     )
 
+    # ------------------------------------------------------------------
+    # Fused scheduler/FL kernels (DESIGN.md §12).  Same measurement
+    # discipline as above: time the jnp reference composition on this
+    # host, VERIFY the Pallas kernel in interpret mode on a small slab,
+    # and project v5e before/after from the traffic model.  Interpret-mode
+    # wall-clock is never reported as a speedup.
+    # ------------------------------------------------------------------
+    from repro.kernels.bottleneck import bottleneck_eval_fwd
+    from repro.kernels.compress import int8_roundtrip_fwd, topk_mask_fwd
+    from repro.kernels.sdp_proj import sdp_subspace_fwd
+
+    verified = "interpret_ok" if on_cpu else "compiled_ok"
+    rows: dict[str, dict] = {}
+
+    # (a) SDP fused subspace projection: one stream of Y yields the
+    # matvec + Rayleigh-Ritz Gram + shift norm (jnp: matvec stream + norm
+    # stream; the Gram rides on the small YV).
+    n1, kk = (1025, 16) if not quick else (513, 16)
+    Ys = t((n1, n1), jnp.float32)
+    Ys = Ys + Ys.T
+    Vs = t((n1, kk), jnp.float32)
+    us_ref = _time(jax.jit(kref.sdp_subspace_ref), Ys, Vs)
+    sm = 97                                          # ragged vs block 64
+    got = sdp_subspace_fwd(Ys[:sm, :sm], Vs[:sm], block_rows=64,
+                           interpret=on_cpu)
+    want = kref.sdp_subspace_ref(Ys[:sm, :sm], Vs[:sm])
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-3)
+    bytes_before = 2 * n1 * n1 * 4                  # matvec + norm streams
+    bytes_after = n1 * n1 * 4                       # one fused stream
+    rows["sdp_subspace"] = {
+        "n": n1, "k": kk, "cpu_ref_us": us_ref,
+        "proj_v5e_us_before": bytes_before / HBM_BW * 1e6,
+        "proj_v5e_us_after": bytes_after / HBM_BW * 1e6,
+        "traffic_ratio": bytes_before / bytes_after,
+        "pallas": verified,
+    }
+    emit("kernel_sdp_subspace_ref", us_ref,
+         f"n={n1};k={kk};"
+         f"proj_v5e_us={bytes_before / HBM_BW * 1e6:.1f};"
+         f"fused_proj_v5e_us={bytes_after / HBM_BW * 1e6:.1f};"
+         f"pallas={verified}")
+
+    # (b) fused delta compression with error feedback: jnp roundtrip +
+    # subtract moves ~5 (N, L) slabs (read/write msgs, re-read delta and
+    # msgs, write residual); the fused kernel reads once, writes both.
+    nc, lc = 64, (1 << 21) if not quick else (1 << 18)
+    delta = t((nc, lc), jnp.float32)
+    vals, _ = jax.lax.top_k(jnp.abs(delta), max(1, lc // 100))
+    thr = vals[:, -1]
+    scale = jnp.maximum(jnp.max(jnp.abs(delta), axis=1), 1e-12) / 127.0
+    us_topk = _time(jax.jit(kref.topk_mask_ref), delta, thr)
+    us_int8 = _time(jax.jit(kref.int8_roundtrip_ref), delta, scale)
+    sm_d = delta[:, : (1 << 14)]
+    got = topk_mask_fwd(sm_d, thr, block_len=1 << 12, interpret=on_cpu)
+    want = kref.topk_mask_ref(sm_d, thr)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    got = int8_roundtrip_fwd(sm_d, scale, block_len=1 << 12,
+                             interpret=on_cpu)
+    want = kref.int8_roundtrip_ref(sm_d, scale)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    cb_before = 5 * nc * lc * 4
+    cb_after = 3 * nc * lc * 4
+    rows["compress"] = {
+        "n_users": nc, "params": lc,
+        "cpu_topk_ref_us": us_topk, "cpu_int8_ref_us": us_int8,
+        "proj_v5e_us_before": cb_before / HBM_BW * 1e6,
+        "proj_v5e_us_after": cb_after / HBM_BW * 1e6,
+        "traffic_ratio": cb_before / cb_after,
+        "pallas": verified,
+    }
+    emit("kernel_compress_ref", us_topk,
+         f"N={nc};L={lc};int8_us={us_int8:.1f};"
+         f"proj_v5e_us={cb_before / HBM_BW * 1e6:.1f};"
+         f"fused_proj_v5e_us={cb_after / HBM_BW * 1e6:.1f};"
+         f"pallas={verified}")
+
+    # (c) batched bottleneck evaluation (Eq. 2) over rounding samples:
+    # the kernel keeps each (bs, T, K) assignment slab on-chip for all
+    # four reductions, so the projection is compute-dominated; the jnp
+    # reference re-reads the slab per einsum (4 passes).
+    ss_, tt, kk2 = (512, 128, 8) if not quick else (256, 64, 4)
+    ne = 3 * tt
+    oh = jax.nn.one_hot(
+        jnp.asarray(rng.integers(0, kk2, size=(ss_, tt))), kk2,
+        dtype=jnp.float32,
+    )
+    pp = jnp.abs(t((tt,), jnp.float32))
+    ee = jnp.abs(t((kk2,), jnp.float32)) + 0.1
+    cc = jnp.abs(t((kk2, kk2), jnp.float32))
+    s_oh = jax.nn.one_hot(
+        jnp.asarray(rng.integers(0, tt, size=ne)), tt, dtype=jnp.float32
+    )
+    d_oh = jax.nn.one_hot(
+        jnp.asarray(rng.integers(0, tt, size=ne)), tt, dtype=jnp.float32
+    )
+    us_bot = _time(jax.jit(kref.bottleneck_eval_ref), oh, pp, ee, cc,
+                   s_oh, d_oh)
+    got = bottleneck_eval_fwd(oh[:16], pp, ee, cc, s_oh, d_oh,
+                              block_samples=5, interpret=on_cpu)
+    want = kref.bottleneck_eval_ref(oh[:16], pp, ee, cc, s_oh, d_oh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    flops = ss_ * (4 * tt * kk2 + 4 * ne * tt * kk2 + 2 * ne * kk2 * kk2)
+    slab = ss_ * tt * kk2 * 4
+    rows["bottleneck_eval"] = {
+        "samples": ss_, "tasks": tt, "machines": kk2, "edges": ne,
+        "cpu_ref_us": us_bot,
+        "proj_v5e_us_before": 4 * slab / HBM_BW * 1e6,
+        "proj_v5e_us_after": max(slab / HBM_BW, flops / PEAK_FLOPS) * 1e6,
+        "traffic_ratio": 4.0,
+        "pallas": verified,
+    }
+    emit("kernel_bottleneck_eval_ref", us_bot,
+         f"S={ss_};T={tt};K={kk2};"
+         f"proj_v5e_us={4 * slab / HBM_BW * 1e6:.1f};"
+         f"fused_proj_v5e_us="
+         f"{max(slab / HBM_BW, flops / PEAK_FLOPS) * 1e6:.1f};"
+         f"pallas={verified}")
+
+    if record_json:
+        import json
+        import pathlib
+        import time as _t
+
+        path = pathlib.Path(__file__).resolve().parent.parent / (
+            "BENCH_scheduler_scaling.json"
+        )
+        # read-modify-write: other suites own the other keys
+        record = json.loads(path.read_text()) if path.exists() else {}
+        record["kernels"] = rows
+        record["kernels_generated_unix"] = _t.time()
+        path.write_text(json.dumps(record, indent=2) + "\n")
+    return rows
+
+
+def kernel_diff_smoke():
+    """CI gate: every fused scheduler/FL kernel matches its jnp oracle.
+
+    Interpret-mode differential check on block-ragged small slabs (the
+    full sweep lives in ``tests/test_kernel_diff.py``), plus one tiny
+    seeded ``solve_sdp`` with the fused projection on vs off asserting
+    the iteration trajectory is identical — the property that lets
+    ``kernel_backend="auto"`` switch per host without changing results.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        SDPOptions,
+        build_factored_bqp,
+        random_compute_graph,
+        random_task_graph,
+        solve_sdp,
+    )
+    from repro.kernels import ref as kref
+    from repro.kernels.bottleneck import bottleneck_eval_fwd
+    from repro.kernels.compress import int8_roundtrip_fwd, topk_mask_fwd
+    from repro.kernels.sdp_proj import rank_k_update_fwd, sdp_subspace_fwd
+
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(0)
+    interp = jax.default_backend() != "tpu"
+
+    # (a) fused subspace projection + rank-k clip, ragged blocking
+    n, k = 33, 4
+    Y = rng.standard_normal((n, n)).astype(np.float32)
+    Y = jnp.asarray(Y + Y.T)
+    V = jnp.asarray(np.linalg.qr(rng.standard_normal((n, k)))[0],
+                    jnp.float32)
+    got = sdp_subspace_fwd(Y, V, block_rows=8, interpret=interp)
+    want = kref.sdp_subspace_ref(Y, V)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(rank_k_update_fwd(Y, V, V, block_rows=8,
+                                     interpret=interp)),
+        np.asarray(kref.rank_k_update_ref(Y, V, V)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+    # (b) fused compression with error feedback, ragged tail
+    X = jnp.asarray(rng.standard_normal((8, 100)), jnp.float32)
+    vals, _ = jax.lax.top_k(jnp.abs(X), 10)
+    m, r = topk_mask_fwd(X, vals[:, -1], block_len=64, interpret=interp)
+    rm, rr = kref.topk_mask_ref(X, vals[:, -1])
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(rm))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(rr))
+    scale = jnp.maximum(jnp.max(jnp.abs(X), axis=1), 1e-12) / 127.0
+    m, r = int8_roundtrip_fwd(X, scale, block_len=64, interpret=interp)
+    rm, rr = kref.int8_roundtrip_ref(X, scale)
+    np.testing.assert_array_equal(np.asarray(m), np.asarray(rm))
+    np.testing.assert_allclose(np.asarray(r), np.asarray(rr), atol=2e-7)
+
+    # (c) one-hot bottleneck evaluation, ragged sample padding + E=0
+    for n_e in (14, 0):
+        a = rng.integers(0, 4, size=(8, 7))
+        oh = jax.nn.one_hot(jnp.asarray(a), 4, dtype=jnp.float32)
+        pp = jnp.asarray(rng.uniform(0.1, 5.0, 7), jnp.float32)
+        ee = jnp.asarray(rng.uniform(0.5, 4.0, 4), jnp.float32)
+        cc = jnp.asarray(rng.uniform(0.0, 3.0, (4, 4)), jnp.float32)
+        s_oh = jax.nn.one_hot(jnp.asarray(rng.integers(0, 7, n_e)), 7,
+                              dtype=jnp.float32)
+        d_oh = jax.nn.one_hot(jnp.asarray(rng.integers(0, 7, n_e)), 7,
+                              dtype=jnp.float32)
+        args = (oh, pp, ee, cc, s_oh, d_oh)
+        np.testing.assert_allclose(
+            np.asarray(bottleneck_eval_fwd(*args, block_samples=3,
+                                           interpret=interp)),
+            np.asarray(kref.bottleneck_eval_ref(*args)),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    # (d) tiny seeded e2e: fused projection on == off
+    r5 = np.random.default_rng(5)
+    tg = random_task_graph(r5, 6, degree_low=1, degree_high=3)
+    cg = random_compute_graph(r5, 3)
+    bqp = build_factored_bqp(tg, cg)
+    sols = {
+        kb: solve_sdp(bqp, SDPOptions(max_iters=2000, check_every=50,
+                                      tol=1e-4, backend="jax",
+                                      kernel_backend=kb))
+        for kb in ("jnp", "pallas")
+    }
+    assert sols["jnp"].iterations == sols["pallas"].iterations
+    assert (sols["jnp"].stats["eig_partial"]
+            == sols["pallas"].stats["eig_partial"])
+    np.testing.assert_allclose(sols["pallas"].Y, sols["jnp"].Y, atol=1e-3)
+
+    emit(
+        "kernel_diff_smoke",
+        (time.perf_counter() - t0) * 1e6,
+        f"kernels=5;e2e_iters={sols['pallas'].iterations};"
+        f"mode={'interpret' if interp else 'compiled'};ok=1",
+    )
+
 
 if __name__ == "__main__":
-    main(quick=False)
+    main(quick=False, record_json=True)

@@ -23,7 +23,8 @@ ARTIFACT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
 
 
 def sdp_batch_profile(num_tasks: int = 128, num_machines: int = 8,
-                      batch: int = 8, reps: int = 10) -> dict | None:
+                      batch: int = 8, reps: int = 10,
+                      record_json: bool = False) -> dict | None:
     """Roofline probe of the batched SDP hot loop (Pallas go/no-go).
 
     The batched DR iteration at n = 1024 spends its time in two device
@@ -52,7 +53,9 @@ def sdp_batch_profile(num_tasks: int = 128, num_machines: int = 8,
     from repro.core.sdp import _cone_fns
 
     n1 = num_tasks * num_machines + 1
-    k, eig_iters = 16, 8
+    # k = 16 at production sizes; clamp so tiny probe instances (tests)
+    # keep a well-posed subspace (qr of an (n1, k>n1) basis changes shape)
+    k, eig_iters = min(16, max(1, (n1 - 1) // 2)), 8
     rng = np.random.default_rng(0)
     A = rng.standard_normal((batch, n1, n1)).astype(np.float32)
     Y = jnp.asarray((A + A.transpose(0, 2, 1)) / np.sqrt(n1))
@@ -61,6 +64,8 @@ def sdp_batch_profile(num_tasks: int = 128, num_machines: int = 8,
     matvec = jax.jit(lambda Y, V: jnp.einsum("bij,bjk->bik", Y, V))
     _, cone_partial = _cone_fns(k, eig_iters)
     cone_b = jax.jit(jax.vmap(cone_partial, in_axes=(0, 0, None)))
+    _, cone_fused = _cone_fns(k, eig_iters, "pallas")
+    cone_fused_b = jax.jit(jax.vmap(cone_fused, in_axes=(0, 0, None)))
     eig_tol = jnp.float32(1e-6)
 
     def _time(fn, n, *args):
@@ -73,10 +78,24 @@ def sdp_batch_profile(num_tasks: int = 128, num_machines: int = 8,
 
     t_mv = _time(matvec, reps, Y, V)
     t_cone = _time(cone_b, max(3, reps // 3), Y, V, eig_tol)
+    t_cone_fused = _time(cone_fused_b, max(2, reps // 5), Y, V, eig_tol)
+    fused_mode = "compiled" if jax.default_backend() == "tpu" else "interpret"
 
     flops_mv = 2.0 * batch * n1 * n1 * k
     bytes_mv = 4.0 * batch * (n1 * n1 + 2 * n1 * k)
     intensity = flops_mv / bytes_mv               # ≈ k/2 flops/byte
+
+    # Before/after n1²-slab traffic of ONE cone_partial call (the fused
+    # kernels' whole point — DESIGN.md §12): jnp streams Y for the norm,
+    # each of the eig_iters+1 matvecs, and the clip read, plus the rank-k
+    # outer-product temp (write + read) and the Yp write; the fused path
+    # folds norm and Gram into the matvec streams and never materializes
+    # the outer product.
+    slabs_jnp = eig_iters + 6
+    slabs_fused = eig_iters + 3
+    cone_flops = (eig_iters + 2) * 2.0 * n1 * n1 * k   # matvecs + clip
+    cone_int_jnp = cone_flops / (slabs_jnp * 4.0 * n1 * n1)
+    cone_int_fused = cone_flops / (slabs_fused * 4.0 * n1 * n1)
 
     # machine balance: a square GEMM for peak flops, a streaming add for
     # peak bandwidth (read + write)
@@ -101,8 +120,15 @@ def sdp_batch_profile(num_tasks: int = 128, num_machines: int = 8,
         "eig_iters": eig_iters,
         "matvec_seconds": t_mv,
         "cone_partial_seconds": t_cone,
+        "cone_partial_fused_seconds": t_cone_fused,
+        "fused_mode": fused_mode,
         "matvec_gflops": achieved / 1e9,
         "intensity_flops_per_byte": intensity,
+        "y_slab_streams_jnp": slabs_jnp,
+        "y_slab_streams_fused": slabs_fused,
+        "fused_traffic_ratio": slabs_jnp / slabs_fused,
+        "cone_intensity_jnp": cone_int_jnp,
+        "cone_intensity_fused": cone_int_fused,
         "peak_gemm_gflops": peak_flops / 1e9,
         "peak_stream_gbs": peak_bw / 1e9,
         "machine_balance_flops_per_byte": balance,
@@ -116,13 +142,38 @@ def sdp_batch_profile(num_tasks: int = 128, num_machines: int = 8,
         f"intensity {intensity:.1f} vs balance {balance:.1f} flops/byte "
         f"-> {verdict} (Pallas item-5: {row['pallas_item5']})"
     )
+    print(
+        f"# fused cone ({fused_mode}): {t_cone_fused*1e3:.2f} ms; "
+        f"Y-slab streams {slabs_jnp} -> {slabs_fused} "
+        f"({row['fused_traffic_ratio']:.2f}x less traffic), "
+        f"cone intensity {cone_int_jnp:.1f} -> {cone_int_fused:.1f} "
+        f"flops/byte"
+        + (
+            " (interpret-mode wall-clock is NOT a speedup measurement;"
+            " the traffic model is the projection)"
+            if fused_mode == "interpret" else ""
+        )
+    )
     emit(
         "sdp_batch_roofline",
         t_mv * 1e6,
         f"b{batch}_n{n1};gflops={achieved/1e9:.1f};"
         f"intensity={intensity:.1f};balance={balance:.1f};"
-        f"verdict={verdict};pallas_item5={row['pallas_item5']}",
+        f"verdict={verdict};pallas_item5={row['pallas_item5']};"
+        f"fused_traffic_ratio={row['fused_traffic_ratio']:.2f};"
+        f"fused_mode={fused_mode}",
     )
+    if record_json:
+        import pathlib
+
+        path = pathlib.Path(__file__).resolve().parent.parent / (
+            "BENCH_scheduler_scaling.json"
+        )
+        # read-modify-write: other suites own the other keys
+        record = json.loads(path.read_text()) if path.exists() else {}
+        record["sdp_roofline"] = row
+        record["sdp_roofline_generated_unix"] = time.time()
+        path.write_text(json.dumps(record, indent=2) + "\n")
     return row
 
 
@@ -159,7 +210,7 @@ def table(records: list[dict], mesh_filter: str | None = "pod") -> list[dict]:
 
 
 def main(quick: bool = True):
-    sdp_batch_profile(batch=2 if quick else 8)
+    sdp_batch_profile(batch=2 if quick else 8, record_json=True)
     recs = load_records()
     rows = table(recs, mesh_filter="pod")
     if not rows:

@@ -107,6 +107,7 @@ def randomized_rounding(
     strict: bool = False,
     backend: str = "numpy",
     Y_device: object | None = None,
+    kernel_backend: str = "auto",
 ) -> RoundingResult:
     rng = rng or np.random.default_rng(0)
 
@@ -121,6 +122,7 @@ def randomized_rounding(
             rng,
             strict,
             Y_device=Y_device,
+            kernel_backend=kernel_backend,
         )
     else:
         signs, z = _sample_signs(Y, num_samples, rng)
@@ -315,9 +317,24 @@ def _cache_insert(cache: collections.OrderedDict, key, val, max_size: int):
     cache[key] = val
 
 
+def _rounding_kernel_backend(kernel_backend: str) -> str:
+    """"auto" = the Pallas batched bottleneck evaluator on TPU, the vmapped
+    gather evaluator elsewhere (interpret mode is exact but slow on CPU)."""
+    if kernel_backend not in ("auto", "jnp", "pallas"):
+        raise ValueError(
+            f"unknown kernel backend {kernel_backend!r}; "
+            "choose from ('auto', 'jnp', 'pallas')"
+        )
+    if kernel_backend == "auto":
+        import jax
+
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return kernel_backend
+
+
 def _fused_rounding_fn(
     task_graph: TaskGraph, compute_graph: ComputeGraph, n_tasks: int,
-    n_machines: int, strict: bool,
+    n_machines: int, strict: bool, kernel_backend: str = "jnp",
 ):
     import jax
     import jax.numpy as jnp
@@ -333,6 +350,7 @@ def _fused_rounding_fn(
         n_tasks,
         n_machines,
         strict,
+        kernel_backend,
     )
     fn = _cache_lookup(_JAX_CACHE, key)
     if fn is not None:
@@ -355,6 +373,22 @@ def _fused_rounding_fn(
         comm = jnp.zeros_like(t_comp).at[src].max(delays)
         return jnp.max(t_comp + comm)
 
+    if kernel_backend == "pallas":
+        from repro.kernels.bottleneck import bottleneck_eval_fwd
+
+        interp = jax.default_backend() != "tpu"
+        src_oh = jax.nn.one_hot(src, n_tasks, dtype=jnp.float32)   # (|E|, T)
+        dst_oh = jax.nn.one_hot(dst, n_tasks, dtype=jnp.float32)
+
+        def eval_times(assignments):
+            oh = jax.nn.one_hot(assignments, n_machines, dtype=jnp.float32)
+            return bottleneck_eval_fwd(
+                oh, p, e, C, src_oh, dst_oh, interpret=interp
+            )
+    else:
+        def eval_times(assignments):
+            return jax.vmap(bottleneck_one)(assignments)
+
     @jax.jit
     def rounding(root, g):
         B = g.shape[0]
@@ -368,7 +402,7 @@ def _fused_rounding_fn(
         strict_mask = any_sel.all(axis=1)               # (B,)
         choice = jnp.where(any_sel[:, None, :], masked, zx)
         assignments = jnp.argmax(choice, axis=1)        # (B, T)
-        times = jax.vmap(bottleneck_one)(assignments)   # (B,)
+        times = eval_times(assignments)                 # (B,)
         if strict:
             times = jnp.where(
                 strict_mask.any(),
@@ -383,7 +417,8 @@ def _fused_rounding_fn(
 
 
 def _fused_rounding_batch_fn(
-    B: int, n_tasks: int, n_machines: int, n_edges: int, strict: bool
+    B: int, n_tasks: int, n_machines: int, n_edges: int, strict: bool,
+    kernel_backend: str = "jnp",
 ):
     """Batched twin of ``_fused_rounding_fn``: B instances, one dispatch.
 
@@ -396,10 +431,15 @@ def _fused_rounding_batch_fn(
     import jax
     import jax.numpy as jnp
 
-    key = ("batch", B, n_tasks, n_machines, n_edges, strict)
+    key = ("batch", B, n_tasks, n_machines, n_edges, strict, kernel_backend)
     fn = _cache_lookup(_JAX_CACHE, key)
     if fn is not None:
         return fn
+
+    if kernel_backend == "pallas":
+        from repro.kernels.bottleneck import bottleneck_eval_fwd
+
+        interp = jax.default_backend() != "tpu"
 
     def round_one(p, e, C, src, dst, root, g):
         def bottleneck_one(a):
@@ -409,6 +449,21 @@ def _fused_rounding_batch_fn(
             delays = C[a[src], a[dst]]
             comm = jnp.zeros_like(t_comp).at[src].max(delays)
             return jnp.max(t_comp + comm)
+
+        if kernel_backend == "pallas":
+            src_oh = jax.nn.one_hot(src, n_tasks, dtype=jnp.float32)
+            dst_oh = jax.nn.one_hot(dst, n_tasks, dtype=jnp.float32)
+
+            def eval_times(assignments):
+                oh = jax.nn.one_hot(
+                    assignments, n_machines, dtype=jnp.float32
+                )
+                return bottleneck_eval_fwd(
+                    oh, p, e, C, src_oh, dst_oh, interpret=interp
+                )
+        else:
+            def eval_times(assignments):
+                return jax.vmap(bottleneck_one)(assignments)
 
         S = g.shape[0]
         z = g @ root.T                                  # (S, n+1)
@@ -421,7 +476,7 @@ def _fused_rounding_batch_fn(
         strict_mask = any_sel.all(axis=1)               # (S,)
         choice = jnp.where(any_sel[:, None, :], masked, zx)
         assignments = jnp.argmax(choice, axis=1)        # (S, T)
-        times = jax.vmap(bottleneck_one)(assignments)   # (S,)
+        times = eval_times(assignments)                 # (S,)
         if strict:
             times = jnp.where(
                 strict_mask.any(),
@@ -467,9 +522,11 @@ def _rounding_fused_jax(
     rng: np.random.Generator,
     strict: bool,
     Y_device=None,
+    kernel_backend: str = "auto",
 ) -> tuple[np.ndarray, float, int]:
     fn = _fused_rounding_fn(
-        task_graph, compute_graph, n_tasks, n_machines, strict
+        task_graph, compute_graph, n_tasks, n_machines, strict,
+        _rounding_kernel_backend(kernel_backend),
     )
     if Y_device is not None:
         root = _device_covariance_root(Y_device)
@@ -515,6 +572,7 @@ def randomized_rounding_batch(
     strict: bool = False,
     backend: str = "jax",
     Y_devices=None,
+    kernel_backend: str = "auto",
 ) -> list[RoundingResult]:
     """Round B same-shape SDP solutions in ONE fused jitted dispatch.
 
@@ -601,7 +659,9 @@ def randomized_rounding_batch(
         ]
     )
 
-    fn = _fused_rounding_batch_fn(B, T, K, n_e, strict)
+    fn = _fused_rounding_batch_fn(
+        B, T, K, n_e, strict, _rounding_kernel_backend(kernel_backend)
+    )
     assignments, times, feas = fn(p_s, e_s, C_s, src_s, dst_s, roots, g)
 
     out = []

@@ -104,6 +104,14 @@ class SDPOptions:
     # first iteration); insurance against negative directions emerging
     # outside the tracked subspace.
     eig_refresh: int = 100
+    # -- jax backend: Pallas fused-projection kernels (DESIGN.md §12) -------
+    # "pallas" streams the dense iterate Y once per subspace sweep through
+    # ``kernels.sdp_proj`` (fused matvec + Rayleigh-Ritz Gram + ‖Y‖², and a
+    # fused rank-k clip update) — the memory-bound win recorded by
+    # ``roofline.py::sdp_batch_profile``.  "jnp" keeps the plain-XLA cone
+    # projection; "auto" picks pallas on TPU and jnp elsewhere (on CPU the
+    # kernels run in interpret mode — exact but slow, tests only).
+    kernel_backend: str = "auto"
 
 
 @dataclasses.dataclass
@@ -587,7 +595,7 @@ def _make_device_ops(kind: str, operands, n1: int, n_tasks: int, n_machines: int
 
 
 @functools.lru_cache(maxsize=16)
-def _cone_fns(k: int, eig_iters: int):
+def _cone_fns(k: int, eig_iters: int, kernel_backend: str = "jnp"):
     """PSD-cone projection pair shared by the single and batched loops.
 
     ``cone_full`` is the O(n³) reference ``eigh`` and reseeds the tracked
@@ -595,6 +603,14 @@ def _cone_fns(k: int, eig_iters: int):
     warm basis with ``eig_iters`` shifted subspace-iteration sweeps and
     clips only the negative Ritz pairs, reporting ``ok=False`` when the
     tracked subspace saturates or its Ritz residual exceeds eig_tol·σ.
+
+    ``kernel_backend="pallas"`` runs the same sweep/Rayleigh-Ritz/clip
+    sequence through the fused projection kernels (``kernels.sdp_proj``,
+    DESIGN.md §12): each sweep's matvec also yields the small Gram and the
+    shift norm from ONE stream of Y, and the rank-k clip never materializes
+    its outer product — eig_iters+2 streams of Y per call instead of
+    eig_iters+3 (plus the update temp).  The small solves (qr/eigh) are
+    identical, so iterates agree with the jnp path to f32 roundoff.
     """
     import jax.numpy as jnp
     from jax import lax
@@ -603,6 +619,19 @@ def _cone_fns(k: int, eig_iters: int):
         ew, EV = jnp.linalg.eigh(Y)
         Yp = (EV * jnp.maximum(ew, 0.0)) @ EV.T
         return Yp, EV[:, :k]          # basis <- k most-negative eigvecs
+
+    def _epilogue(Y, V, YV, G, sigma, eig_tol, clip_update):
+        theta, U = jnp.linalg.eigh(G)            # Ritz values, ascending
+        W = V @ U
+        neg = theta < 0.0
+        # Ritz residual of the negative pairs: ‖Y w - θ w‖ certifies the
+        # clip; saturation (num_neg == k) means negatives may extend
+        # beyond the tracked subspace — both force the full-eigh path.
+        R = YV @ U - W * theta
+        res = jnp.sqrt(jnp.sum(jnp.where(neg, jnp.sum(R * R, axis=0), 0.0)))
+        ok = (jnp.sum(neg) < k) & (res <= eig_tol * jnp.maximum(sigma, 1.0))
+        Yp = clip_update(Y, W, jnp.where(neg, theta, 0.0))
+        return ok, Yp, W
 
     def cone_partial(Y, V, eig_tol):
         # Shifted subspace iteration on (σI - Y): its top-k invariant
@@ -617,18 +646,33 @@ def _cone_fns(k: int, eig_iters: int):
 
         V = lax.fori_loop(0, eig_iters, sweep, V)
         YV = Y @ V
-        theta, U = jnp.linalg.eigh(V.T @ YV)     # Ritz values, ascending
-        W = V @ U
-        neg = theta < 0.0
-        # Ritz residual of the negative pairs: ‖Y w - θ w‖ certifies the
-        # clip; saturation (num_neg == k) means negatives may extend
-        # beyond the tracked subspace — both force the full-eigh path.
-        R = YV @ U - W * theta
-        res = jnp.sqrt(jnp.sum(jnp.where(neg, jnp.sum(R * R, axis=0), 0.0)))
-        ok = (jnp.sum(neg) < k) & (res <= eig_tol * jnp.maximum(sigma, 1.0))
-        Yp = Y - (W * jnp.where(neg, theta, 0.0)) @ W.T
-        return ok, Yp, W
+        return _epilogue(
+            Y, V, YV, V.T @ YV, sigma, eig_tol,
+            lambda Y, W, th: Y - (W * th) @ W.T,
+        )
 
+    def cone_partial_pallas(Y, V, eig_tol):
+        import jax
+
+        from repro.kernels.sdp_proj import rank_k_update_fwd, sdp_subspace_fwd
+
+        interp = jax.default_backend() != "tpu"
+        YV, G, ss = sdp_subspace_fwd(Y, V, interpret=interp)
+        sigma = jnp.sqrt(ss)
+
+        def sweep(_, carry):
+            Vc, YVc, _ = carry
+            Q, _ = jnp.linalg.qr(sigma * Vc - YVc)
+            return (Q,) + sdp_subspace_fwd(Y, Q, interpret=interp)[:2]
+
+        V, YV, G = lax.fori_loop(0, eig_iters, sweep, (V, YV, G))
+        return _epilogue(
+            Y, V, YV, G, sigma, eig_tol,
+            lambda Y, W, th: rank_k_update_fwd(Y, W * th, W, interpret=interp),
+        )
+
+    if kernel_backend == "pallas":
+        return cone_full, cone_partial_pallas
     return cone_full, cone_partial
 
 
@@ -642,6 +686,7 @@ def _dr_jax_fn(
     kind: str,
     n_tasks: int,
     n_machines: int,
+    kernel_backend: str = "jnp",
 ):
     """Build + jit the whole single-instance DR loop for one problem shape.
 
@@ -655,7 +700,7 @@ def _dr_jax_fn(
     from jax.scipy.linalg import solve_triangular
 
     idx_t = n1 * n1
-    cone_full, cone_partial = _cone_fns(k, eig_iters)
+    cone_full, cone_partial = _cone_fns(k, eig_iters, kernel_backend)
 
     def run(w0, V0, operands, CL, rho, lam, tol, eig_tol, max_iters):
         dim = w0.shape[0]
@@ -733,6 +778,7 @@ def _dr_jax_batch_fn(
     kind: str,
     n_tasks: int,
     n_machines: int,
+    kernel_backend: str = "jnp",
 ):
     """Build + jit the BATCHED DR loop: B same-shape instances, one dispatch.
 
@@ -762,7 +808,7 @@ def _dr_jax_batch_fn(
     from jax.scipy.linalg import solve_triangular
 
     idx_t = n1 * n1
-    cone_full, cone_partial = _cone_fns(k, eig_iters)
+    cone_full, cone_partial = _cone_fns(k, eig_iters, kernel_backend)
 
     def run(w0, V0, operands, CL, rho, lam, tol, eig_tol, max_iters):
         B, dim = w0.shape
@@ -966,7 +1012,8 @@ def _solve_jax(bqp, opts: SDPOptions, proj: _AffineProjector, warm_start: dict |
         V_np = np.eye(n1, k)   # placeholder; iteration 0 full-eigh reseeds it
 
     run = _dr_jax_fn(
-        n1, opts.check_every, k, opts.eig_iters, opts.eig_refresh, kind, n_t, n_k
+        n1, opts.check_every, k, opts.eig_iters, opts.eig_refresh, kind, n_t,
+        n_k, _resolve_kernel_backend(opts)
     )
     w, V, v_cone, it, residual, n_full, n_partial = run(
         jnp.asarray(w_np, dtype),
@@ -1046,7 +1093,8 @@ def _solve_jax_batch(bqps, opts: SDPOptions, projs, warm_starts):
         V_stack.append(np.asarray(V_np, np.float32))
 
     run = _dr_jax_batch_fn(
-        n1, opts.check_every, k, opts.eig_iters, opts.eig_refresh, kind, n_t, n_k
+        n1, opts.check_every, k, opts.eig_iters, opts.eig_refresh, kind, n_t,
+        n_k, _resolve_kernel_backend(opts)
     )
     _BATCH_RUN_CALLS += 1
     w, V, v_cone, it, res, done, it_conv, n_full, n_partial = run(
@@ -1113,6 +1161,27 @@ def _resolve_backend(opts: SDPOptions, n1: int) -> str:
             "choose from ('auto', 'numpy', 'jax')"
         )
     return opts.backend
+
+
+def _resolve_kernel_backend(opts: SDPOptions) -> str:
+    """Pick the cone-projection kernel lane for the jax backend.
+
+    "auto" = the fused Pallas kernels on TPU, plain XLA elsewhere (in
+    interpret mode the kernels are exact but orders of magnitude slower, so
+    CPU only runs them when asked explicitly — tests and the differential
+    harness do).
+    """
+    kb = opts.kernel_backend
+    if kb not in ("auto", "jnp", "pallas"):
+        raise ValueError(
+            f"unknown kernel backend {kb!r}; "
+            "choose from ('auto', 'jnp', 'pallas')"
+        )
+    if kb == "auto":
+        import jax
+
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return kb
 
 
 def solve_sdp(

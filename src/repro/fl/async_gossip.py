@@ -100,6 +100,7 @@ class AsyncGossipTrainer(GossipTrainer):
         dst = jnp.asarray(self._dst)
         w_edge = jnp.asarray(self._w_edge)
         local_scan = self._make_local_scan()
+        compress_stage = None if comp is None else self._make_compress_stage()
         s_of = self.staleness.jax_weights
 
         def sel(mask, new, old):
@@ -123,9 +124,7 @@ class AsyncGossipTrainer(GossipTrainer):
             if comp is None:
                 msgs = params
             else:
-                delta = jax.tree.map(jnp.add, params, residual)
-                msgs = jax.vmap(comp.roundtrip)(delta)
-                residual = jax.tree.map(jnp.subtract, delta, msgs)
+                msgs, residual = compress_stage(params, residual)
                 residual = sel(active, residual, frozen[5])
             params = sel(active, params, frozen[0])
             opt_state = sel(active, opt_state, frozen[1])

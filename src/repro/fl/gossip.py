@@ -48,6 +48,7 @@ from repro.train.optim import SGDM
 
 BACKENDS = ("auto", "reference", "stacked")
 MIX_BACKENDS = ("auto", "segment_sum", "pallas")
+COMPRESS_BACKENDS = ("auto", "jnp", "pallas")
 
 
 @dataclasses.dataclass
@@ -61,6 +62,12 @@ class GossipConfig:
     backend: str = "auto"         # "reference" | "stacked" | "auto" (=stacked)
     mix_backend: str = "auto"     # stacked exchange: "segment_sum" | "pallas"
     mix_block_len: int = 65536    # L-block of the all-receivers Pallas kernel
+    # Stacked delta-compression stage: "pallas" fuses the top-k/int8
+    # quantization with the error-feedback residual into one stream of the
+    # stacked delta (kernels/compress.py, DESIGN.md §12); "jnp" keeps the
+    # vmapped roundtrip + subtract.  "auto" = jnp on CPU, pallas on
+    # accelerators (mirrors mix_backend).
+    compress_backend: str = "auto"
 
 
 def mixing_arrays(
@@ -130,6 +137,9 @@ class GossipTrainer:
         self.shards = shards
         self.backend = self._resolve_backend(backend or self.cfg.backend)
         self.mix_backend = self._resolve_mix_backend(self.cfg.mix_backend)
+        self.compress_backend = self._resolve_compress_backend(
+            self.cfg.compress_backend
+        )
 
         # Stacked data: (N_T, chunk, …) copies; batches are index-gathers so
         # the caller's shard buffers are never reordered in place.  BOTH
@@ -223,6 +233,83 @@ class GossipTrainer:
             # interpret mode, so the segment_sum path is the fast default.
             return "segment_sum" if jax.default_backend() == "cpu" else "pallas"
         return mix_backend
+
+    @staticmethod
+    def _resolve_compress_backend(compress_backend: str) -> str:
+        if compress_backend not in COMPRESS_BACKENDS:
+            raise ValueError(
+                f"unknown compress backend {compress_backend!r}; "
+                f"choose from {COMPRESS_BACKENDS}"
+            )
+        if compress_backend == "auto":
+            # Same trade-off as the mix: interpret mode on CPU is exact but
+            # slow, so the fused kernel is opt-in off-accelerator.
+            return "jnp" if jax.default_backend() == "cpu" else "pallas"
+        return compress_backend
+
+    def _make_compress_stage(self):
+        """The delta-compression stage of one stacked round (both engines).
+
+        Returns ``compress(params, residual) -> (msgs, residual)`` with
+        error feedback: ``delta = params + residual``, ``msgs`` is what the
+        wire carries, and the new residual is ``delta - msgs``.  On the
+        pallas lane the sparsify/quantize decision and the residual come
+        out of ONE stream of the stacked delta per leaf
+        (``kernels/compress.py``); the per-row statistics (top-k threshold,
+        int8 scale) are tiny jnp reductions.  Compressors without a fused
+        kernel fall back to the jnp path.
+        """
+        from repro.train.compression import Int8, TopK
+
+        comp = self.cfg.compressor
+        n = self.n
+        use_kernel = self.compress_backend == "pallas" and isinstance(
+            comp, (TopK, Int8)
+        )
+
+        if not use_kernel:
+            def compress(params, residual):
+                delta = jax.tree.map(jnp.add, params, residual)
+                msgs = jax.vmap(comp.roundtrip)(delta)
+                return msgs, jax.tree.map(jnp.subtract, delta, msgs)
+
+            return compress
+
+        from repro.kernels.compress import int8_roundtrip_fwd, topk_mask_fwd
+
+        interpret = jax.default_backend() == "cpu"
+        is_topk = isinstance(comp, TopK)
+
+        def one_leaf(x):
+            flat = x.reshape(n, -1)
+            L = flat.shape[1]
+            # Same on-chip budget as the mix kernel: (n, bl) in + two
+            # (n, bl) out blocks stay a few MB regardless of user count.
+            bl = min(65536, max(1024, (1 << 20) // n), L)
+            if is_topk:
+                kk = max(1, int(comp.fraction * L))
+                vals, _ = jax.lax.top_k(jnp.abs(flat), kk)
+                msg, resid = topk_mask_fwd(
+                    flat, vals[:, -1], block_len=bl, interpret=interpret
+                )
+            else:
+                scale = jnp.maximum(
+                    jnp.max(jnp.abs(flat), axis=1), 1e-12
+                ) / 127.0
+                msg, resid = int8_roundtrip_fwd(
+                    flat, scale, block_len=bl, interpret=interpret
+                )
+            return msg.reshape(x.shape), resid.reshape(x.shape)
+
+        def compress(params, residual):
+            delta = jax.tree.map(jnp.add, params, residual)
+            leaves, treedef = jax.tree.flatten(delta)
+            outs = [one_leaf(l) for l in leaves]
+            msgs = treedef.unflatten([o[0] for o in outs])
+            resid = treedef.unflatten([o[1] for o in outs])
+            return msgs, resid
+
+        return compress
 
     # -- replica access (both backends) ------------------------------------
     def user_params(self, i: int) -> Any:
@@ -385,6 +472,7 @@ class GossipTrainer:
         mix_backend = self.mix_backend
         interpret = jax.default_backend() == "cpu"
         local_scan = self._make_local_scan()
+        compress_stage = None if comp is None else self._make_compress_stage()
 
         def mix_segment(msgs):
             def seg(m):
@@ -429,9 +517,7 @@ class GossipTrainer:
             if comp is None:
                 msgs = params
             else:
-                delta = jax.tree.map(jnp.add, params, residual)
-                msgs = jax.vmap(comp.roundtrip)(delta)
-                residual = jax.tree.map(jnp.subtract, delta, msgs)
+                msgs, residual = compress_stage(params, residual)
             incoming = mix(msgs)
             params = jax.tree.map(
                 lambda p, m: self_w.reshape((n,) + (1,) * (p.ndim - 1)) * p + m,

@@ -1,11 +1,27 @@
 """Pallas TPU kernels for the compute hot-spots (validated in interpret
-mode on CPU; see EXAMPLE.md for the kernel/ops/ref structure)."""
+mode on CPU; see EXAMPLE.md and DESIGN.md §12 for the kernel/ops/ref
+structure)."""
 
 from repro.kernels.ops import (
+    bottleneck_eval,
+    compress_int8,
+    compress_topk,
     decode_attention,
     flash_attention,
     gossip_mix,
+    rank_k_update,
     rmsnorm,
+    sdp_subspace,
 )
 
-__all__ = ["decode_attention", "flash_attention", "gossip_mix", "rmsnorm"]
+__all__ = [
+    "bottleneck_eval",
+    "compress_int8",
+    "compress_topk",
+    "decode_attention",
+    "flash_attention",
+    "gossip_mix",
+    "rank_k_update",
+    "rmsnorm",
+    "sdp_subspace",
+]

@@ -1,0 +1,93 @@
+"""Pallas batched bottleneck evaluation over rounding samples.
+
+The fused rounding backend (``repro.core.rounding``, DESIGN.md §6) scores
+every repaired Gaussian sample with Eq. 2 — per sample: machine loads,
+per-task compute times, per-dependency communication delays, max.  The jnp
+path vmaps a gather-based evaluator over samples; this kernel evaluates a
+whole block of samples per grid step as dense one-hot contractions, keeping
+the (bs, T, K) assignment slab in on-chip memory for all four reductions.
+
+All gathers become products with exact one-hot f32 factors, so every
+per-sample quantity except the machine-load sum is reproduced bit-for-bit
+(the load reduction may differ in summation order by f32 ulps).
+
+Inputs:
+  - ``onehot``  (S, T, K) f32 one-hot of the sampled assignments;
+  - ``p`` (T,) task workloads, ``e`` (K,) machine speeds, ``C`` (K, K)
+    inter-machine delays;
+  - ``src_onehot`` / ``dst_onehot`` (E, T) f32 one-hot of each dependency
+    edge's endpoint tasks.  All-zero rows are inert (used to pad E=0 up to
+    one row), matching the jnp path where edge-free tasks have zero
+    communication time.
+
+Output: (S,) f32 bottleneck times (Eq. 2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bottleneck_kernel(oh_ref, p_ref, e_ref, c_ref, src_ref, dst_ref, t_ref):
+    A = oh_ref[...].astype(jnp.float32)          # (bs, T, K)
+    p = p_ref[...].astype(jnp.float32)           # (T,)
+    e = e_ref[...].astype(jnp.float32)           # (K,)
+    C = c_ref[...].astype(jnp.float32)           # (K, K)
+    S = src_ref[...].astype(jnp.float32)         # (E, T)
+    D = dst_ref[...].astype(jnp.float32)         # (E, T)
+    loads = jnp.einsum("stk,t->sk", A, p)                     # machine loads
+    per_machine = loads / e                                   # (bs, K)
+    t_comp = jnp.einsum("stk,sk->st", A, per_machine)         # (loads/e)[a]
+    m_src = jnp.einsum("et,stk->sek", S, A)                   # one_hot(a[src])
+    m_dst = jnp.einsum("et,stk->sek", D, A)
+    delays = jnp.einsum("sek,kl,sel->se", m_src, C, m_dst)    # C[a[src],a[dst]]
+    comm = jnp.max(delays[:, :, None] * S[None, :, :], axis=1)  # .at[src].max
+    t_ref[...] = jnp.max(t_comp + comm, axis=1).astype(t_ref.dtype)
+
+
+def bottleneck_eval_fwd(
+    onehot: jnp.ndarray,       # (S, T, K) one-hot assignments
+    p: jnp.ndarray,            # (T,)
+    e: jnp.ndarray,            # (K,)
+    C: jnp.ndarray,            # (K, K)
+    src_onehot: jnp.ndarray,   # (E, T) one-hot edge sources (E may be 0)
+    dst_onehot: jnp.ndarray,   # (E, T) one-hot edge destinations
+    *,
+    block_samples: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    s, t, k = onehot.shape
+    assert p.shape == (t,) and e.shape == (k,), (p.shape, e.shape)
+    assert C.shape == (k, k), C.shape
+    if src_onehot.shape[0] == 0:
+        # one inert all-zero edge row: zero delay, zero comm contribution
+        src_onehot = jnp.zeros((1, t), jnp.float32)
+        dst_onehot = jnp.zeros((1, t), jnp.float32)
+    n_e = src_onehot.shape[0]
+    assert src_onehot.shape == dst_onehot.shape == (n_e, t)
+    if block_samples is None:
+        # keep the (bs, T, K) slab ≈ 1 MiB of f32 on-chip
+        block_samples = max(1, (1 << 18) // max(1, t * k))
+    bs = min(block_samples, s)
+    pad = (-s) % bs
+    if pad:
+        onehot = jnp.pad(onehot, ((0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    times = pl.pallas_call(
+        _bottleneck_kernel,
+        grid=(sp // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, t, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((n_e, t), lambda i: (0, 0)),
+            pl.BlockSpec((n_e, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((sp,), jnp.float32),
+        interpret=interpret,
+    )(onehot, p, e, C, src_onehot, dst_onehot)
+    return times[:s]

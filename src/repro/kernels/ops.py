@@ -15,10 +15,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bottleneck import bottleneck_eval_fwd
+from repro.kernels.compress import int8_roundtrip_fwd, topk_mask_fwd
 from repro.kernels.decode_attention import decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.gossip_mix import gossip_mix_fwd
 from repro.kernels.rmsnorm import rmsnorm_fwd
+from repro.kernels.sdp_proj import rank_k_update_fwd, sdp_subspace_fwd
 
 
 def _interpret() -> bool:
@@ -74,3 +77,45 @@ def gossip_mix(stacked, weights):
     if _force_ref():
         return ref.gossip_mix_ref(stacked, weights)
     return gossip_mix_fwd(stacked, weights, interpret=_interpret())
+
+
+@jax.jit
+def sdp_subspace(Y, V):
+    """(n, n) iterate + (n, k) basis -> (Y@V, VᵀYV, ΣY²) in one Y stream."""
+    if _force_ref():
+        return ref.sdp_subspace_ref(Y, V)
+    return sdp_subspace_fwd(Y, V, interpret=_interpret())
+
+
+@jax.jit
+def rank_k_update(Y, A, B):
+    """(n, n) − (n, k) @ (n, k)ᵀ without materializing the outer product."""
+    if _force_ref():
+        return ref.rank_k_update_ref(Y, A, B)
+    return rank_k_update_fwd(Y, A, B, interpret=_interpret())
+
+
+@jax.jit
+def compress_topk(X, thresh):
+    """(N, L) deltas + (N,) thresholds -> (msgs, residual) in one stream."""
+    if _force_ref():
+        return ref.topk_mask_ref(X, thresh)
+    return topk_mask_fwd(X, thresh, interpret=_interpret())
+
+
+@jax.jit
+def compress_int8(X, scale):
+    """(N, L) deltas + (N,) scales -> (dequantized msgs, residual)."""
+    if _force_ref():
+        return ref.int8_roundtrip_ref(X, scale)
+    return int8_roundtrip_fwd(X, scale, interpret=_interpret())
+
+
+@jax.jit
+def bottleneck_eval(onehot, p, e, C, src_onehot, dst_onehot):
+    """(S, T, K) one-hot samples -> (S,) Eq. 2 bottleneck times."""
+    if _force_ref():
+        return ref.bottleneck_eval_ref(onehot, p, e, C, src_onehot, dst_onehot)
+    return bottleneck_eval_fwd(
+        onehot, p, e, C, src_onehot, dst_onehot, interpret=_interpret()
+    )

@@ -74,6 +74,72 @@ def gossip_mix_all_ref(stacked: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarra
     return gossip_mix_ref(stacked, weights)
 
 
+def sdp_subspace_ref(
+    Y: jnp.ndarray, V: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused subspace-iteration oracle: (Y@V, Vᵀ(Y@V), ΣY²) in f32."""
+    Yf = Y.astype(jnp.float32)
+    Vf = V.astype(jnp.float32)
+    YV = Yf @ Vf
+    return YV, Vf.T @ YV, jnp.sum(Yf * Yf)
+
+
+def rank_k_update_ref(
+    Y: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray
+) -> jnp.ndarray:
+    """Rank-k downdate oracle: Y − A Bᵀ (f32 math, Y.dtype out)."""
+    out = Y.astype(jnp.float32) - A.astype(jnp.float32) @ B.astype(jnp.float32).T
+    return out.astype(Y.dtype)
+
+
+def topk_mask_ref(
+    X: jnp.ndarray, thresh: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Threshold-sparsification oracle with error feedback (per-row thresh)."""
+    Xf = X.astype(jnp.float32)
+    msg = jnp.where(jnp.abs(Xf) >= thresh.astype(jnp.float32)[:, None], Xf, 0.0)
+    return msg.astype(X.dtype), (Xf - msg).astype(X.dtype)
+
+
+def int8_roundtrip_ref(
+    X: jnp.ndarray, scale: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantize→dequantize oracle with error feedback."""
+    Xf = X.astype(jnp.float32)
+    s = scale.astype(jnp.float32)[:, None]
+    msg = jnp.clip(jnp.round(Xf / s), -127.0, 127.0) * s
+    return msg.astype(X.dtype), (Xf - msg).astype(X.dtype)
+
+
+def bottleneck_eval_ref(
+    onehot: jnp.ndarray,       # (S, T, K) one-hot assignments
+    p: jnp.ndarray,            # (T,)
+    e: jnp.ndarray,            # (K,)
+    C: jnp.ndarray,            # (K, K)
+    src_onehot: jnp.ndarray,   # (E, T) one-hot edge sources (all-zero = inert)
+    dst_onehot: jnp.ndarray,   # (E, T)
+) -> jnp.ndarray:
+    """Eq. 2 over samples as dense one-hot contractions (the kernel contract).
+
+    Semantic equivalence to the index-gather evaluator
+    (``bottleneck_time_batch``) is pinned separately in the property suite.
+    """
+    if src_onehot.shape[0] == 0:
+        src_onehot = jnp.zeros((1, onehot.shape[1]), jnp.float32)
+        dst_onehot = jnp.zeros((1, onehot.shape[1]), jnp.float32)
+    A = onehot.astype(jnp.float32)
+    S = src_onehot.astype(jnp.float32)
+    D = dst_onehot.astype(jnp.float32)
+    loads = jnp.einsum("stk,t->sk", A, p.astype(jnp.float32))
+    per_machine = loads / e.astype(jnp.float32)
+    t_comp = jnp.einsum("stk,sk->st", A, per_machine)
+    m_src = jnp.einsum("et,stk->sek", S, A)
+    m_dst = jnp.einsum("et,stk->sek", D, A)
+    delays = jnp.einsum("sek,kl,sel->se", m_src, C.astype(jnp.float32), m_dst)
+    comm = jnp.max(delays[:, :, None] * S[None, :, :], axis=1)
+    return jnp.max(t_comp + comm, axis=1)
+
+
 def gossip_mix_segment_ref(
     stacked: jnp.ndarray,    # (N, L) flat sender vectors
     src: jnp.ndarray,        # (|E|,) sender index per edge

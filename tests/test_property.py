@@ -1,12 +1,21 @@
-"""Hypothesis property tests on scheduling invariants."""
+"""Property tests on scheduling, FL, and kernel invariants.
+
+Uses the real ``hypothesis`` library when installed; otherwise falls back
+to the seeded shim in ``tests/_minihypothesis.py`` (same API subset, no
+shrinking) so the module runs everywhere instead of skipping.
+"""
 
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="optional dependency: property tests need hypothesis"
-)
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the environment
+    from _minihypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = False
 
 from repro.core import ComputeGraph, TaskGraph, bottleneck_time
 from repro.core.bqp import bottleneck_time_batch, build_bqp, task_times
@@ -188,3 +197,109 @@ def test_token_account_rejects_bad_config():
         TokenAccount(capacity=0.5)
     with pytest.raises(ValueError, match="refill"):
         TokenAccount(capacity=2.0, refill=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# Fused-kernel invariants: the Pallas ops agree with Eq. 2 / the compressors
+# on randomized shapes, not just the hand-picked sweeps in test_kernel_diff
+# ---------------------------------------------------------------------------
+
+
+@given(instances())
+@settings(max_examples=25, deadline=None)
+def test_kernel_bottleneck_matches_eq2(inst):
+    """The one-hot bottleneck kernel == the index-gather gold evaluator."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.bottleneck import bottleneck_eval_fwd
+    from repro.kernels.ref import bottleneck_eval_ref
+
+    tg, cg, a = inst
+    n_t, n_k = tg.num_tasks, cg.num_machines
+    batch = np.stack([a, (a + 1) % n_k, (a + 2) % n_k])
+    gold = bottleneck_time_batch(tg, cg, batch)
+
+    oh = jax.nn.one_hot(jnp.asarray(batch), n_k, dtype=jnp.float32)
+    if tg.edges:
+        src = jnp.asarray([i for i, _ in tg.edges])
+        dst = jnp.asarray([j for _, j in tg.edges])
+        src_oh = jax.nn.one_hot(src, n_t, dtype=jnp.float32)
+        dst_oh = jax.nn.one_hot(dst, n_t, dtype=jnp.float32)
+    else:
+        src_oh = dst_oh = jnp.zeros((0, n_t), jnp.float32)
+    args = (oh, jnp.asarray(tg.p), jnp.asarray(cg.e), jnp.asarray(cg.C),
+            src_oh, dst_oh)
+    got = bottleneck_eval_fwd(*args, interpret=True)
+    want = bottleneck_eval_ref(*args)
+    np.testing.assert_allclose(np.asarray(got), gold, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(1, 200),
+       st.floats(0.01, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_kernel_compress_error_feedback(seed, n, l, frac):
+    """Fused compress kernels: msgs + residual == delta (lossless feedback),
+    top-k keeps >= k entries, int8 residual bounded by half a quantum."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.compress import int8_roundtrip_fwd, topk_mask_fwd
+    from repro.kernels.ref import int8_roundtrip_ref, topk_mask_ref
+
+    rng = np.random.default_rng(seed)
+    delta = jnp.asarray(rng.standard_normal((n, l)), jnp.float32)
+    bl = max(1, l // 3)  # force a ragged final block most of the time
+
+    kk = max(1, int(frac * l))
+    vals, _ = jax.lax.top_k(jnp.abs(delta), kk)
+    thresh = vals[:, -1]
+    msg, resid = topk_mask_fwd(delta, thresh, block_len=bl, interpret=True)
+    rmsg, rresid = topk_mask_ref(delta, thresh)
+    assert np.array_equal(np.asarray(msg), np.asarray(rmsg))
+    assert np.array_equal(np.asarray(resid), np.asarray(rresid))
+    assert np.array_equal(np.asarray(msg) + np.asarray(resid),
+                          np.asarray(delta))
+    assert np.all(np.count_nonzero(np.asarray(msg), axis=1) >= kk)
+
+    scale = jnp.maximum(jnp.max(jnp.abs(delta), axis=1), 1e-12) / 127.0
+    msg, resid = int8_roundtrip_fwd(delta, scale, block_len=bl,
+                                    interpret=True)
+    rmsg, rresid = int8_roundtrip_ref(delta, scale)
+    assert np.array_equal(np.asarray(msg), np.asarray(rmsg))
+    np.testing.assert_allclose(np.asarray(resid), np.asarray(rresid),
+                               atol=2e-7)
+    assert np.all(np.abs(np.asarray(resid))
+                  <= np.asarray(scale)[:, None] * 0.5 + 1e-7)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 24), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_kernel_sdp_subspace_matches_ref(seed, n, k):
+    """Fused subspace matvec + Gram + ||Y||^2 agree with the jnp oracle on
+    random (n, k) including block-ragged n; rank-k downdate is exact."""
+    import jax.numpy as jnp
+
+    from repro.kernels.sdp_proj import rank_k_update_fwd, sdp_subspace_fwd
+    from repro.kernels.ref import rank_k_update_ref, sdp_subspace_ref
+
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    Y = rng.standard_normal((n, n))
+    Y = jnp.asarray(Y + Y.T, jnp.float32)
+    V = jnp.asarray(np.linalg.qr(rng.standard_normal((n, k)))[0], jnp.float32)
+    yv, g, ss = sdp_subspace_fwd(Y, V, block_rows=5, interpret=True)
+    ryv, rg, rss = sdp_subspace_ref(Y, V)
+    np.testing.assert_allclose(np.asarray(yv), np.asarray(ryv),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(rg),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(ss), float(rss), rtol=1e-5)
+
+    A = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    got = rank_k_update_fwd(Y, A, V, block_rows=5, interpret=True)
+    want = rank_k_update_ref(Y, A, V)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

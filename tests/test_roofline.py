@@ -1,0 +1,86 @@
+"""``benchmarks.roofline.sdp_batch_profile`` on a tiny instance: every
+documented field present, finite, and internally consistent."""
+
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from benchmarks.roofline import sdp_batch_profile  # noqa: E402
+
+FLOAT_FIELDS = (
+    "matvec_seconds",
+    "cone_partial_seconds",
+    "cone_partial_fused_seconds",
+    "matvec_gflops",
+    "intensity_flops_per_byte",
+    "fused_traffic_ratio",
+    "cone_intensity_jnp",
+    "cone_intensity_fused",
+    "peak_gemm_gflops",
+    "peak_stream_gbs",
+    "machine_balance_flops_per_byte",
+)
+
+
+@pytest.fixture(scope="module")
+def row():
+    # tiny probe: n1 = 4·2 + 1 = 9, one warm rep — seconds, not minutes
+    return sdp_batch_profile(num_tasks=4, num_machines=2, batch=2, reps=1)
+
+
+def test_profile_fields_finite(row):
+    assert row is not None
+    for f in FLOAT_FIELDS:
+        assert f in row, f
+        assert math.isfinite(row[f]) and row[f] > 0, (f, row[f])
+    assert row["n1"] == 9 and row["batch"] == 2
+    # k clamps below n1 on tiny instances (qr well-posedness)
+    assert 1 <= row["k"] < row["n1"]
+    assert row["verdict"] in ("memory_bound", "compute_bound")
+    assert row["pallas_item5"] in ("go", "no_go")
+    assert row["fused_mode"] in ("interpret", "compiled")
+
+
+def test_profile_traffic_model_consistent(row):
+    """Fused streams < jnp streams; intensities scale with the ratio."""
+    assert row["y_slab_streams_fused"] < row["y_slab_streams_jnp"]
+    assert row["fused_traffic_ratio"] == pytest.approx(
+        row["y_slab_streams_jnp"] / row["y_slab_streams_fused"]
+    )
+    assert row["cone_intensity_fused"] > row["cone_intensity_jnp"]
+    assert row["cone_intensity_fused"] == pytest.approx(
+        row["cone_intensity_jnp"] * row["fused_traffic_ratio"]
+    )
+    # verdict is derived from the recorded quantities
+    want = (
+        "memory_bound"
+        if row["intensity_flops_per_byte"]
+        < row["machine_balance_flops_per_byte"]
+        else "compute_bound"
+    )
+    assert row["verdict"] == want
+
+
+def test_profile_does_not_write_json(tmp_path, row):
+    """record_json defaults off: probing (e.g. from tests) must not touch
+    BENCH_scheduler_scaling.json."""
+    import pathlib
+
+    import benchmarks.roofline as rl
+
+    path = pathlib.Path(rl.__file__).resolve().parent.parent / (
+        "BENCH_scheduler_scaling.json"
+    )
+    before = path.read_text() if path.exists() else None
+    sdp_batch_profile(num_tasks=4, num_machines=2, batch=1, reps=1)
+    after = path.read_text() if path.exists() else None
+    assert before == after
+
+
+def test_profile_numpy_free_of_nan(row):
+    assert np.isfinite(
+        [row[f] for f in FLOAT_FIELDS]
+    ).all()

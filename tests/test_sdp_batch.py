@@ -172,11 +172,14 @@ def test_rounding_cache_batch_and_single_coexist(fleet):
         tg, cg, tg.num_tasks, cg.num_machines, False
     ) is single
     # both key shapes live in the one LRU; batched keys are shape-keyed
-    # and tagged, single keys are content-keyed
+    # and tagged, single keys are content-keyed; the trailing element is
+    # the resolved kernel backend
     keys = list(rounding_mod._JAX_CACHE)
     batch_keys = [k for k in keys if k[0] == "batch"]
-    assert ("batch", 2, tg.num_tasks, cg.num_machines, n_e, False) in keys
-    assert ("batch", 4, tg.num_tasks, cg.num_machines, n_e, False) in keys
+    assert ("batch", 2, tg.num_tasks, cg.num_machines, n_e, False,
+            "jnp") in keys
+    assert ("batch", 4, tg.num_tasks, cg.num_machines, n_e, False,
+            "jnp") in keys
     assert len(batch_keys) < len(keys)
 
 
