@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test smoke churn_smoke async_fl_smoke kernel_diff_smoke ci docs-check bench-scheduler bench-gossip bench-kernels bench-scenarios bench-async bench-churn bench-async-fl
+.PHONY: test smoke churn_smoke async_fl_smoke kernel_diff_smoke shard_fl_smoke ci docs-check bench-scheduler bench-gossip bench-kernels bench-scenarios bench-async bench-churn bench-async-fl
 
 # Tier-1 verification (ROADMAP.md)
 test:
@@ -23,7 +23,11 @@ test:
 # snapshots with zero barrier stalls), and the kernel-diff smoke (every
 # fused Pallas kernel matches its jnp oracle in interpret mode, and a
 # tiny seeded SDP solve with the fused projection on vs off follows the
-# identical iteration trajectory).
+# identical iteration trajectory), and the shard-FL smoke (the
+# mesh-sharded engine on 2 fake host devices reproduces the stacked
+# per-round losses to fp32 with ONE jitted dispatch per round — a fresh
+# interpreter because the forced device count must precede jax's first
+# init).
 smoke:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.small_instance_backends(quick=True); \
@@ -38,6 +42,15 @@ smoke:
 	$(PYTHON) -c "import benchmarks.churn_bench as c; c.churn_smoke()"
 	$(PYTHON) -c "import benchmarks.async_fl_bench as a; a.async_fl_smoke()"
 	$(PYTHON) -c "import benchmarks.kernels_bench as k; k.kernel_diff_smoke()"
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.sharded_smoke()"
+
+# Shard-FL smoke alone: mesh=2 (fake host devices) sharded engine vs the
+# stacked backend — per-round loss equivalence to fp32, one dispatch per
+# round, no retracing.
+shard_fl_smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.sharded_smoke()"
 
 # Churn smoke alone: a short injected-timeout churn trace asserting that
 # arrivals trigger elastic re-solves, a stalled SDP degrades to the heft
@@ -70,8 +83,14 @@ bench-scheduler:
 	$(PYTHON) -c "import benchmarks.scheduler_bench as b; \
 	b.scaling_sweep(quick=False); b.batch_sweep(quick=False)"
 
+# SHARDED=1 additionally records the population-scale mesh-sharded sweep
+# (N_T up to 10k over 8 fake host devices) under the "sharded" key.
 bench-gossip:
 	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.sweep()"
+ifneq ($(SHARDED),)
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PYTHON) -c "import benchmarks.fig6_gossip_fl as f; f.sharded_sweep()"
+endif
 
 bench-kernels:
 	$(PYTHON) -c "import benchmarks.kernels_bench as k; \

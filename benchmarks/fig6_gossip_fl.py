@@ -9,7 +9,11 @@ The FL engine itself runs on the stacked device-resident backend
 (DESIGN.md §8); ``sweep()`` records rounds/sec of the stacked engine vs
 the per-user reference loop at N_T ∈ {10, 32, 64, 128} into
 ``BENCH_gossip_fl.json``, and ``stacked_smoke()`` is the CI check that the
-single-jit round path took effect.
+single-jit round path took effect.  ``sharded_sweep()`` scales the same
+round math to N_T ∈ {128, 1k, 10k} on the mesh-sharded engine
+(DESIGN.md §13) and records shard-count invariance, stacked-equivalence,
+and halo-exchange volume under the ``sharded`` key; ``sharded_smoke()``
+is its CI check (the ``shard_fl_smoke`` target).
 """
 
 from __future__ import annotations
@@ -23,8 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Timer, emit
-from repro.core.graphs import gossip_task_graph
-from repro.data.synthetic import image_dataset
+from repro.core.graphs import cluster_task_graph, gossip_task_graph
+from repro.data.synthetic import ImageDataset, image_dataset
 from repro.fl.cnn import cnn_loss, init_cnn_params
 from repro.fl.gossip import GossipConfig, GossipTrainer
 
@@ -178,6 +182,192 @@ def sweep(
     return result
 
 
+# ---------------------------------------------------------------------------
+# Population scale: the mesh-sharded engine (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+#
+# The sharded sweep runs the SAME round math partitioned over a 1-D user
+# mesh (fake host devices stand in on CPU — launch with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8, the `make
+# bench-gossip SHARDED=1` / `make smoke` path).  The workload is a
+# hierarchical cluster topology (sparse head ring between dense-ish
+# clusters) on a tiny MLP, so the halo exchange — the boundary rows the
+# engine actually gathers — stays a small fraction of the dense all-pairs
+# alternative and N_T = 10k fits a CPU container.
+
+SHARDED_BENCH_CONFIG = {
+    "local_steps": 4, "batch_size": 4, "samples_per_user": 16,
+    "image_side": 8, "hidden": 16, "inner_degree": 3,
+    "users_per_cluster": 64,
+}
+
+
+def _sharded_instance(n_users: int, seed: int = 0):
+    """Cluster task graph + tiny synthetic shards for one sweep point.
+
+    Clusters are contiguous by construction, so the engine's contiguous
+    shard blocks already respect them (``cluster_shard_permutation`` is
+    the identity here) and only head-ring links cross shards.
+    """
+    c = SHARDED_BENCH_CONFIG
+    rng = np.random.default_rng(seed)
+    clusters = max(2, n_users // c["users_per_cluster"])
+    tg = cluster_task_graph(
+        rng, n_users, clusters=clusters, inner_topology="gossip",
+        inner_degree=c["inner_degree"], head_topology="ring",
+    )
+    side = c["image_side"]
+    n = n_users * c["samples_per_user"]
+    data = ImageDataset(
+        x=rng.normal(size=(n, side, side, 1)).astype(np.float32),
+        y=rng.integers(0, 10, size=n).astype(np.int64),
+        num_classes=10,
+    )
+    return tg, data.split(n_users, rng)
+
+
+def _sharded_trainer(
+    n_users: int, backend: str, *, num_shards: int | None = None,
+    seed: int = 0,
+) -> GossipTrainer:
+    c = SHARDED_BENCH_CONFIG
+    tg, shards = _sharded_instance(n_users, seed)
+    cfg = GossipConfig(
+        local_steps=c["local_steps"], batch_size=c["batch_size"],
+        backend=backend, num_shards=num_shards,
+    )
+    d = c["image_side"] ** 2
+    init = lambda k: _mlp_init(k, d=d, hidden=c["hidden"])
+    return GossipTrainer(tg, init, _mlp_loss, shards, cfg, seed=seed)
+
+
+def sharded_sweep(
+    sizes: tuple[int, ...] = (128, 1000, 10000),
+    rounds: int = 2,
+    mesh_sizes: tuple[int, ...] = (1, 2, 8),
+    stacked_anchor_max: int = 1000,
+    out_path: str = "BENCH_gossip_fl.json",
+) -> dict:
+    """Population-scale sweep of the mesh-sharded engine.
+
+    Per size: rounds/sec at every available mesh size, per-round losses,
+    the max loss spread ACROSS mesh sizes (shard-count invariance), the
+    max deviation vs the single-device stacked backend on overlapping
+    sizes (fp32 equivalence), and the measured halo-exchange volume vs
+    the dense all-pairs alternative.  Records under the ``sharded`` key
+    of ``BENCH_gossip_fl.json``.
+    """
+    avail = len(jax.devices())
+    meshes = tuple(s for s in mesh_sizes if s <= avail)
+    skipped = tuple(s for s in mesh_sizes if s > avail)
+    if skipped:
+        print(
+            f"# sharded_sweep: skipping mesh sizes {skipped} — only {avail} "
+            f"device(s); set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{max(mesh_sizes)}"
+        )
+    points = []
+    for n in sizes:
+        row: dict = {"n_users": n, "meshes": {}}
+        losses_by_mesh: dict[int, list[float]] = {}
+        for s in meshes:
+            tr = _sharded_trainer(n, "sharded", num_shards=s)
+            losses = [tr.step_round()["mean_loss"]]     # warmup: compile
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                losses.append(tr.step_round()["mean_loss"])
+            dt = (time.perf_counter() - t0) / rounds
+            assert tr.last_round_dispatches == 1, tr.last_round_dispatches
+            losses_by_mesh[s] = losses
+            hs = tr.halo_stats
+            row["meshes"][str(s)] = {
+                "round_seconds": dt,
+                "rounds_per_sec": 1.0 / dt,
+                "dispatches_per_round": tr.last_round_dispatches,
+                "halo_stats": hs,
+                # fraction of the dense all-pairs gather each shard receives
+                "halo_fraction": (
+                    hs["halo_rows_per_shard"] / hs["dense_rows_per_shard"]
+                ),
+            }
+            del tr
+        spreads = [
+            max(abs(a - b) for a, b in zip(losses_by_mesh[x], losses_by_mesh[y]))
+            for x in meshes for y in meshes if x < y
+        ]
+        row["losses"] = {str(s): losses_by_mesh[s] for s in meshes}
+        row["mesh_loss_max_spread"] = max(spreads) if spreads else 0.0
+        if n <= stacked_anchor_max:
+            tr = _sharded_trainer(n, "stacked")
+            ref = [tr.step_round()["mean_loss"] for _ in range(rounds + 1)]
+            del tr
+            row["stacked_losses"] = ref
+            row["stacked_loss_max_diff"] = max(
+                max(abs(a - b) for a, b in zip(ref, losses_by_mesh[s]))
+                for s in meshes
+            )
+        hs = row["meshes"][str(meshes[-1])]
+        emit(
+            f"gossip_fl_sharded_nt{n}",
+            hs["round_seconds"] * 1e6,
+            f"mesh={meshes[-1]};halo_frac={hs['halo_fraction']:.3f};"
+            f"mesh_spread={row['mesh_loss_max_spread']:.2e};"
+            + (
+                f"vs_stacked={row['stacked_loss_max_diff']:.2e}"
+                if "stacked_loss_max_diff" in row else "vs_stacked=n/a"
+            ),
+        )
+        points.append(row)
+    result = {
+        "device": jax.default_backend(),
+        "num_devices": avail,
+        "mesh_sizes": list(meshes),
+        "rounds_timed": rounds,
+        "config": SHARDED_BENCH_CONFIG,
+        "points": points,
+    }
+    # Read-modify-write: this file carries several benches' sections.
+    path = pathlib.Path(out_path)
+    data = json.loads(path.read_text()) if path.exists() else {}
+    data["sharded"] = result
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    return result
+
+
+def sharded_smoke() -> None:
+    """CI smoke (``shard_fl_smoke``): mesh=2 sharded == stacked to fp32.
+
+    Needs >= 2 devices (fake host devices in CI:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=2``).  Asserts the
+    sharded engine reproduces the stacked per-round losses on a cluster
+    topology, issues exactly ONE jitted dispatch per round, and never
+    retraces.
+    """
+    avail = len(jax.devices())
+    assert avail >= 2, (
+        f"shard_fl_smoke needs >= 2 devices (got {avail}); set "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count=2"
+    )
+    n = 24
+    a = _sharded_trainer(n, "stacked")
+    b = _sharded_trainer(n, "sharded", num_shards=2)
+    diffs = []
+    for _ in range(3):
+        ia, ib = a.step_round(), b.step_round()
+        diffs.append(abs(ia["mean_loss"] - ib["mean_loss"]))
+        assert b.last_round_dispatches == 1, b.last_round_dispatches
+    assert max(diffs) < 2e-5, diffs
+    if hasattr(b._round_jit, "_cache_size"):
+        assert b._round_jit._cache_size() == 1, b._round_jit._cache_size()
+    hs = b.halo_stats
+    emit(
+        "smoke_shard_fl", 0.0,
+        f"mesh=2;rounds=3;max_loss_diff={max(diffs):.2e};"
+        f"halo_rows={hs['halo_rows_per_shard']};"
+        f"dense_rows={hs['dense_rows_per_shard']}",
+    )
+
+
 def stacked_smoke() -> None:
     """CI smoke: a 2-round stacked MNIST gossip run on the single-jit path.
 
@@ -208,5 +398,12 @@ def main(quick: bool = True):
 
 
 if __name__ == "__main__":
-    main(quick=False)
-    sweep()
+    import sys
+
+    if "--sharded" in sys.argv:
+        # Needs the fake-device count forced before jax's first init:
+        # XLA_FLAGS=--xla_force_host_platform_device_count=8
+        sharded_sweep()
+    else:
+        main(quick=False)
+        sweep()

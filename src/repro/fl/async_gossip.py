@@ -58,8 +58,12 @@ class AsyncGossipTrainer(GossipTrainer):
         task-graph edge, in ``task_graph.edges`` order — exactly one row
         of ``SimResult.mix_versions`` (default: this round's own version,
         the degenerate fresh case).  Returns the usual round record plus
-        ``stale_mixes`` (edges mixed with Δτ > 0) and ``invalid_edges``
-        (versions never delivered or evicted from the archive).
+        ``stale_mixes`` (edges mixed with Δτ > 0), ``invalid_edges``
+        (versions never delivered or evicted from the archive), and
+        ``mix_lag_hist`` — the round's per-edge staleness histogram
+        (index Δτ = rounds behind, never-delivered edges excluded); a
+        cumulative copy accrues in ``self.lag_hist``, the measurement a
+        staleness-ADAPTIVE mixing policy would adapt on.
 
     ``archive_depth``
         Ring-buffer depth ``S``: snapshots older than ``S`` rounds are
@@ -83,6 +87,9 @@ class AsyncGossipTrainer(GossipTrainer):
         self.staleness = staleness if staleness is not None else StalenessWeights()
         self.archive_depth = int(archive_depth)
         self.total_stale_mixes = 0
+        # Cumulative per-edge lag histogram: lag_hist[d] = mixes observed
+        # at staleness Δτ = d across all rounds so far.
+        self.lag_hist = np.zeros(1, dtype=np.int64)
         super().__init__(
             task_graph, init_params, loss_fn, shards, cfg, seed,
             backend="stacked",
@@ -95,6 +102,7 @@ class AsyncGossipTrainer(GossipTrainer):
         S = self.archive_depth
         comp = cfg.compressor
         self._data = (jnp.asarray(self._xs), jnp.asarray(self._ys))
+        user_keys = self._user_keys
         self_w = jnp.asarray(self._self_w)
         src = jnp.asarray(self._src)
         dst = jnp.asarray(self._dst)
@@ -119,7 +127,7 @@ class AsyncGossipTrainer(GossipTrainer):
             # Local training runs for every user (vmap computes all lanes
             # anyway); down users' state is then frozen by selection.
             (params, opt_state, cursor, epoch, perm), losses = local_scan(
-                params, opt_state, cursor, epoch, perm, xs, ys
+                params, opt_state, cursor, epoch, perm, xs, ys, user_keys
             )
             if comp is None:
                 msgs = params
@@ -235,6 +243,19 @@ class AsyncGossipTrainer(GossipTrainer):
                     f"{self.round} — a snapshot cannot be delivered before "
                     f"it is published"
                 )
+        # Per-edge lag histogram (host-side: n_e ints/round, negligible
+        # next to the jitted round).  Never-delivered edges (v = -1) are
+        # invalid_edges, not lags.
+        delivered = edge_versions[edge_versions >= 0]
+        lag_hist = np.bincount(
+            (self.round - delivered).astype(np.int64), minlength=1
+        )
+        if len(lag_hist) > len(self.lag_hist):
+            self.lag_hist = np.pad(
+                self.lag_hist, (0, len(lag_hist) - len(self.lag_hist))
+            )
+        self.lag_hist[: len(lag_hist)] += lag_hist
+
         calls_before = self._jit_calls
         self._state, (mean_loss, stale, invalid) = self._dispatch(
             self._round_jit,
@@ -253,4 +274,6 @@ class AsyncGossipTrainer(GossipTrainer):
             "mean_loss": float(mean_loss),
             "stale_mixes": stale,
             "invalid_edges": int(invalid),
+            "mix_lag_hist": lag_hist.tolist(),
+            "dropped_samples": self.dropped_samples,
         }

@@ -6,7 +6,7 @@ the models it received (weighted average including its own).  Optional
 delta-compression (top-k / int8) with error feedback shrinks the gossip
 message — and therefore the scheduler's C matrix.
 
-Two interchangeable engines run the learning (DESIGN.md §8):
+Three interchangeable engines run the learning (DESIGN.md §8, §13):
 
   - ``backend="reference"`` — the per-user Python loop: one jitted grad
     call per user per local step, edge-by-edge aggregation with
@@ -18,6 +18,19 @@ Two interchangeable engines run the learning (DESIGN.md §8):
     as a multiplication by the row-normalized sparse mixing matrix W) is a
     single jitted call — no per-user or per-edge Python dispatch, no
     host↔device round-trips inside a round.
+  - ``backend="sharded"`` — the population-scale engine: the same round
+    body built PER SHARD under ``shard_map`` over a 1-D ``"users"``
+    device mesh (``launch/sharding.py::UserMesh``/``FLSharding``).  The
+    ``(N_T, …)`` replica pytree splits into contiguous user blocks
+    (padded with inert users when ``N_T % shards != 0``); local SGD and
+    compression are embarrassingly parallel, and the mixing matrix is
+    partitioned into intra-shard blocks (local ``segment_sum`` or the
+    block-local Pallas kernel) plus a sparse cross-shard halo: only the
+    BOUNDARY rows — senders with an out-edge into another shard — are
+    ``all_gather``-ed, so the exchange ships ``S·B`` rows per round
+    instead of the full ``N_T`` of a dense all-pairs collective.  Still
+    one jitted dispatch per round; per-round losses match the stacked
+    backend to fp32 at any mesh size (pinned in tests/test_shard_fl.py).
 
 Both engines draw identical data: shards are stacked to ``(N_T, chunk, …)``
 at construction and batches are index-gathers through a per-user epoch
@@ -42,11 +55,11 @@ import numpy as np
 
 from repro.core.graphs import TaskGraph
 from repro.data.synthetic import ImageDataset, stack_shards
-from repro.kernels.gossip_mix import gossip_mix_all_fwd
+from repro.kernels.gossip_mix import gossip_mix_all_fwd, gossip_mix_block_fwd
 from repro.kernels.ref import gossip_mix_segment_ref
 from repro.train.optim import SGDM
 
-BACKENDS = ("auto", "reference", "stacked")
+BACKENDS = ("auto", "reference", "stacked", "sharded")
 MIX_BACKENDS = ("auto", "segment_sum", "pallas")
 COMPRESS_BACKENDS = ("auto", "jnp", "pallas")
 
@@ -59,7 +72,11 @@ class GossipConfig:
     momentum: float = 0.9
     aggregate_self_weight: float = 0.5   # weight of own model in the average
     compressor: Any = None        # repro.train.compression.TopK / Int8 / None
-    backend: str = "auto"         # "reference" | "stacked" | "auto" (=stacked)
+    backend: str = "auto"         # "reference"|"stacked"|"sharded"|"auto"(=stacked)
+    # Sharded engine only: user-mesh shard count (None = every visible
+    # device).  On a host-only platform force the device count with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=N before jax loads.
+    num_shards: int | None = None
     mix_backend: str = "auto"     # stacked exchange: "segment_sum" | "pallas"
     mix_block_len: int = 65536    # L-block of the all-receivers Pallas kernel
     # Stacked delta-compression stage: "pallas" fuses the top-k/int8
@@ -71,7 +88,7 @@ class GossipConfig:
 
 
 def mixing_arrays(
-    task_graph: TaskGraph, self_weight: float
+    task_graph: TaskGraph, self_weight: float, *, dense_w: bool = True
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Row-normalized gossip mixing built from ``TaskGraph.edges``.
 
@@ -84,6 +101,11 @@ def mixing_arrays(
     where ``W[j, i] = w_edge`` for each edge — the incoming-message part
     only, so the same arrays serve compressed gossip (messages ≠ params):
     ``new_params = diag(self_w) · params + W · messages``.
+
+    ``dense_w=False`` skips materializing W (returned as ``None``): only
+    the stacked engine's all-receivers Pallas mix consumes it, and at
+    population scale (N_T = 10k) the (N, N) float32 is 400 MB of dead
+    weight for the edge-list paths.
     """
     n = task_graph.num_tasks
     indeg = np.zeros(n, dtype=np.int64)
@@ -95,11 +117,14 @@ def mixing_arrays(
     w_edge = (
         (1.0 - self_weight) / np.maximum(indeg[dst], 1)
     ).astype(np.float32) if len(task_graph.edges) else np.zeros(0, np.float32)
-    W = np.zeros((n, n), dtype=np.float32)
-    if len(task_graph.edges):
-        # accumulate, not assign: TaskGraph does not dedupe edges, and the
-        # per-edge paths (segment_sum, reference loop) count multiplicity
-        np.add.at(W, (dst, src), w_edge)
+    W = None
+    if dense_w:
+        W = np.zeros((n, n), dtype=np.float32)
+        if len(task_graph.edges):
+            # accumulate, not assign: TaskGraph does not dedupe edges, and
+            # the per-edge paths (segment_sum, reference loop) count
+            # multiplicity
+            np.add.at(W, (dst, src), w_edge)
     return self_w, src, dst, w_edge, W
 
 
@@ -112,12 +137,21 @@ class GossipTrainer:
     round — exactly 1 on the stacked path).
 
     Backend switch: the ``backend`` constructor argument overrides
-    ``cfg.backend``; either may be "reference", "stacked", or "auto"
-    (= stacked).  Both engines produce fp32-equivalent per-round losses
-    and parameters (pinned in ``tests/test_fl.py``), so the choice is
-    purely a dispatch-cost trade-off — see DESIGN.md §8.  The stacked
-    exchange additionally picks ``cfg.mix_backend`` ("auto" = segment_sum
-    on CPU, the all-receivers Pallas kernel on accelerators).
+    ``cfg.backend``; either may be "reference", "stacked", "sharded", or
+    "auto" (= stacked).  All engines produce fp32-equivalent per-round
+    losses and parameters (pinned in ``tests/test_fl.py`` and
+    ``tests/test_shard_fl.py``), so the choice is purely a dispatch- and
+    memory-cost trade-off — see DESIGN.md §8/§13.  The exchange
+    additionally picks ``cfg.mix_backend`` ("auto" = segment_sum on CPU,
+    the all-receivers / block-local Pallas kernel on accelerators).
+
+    The sharded engine partitions users over a 1-D ``"users"`` device mesh
+    (pass ``user_mesh=`` or set ``cfg.num_shards``); ``halo_stats`` then
+    reports the cross-shard exchange volume (boundary rows gathered per
+    round vs. the dense all-pairs alternative).
+
+    ``dropped_samples`` counts samples truncated away by the even-chunk
+    stacking of uneven shards (0 when all shards have equal length).
     """
 
     def __init__(
@@ -129,6 +163,7 @@ class GossipTrainer:
         cfg: GossipConfig | None = None,
         seed: int = 0,
         backend: str | None = None,
+        user_mesh: Any = None,   # launch.sharding.UserMesh ("sharded" only)
     ):
         self.g = task_graph
         self.cfg = cfg or GossipConfig()
@@ -148,6 +183,11 @@ class GossipTrainer:
         # length — loud when that drops more than the ±1 of an even split.
         self._xs, self._ys = stack_shards(shards)
         self._chunk = int(self._ys.shape[1])
+        # Satellite bookkeeping: how many samples the even-chunk truncation
+        # dropped (surfaces in every step_round info dict).
+        self.dropped_samples = int(
+            sum(len(s.y) - self._chunk for s in shards)
+        )
         longest = max(len(s.y) for s in shards)
         if longest - self._chunk > 1:
             warnings.warn(
@@ -168,15 +208,25 @@ class GossipTrainer:
         # Epoch-reshuffle PRNG, shared by both engines: the permutation of
         # user u's shard in epoch e is permutation(fold_in(key_u, e)).
         data_key = jax.random.fold_in(key0, 0x0DA7A)
-        self._user_keys = jnp.stack(
-            [jax.random.fold_in(data_key, u) for u in range(self.n)]
-        )
+        self._data_key = data_key
+        # vmapped fold_in is bit-identical to the per-user loop and O(1)
+        # dispatches at population scale
+        self._user_keys = jax.vmap(
+            lambda u: jax.random.fold_in(data_key, u)
+        )(jnp.arange(self.n, dtype=jnp.uint32))
 
         self.opt = SGDM(learning_rate=self.cfg.lr, momentum=self.cfg.momentum)
         self._loss_fn = loss_fn
         (
             self._self_w, self._src, self._dst, self._w_edge, self._W
-        ) = mixing_arrays(task_graph, self.cfg.aggregate_self_weight)
+        ) = mixing_arrays(
+            task_graph, self.cfg.aggregate_self_weight,
+            # Only the stacked pallas mix multiplies by the dense (N, N) W;
+            # every other path works off the edge lists.
+            dense_w=(
+                self.backend == "stacked" and self.mix_backend == "pallas"
+            ),
+        )
         self.round = 0
         # Measured per-round count of trainer-issued jitted calls (every
         # call site routes through ``_dispatch``): 1 on the stacked path,
@@ -201,6 +251,9 @@ class GossipTrainer:
                 residual,
             )
             self._round_jit = self._build_stacked_round()
+        elif self.backend == "sharded":
+            self._init_sharded(common, user_mesh)
+            self._round_jit = self._build_sharded_round()
         else:
             self._params = [jax.tree.map(jnp.copy, common) for _ in range(self.n)]
             self.opt_state = [self.opt.init(p) for p in self._params]
@@ -262,7 +315,6 @@ class GossipTrainer:
         from repro.train.compression import Int8, TopK
 
         comp = self.cfg.compressor
-        n = self.n
         use_kernel = self.compress_backend == "pallas" and isinstance(
             comp, (TopK, Int8)
         )
@@ -281,11 +333,14 @@ class GossipTrainer:
         is_topk = isinstance(comp, TopK)
 
         def one_leaf(x):
-            flat = x.reshape(n, -1)
+            # Leading axis is whatever population this stage sees: all N_T
+            # users (stacked) or one shard's block (sharded).
+            rows = x.shape[0]
+            flat = x.reshape(rows, -1)
             L = flat.shape[1]
-            # Same on-chip budget as the mix kernel: (n, bl) in + two
-            # (n, bl) out blocks stay a few MB regardless of user count.
-            bl = min(65536, max(1024, (1 << 20) // n), L)
+            # Same on-chip budget as the mix kernel: (rows, bl) in + two
+            # (rows, bl) out blocks stay a few MB regardless of user count.
+            bl = min(65536, max(1024, (1 << 20) // rows), L)
             if is_topk:
                 kk = max(1, int(comp.fraction * L))
                 vals, _ = jax.lax.top_k(jnp.abs(flat), kk)
@@ -403,17 +458,19 @@ class GossipTrainer:
         """The shared local-training stage of one stacked round.
 
         Returns ``local_scan(params, opt_state, cursor, epoch, perm, xs,
-        ys) -> ((params, opt_state, cursor, epoch, perm), losses)`` —
-        ``cfg.local_steps`` of vmapped SGDM with the in-jit epoch
-        reshuffle, fully unrolled.  Extracted so the barrier-free trainer
-        (``repro.fl.async_gossip``) traces the IDENTICAL math: that is
-        what makes its degenerate case reproduce this engine's losses.
+        ys, keys) -> ((params, opt_state, cursor, epoch, perm), losses)``
+        — ``cfg.local_steps`` of vmapped SGDM with the in-jit epoch
+        reshuffle, fully unrolled.  The per-user reshuffle keys ride in as
+        an ARGUMENT (not a closure) so the sharded engine can feed each
+        shard its own key block under ``shard_map``.  Extracted so the
+        barrier-free trainer (``repro.fl.async_gossip``) traces the
+        IDENTICAL math: that is what makes its degenerate case reproduce
+        this engine's losses.
         """
         cfg = self.cfg
         chunk, batch = self._chunk, cfg.batch_size
         opt = self.opt
         grad_fn = jax.value_and_grad(self._loss_fn)
-        user_keys = self._user_keys
 
         def one_user(p, o, cur, ep, pm, x_u, y_u, key_u):
             wrap = cur + batch > chunk
@@ -434,20 +491,20 @@ class GossipTrainer:
             p, o, _ = opt.update(g, o, p)
             return p, o, cur + batch, ep, pm, loss
 
-        def local_step(xs, ys, carry):
+        def local_step(xs, ys, keys, carry):
             params, opt_state, cursor, epoch, perm = carry
             params, opt_state, cursor, epoch, perm, losses = jax.vmap(one_user)(
-                params, opt_state, cursor, epoch, perm, xs, ys, user_keys
+                params, opt_state, cursor, epoch, perm, xs, ys, keys
             )
             return (params, opt_state, cursor, epoch, perm), losses
 
-        def local_scan(params, opt_state, cursor, epoch, perm, xs, ys):
+        def local_scan(params, opt_state, cursor, epoch, perm, xs, ys, keys):
             # Full unroll: XLA CPU optimizes loop bodies poorly (a rolled
             # scan body runs ~5x slower here); local_steps is single-digit,
             # so straight-line code costs little compile time and lets XLA
             # fuse across steps.
             return jax.lax.scan(
-                lambda carry, _: local_step(xs, ys, carry),
+                lambda carry, _: local_step(xs, ys, keys, carry),
                 (params, opt_state, cursor, epoch, perm),
                 None,
                 length=cfg.local_steps,
@@ -464,11 +521,12 @@ class GossipTrainer:
         # arrays get inlined into the compiled executable (a second copy of
         # the full training set, again on every retrace).
         self._data = (jnp.asarray(self._xs), jnp.asarray(self._ys))
+        user_keys = self._user_keys
         self_w = jnp.asarray(self._self_w)
         src = jnp.asarray(self._src)
         dst = jnp.asarray(self._dst)
         w_edge = jnp.asarray(self._w_edge)
-        W = jnp.asarray(self._W)
+        W = None if self._W is None else jnp.asarray(self._W)
         mix_backend = self.mix_backend
         interpret = jax.default_backend() == "cpu"
         local_scan = self._make_local_scan()
@@ -512,7 +570,7 @@ class GossipTrainer:
         def round_fn(state, xs, ys):
             params, opt_state, cursor, epoch, perm, residual = state
             (params, opt_state, cursor, epoch, perm), losses = local_scan(
-                params, opt_state, cursor, epoch, perm, xs, ys
+                params, opt_state, cursor, epoch, perm, xs, ys, user_keys
             )
             if comp is None:
                 msgs = params
@@ -538,14 +596,293 @@ class GossipTrainer:
         )
         return float(mean_loss)
 
+    # ======================================================================
+    # Sharded engine: the stacked round under shard_map over a user mesh
+    # ======================================================================
+
+    def _init_sharded(self, common, user_mesh) -> None:
+        """Place the population on the user mesh (DESIGN.md §13).
+
+        Contiguous user blocks of ``ceil(N_T / shards)``; when the split is
+        uneven the tail slots are INERT padding users — zero data, reshuffle
+        keys from the same ``fold_in`` stream (so real slots match the
+        stacked engine bit-for-bit), self-weight 1, no edges, and a loss
+        mask of 0 — they train on zeros into the void and are never read.
+        """
+        from repro.launch.sharding import FLSharding, UserMesh
+
+        if user_mesh is None:
+            user_mesh = UserMesh.build(self.cfg.num_shards)
+        self._fls = fls = FLSharding(user_mesh=user_mesh, num_users=self.n)
+        n_pad = fls.num_padded
+
+        data_key = self._data_key
+        keys = jax.vmap(
+            lambda u: jax.random.fold_in(data_key, u)
+        )(jnp.arange(n_pad, dtype=jnp.uint32))
+        args = (
+            jnp.asarray(fls.pad_users(self._xs)),
+            jnp.asarray(fls.pad_users(self._ys)),
+            keys,
+            jnp.asarray(fls.pad_users(self._self_w, fill=1.0)),
+            jnp.asarray(fls.valid_mask().astype(np.float32)),
+        )
+        ec = self._shard_edge_arrays()
+        self._sharded_args = fls.shard(args) + (
+            fls.shard_blocks({k: jnp.asarray(v) for k, v in ec.items()}),
+        )
+
+        stacked = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (n_pad,) + l.shape), common
+        )
+        residual = (
+            None if self.cfg.compressor is None
+            else jax.tree.map(jnp.zeros_like, stacked)
+        )
+        self._state = fls.shard((
+            stacked,
+            self.opt.init(stacked),
+            jnp.zeros(n_pad, jnp.int32),                         # cursor
+            jnp.zeros(n_pad, jnp.int32),                         # epoch
+            jnp.tile(jnp.arange(self._chunk, dtype=jnp.int32), (n_pad, 1)),
+            residual,
+        ))
+
+    def _shard_edge_arrays(self) -> dict:
+        """Host-side partition of the mixing edges per receiver shard.
+
+        Every array has a leading SHARD axis (so it device_puts with the
+        same ``P("users")`` spec as the user-stacked tensors and arrives
+        per-shard under shard_map); ragged per-shard lists are padded to a
+        common width with index 0 / weight 0 — exact no-ops in the mix.
+
+          - intra edges (``i_src``, ``i_dst``, ``i_w``): both endpoints on
+            the shard, indices LOCAL to its block;
+          - boundary senders (``b_idx``): local indices of users with an
+            out-edge leaving the shard — the only rows the halo all_gather
+            ships;
+          - cross edges (``x_src``, ``x_dst``, ``x_w``): ``x_src`` indexes
+            the gathered ``(S·B, L)`` halo (sender's shard · B + its
+            position in that shard's boundary list), ``x_dst`` is local;
+          - pallas lane only: dense per-shard mixing blocks ``Wb``
+            (S, m, m) and ``Wh`` (S, m, S·B) for the block-local kernel.
+
+        Also records ``halo_stats`` — the measured exchange volume the
+        benchmark reports against dense all-pairs gathering.
+        """
+        from repro.launch.sharding import pad_edge_lists
+
+        fls = self._fls
+        S, m = fls.num_shards, fls.block_size
+        src, dst, w = self._src, self._dst, self._w_edge
+        s_src = src // m
+        s_dst = dst // m
+        intra = s_src == s_dst
+        cross = ~intra
+
+        def pad_f32(rows):
+            e_max = max((len(r) for r in rows), default=0)
+            out = np.zeros((len(rows), e_max), np.float32)
+            for s, r in enumerate(rows):
+                out[s, : len(r)] = r
+            return out
+
+        def per_dst(vals, sel, localize):
+            return [
+                vals[sel & (s_dst == s)] - (s * m if localize else 0)
+                for s in range(S)
+            ]
+
+        i_src, _ = pad_edge_lists(per_dst(src, intra, True))
+        i_dst, _ = pad_edge_lists(per_dst(dst, intra, True))
+        i_w = pad_f32(per_dst(w, intra, False))
+
+        bnd = [
+            np.unique(src[cross & (s_src == s)]) - s * m for s in range(S)
+        ]
+        b_idx, _ = pad_edge_lists(bnd)
+        b = b_idx.shape[1]
+        # halo row of global sender u = (u's shard) · B + u's position in
+        # that shard's boundary list
+        halo_pos = np.full(fls.num_padded, -1, np.int64)
+        for s in range(S):
+            halo_pos[s * m + bnd[s]] = s * b + np.arange(len(bnd[s]))
+        x_src, _ = pad_edge_lists(
+            [halo_pos[src[cross & (s_dst == s)]] for s in range(S)]
+        )
+        x_dst, _ = pad_edge_lists(per_dst(dst, cross, True))
+        x_w = pad_f32(per_dst(w, cross, False))
+
+        self.halo_stats = {
+            "num_shards": S,
+            "block_size": m,
+            "intra_edges": int(np.sum(intra)),
+            "cross_edges": int(np.sum(cross)),
+            "boundary_rows": int(sum(len(r) for r in bnd)),
+            # rows each shard RECEIVES per round (padded all_gather width)
+            "halo_rows_per_shard": S * b,
+            # rows the dense all-pairs alternative would receive
+            "dense_rows_per_shard": fls.num_padded,
+        }
+
+        ec = {
+            "i_src": i_src, "i_dst": i_dst, "i_w": i_w, "b_idx": b_idx,
+            "x_src": x_src, "x_dst": x_dst, "x_w": x_w,
+        }
+        if self.mix_backend == "pallas":
+            wb = np.zeros((S, m, m), np.float32)
+            wh = np.zeros((S, m, S * b), np.float32)
+            if intra.any():
+                np.add.at(
+                    wb, (s_dst[intra], dst[intra] % m, src[intra] % m),
+                    w[intra],
+                )
+            if cross.any():
+                np.add.at(
+                    wh, (s_dst[cross], dst[cross] % m, halo_pos[src[cross]]),
+                    w[cross],
+                )
+            ec["Wb"], ec["Wh"] = wb, wh
+        return ec
+
+    def _build_sharded_round(self):
+        """One gossip round as ONE jitted shard_map dispatch.
+
+        Per shard: local-SGD scan and delta compression on the (m, …)
+        block (embarrassingly parallel), then the sparse mixing — intra
+        edges via local segment_sum (or the block-local Pallas kernel),
+        cross edges against the ``(S·B, L)`` halo of boundary rows
+        all_gather-ed from every shard.  The round loss is the psum of the
+        mask-weighted per-shard loss sums.
+        """
+        from jax.sharding import PartitionSpec as P
+
+        from repro.launch.sharding import USER_AXIS
+
+        cfg = self.cfg
+        fls = self._fls
+        m = fls.block_size
+        n = self.n
+        comp = cfg.compressor
+        mix_backend = self.mix_backend
+        interpret = jax.default_backend() == "cpu"
+        local_scan = self._make_local_scan()
+        compress_stage = None if comp is None else self._make_compress_stage()
+        halo_rows = self.halo_stats["halo_rows_per_shard"]
+
+        def body(state, xs, ys, keys, self_w, mask, ec):
+            # Every leading axis here is this shard's block: m for the
+            # user-stacked tensors, 1 for the shard-constant edge arrays.
+            params, opt_state, cursor, epoch, perm, residual = state
+            (params, opt_state, cursor, epoch, perm), losses = local_scan(
+                params, opt_state, cursor, epoch, perm, xs, ys, keys
+            )
+            if comp is None:
+                msgs = params
+            else:
+                msgs, residual = compress_stage(params, residual)
+
+            b_idx = ec["b_idx"][0]
+
+            def gather_halo(flat):
+                # (B, Lf) boundary rows -> (S·B, Lf) halo from every shard
+                rows = jnp.take(flat, b_idx, axis=0)
+                return jax.lax.all_gather(
+                    rows, USER_AXIS, axis=0, tiled=False
+                ).reshape(halo_rows, flat.shape[1])
+
+            if mix_backend == "segment_sum":
+                i_src, i_dst, i_w = ec["i_src"][0], ec["i_dst"][0], ec["i_w"][0]
+                x_src, x_dst, x_w = ec["x_src"][0], ec["x_dst"][0], ec["x_w"][0]
+
+                def mix_leaf(msg):
+                    flat = msg.reshape(m, -1)
+                    inc = gossip_mix_segment_ref(flat, i_src, i_dst, i_w, m)
+                    if halo_rows:
+                        inc = inc + gossip_mix_segment_ref(
+                            gather_halo(flat), x_src, x_dst, x_w, m
+                        )
+                    return inc.reshape(msg.shape)
+
+                incoming = jax.tree.map(mix_leaf, msgs)
+            else:
+                wb = ec["Wb"][0]
+                leaves, treedef = jax.tree.flatten(msgs)
+                flats = [l.reshape(m, -1) for l in leaves]
+                sizes = [f.shape[1] for f in flats]
+                X = jnp.concatenate(flats, axis=1)
+                L = X.shape[1]
+                # Same on-chip budget as the stacked pallas mix, counting
+                # the halo slab that now streams alongside the local one.
+                bl_cap = max(1024, (1 << 20) // max(m + halo_rows, 1))
+                bl = min(cfg.mix_block_len, bl_cap, L)
+                pad = (-L) % bl
+                if pad:
+                    X = jnp.pad(X, ((0, 0), (0, pad)))
+                if halo_rows:
+                    out = gossip_mix_block_fwd(
+                        X, wb, gather_halo(X), ec["Wh"][0],
+                        block_len=bl, interpret=interpret,
+                    )[:, :L]
+                else:
+                    out = gossip_mix_all_fwd(
+                        X, wb, block_len=bl, interpret=interpret
+                    )[:, :L]
+                offs = np.cumsum([0] + sizes)
+                incoming = treedef.unflatten([
+                    out[:, offs[k]: offs[k + 1]]
+                    .reshape(leaves[k].shape).astype(leaves[k].dtype)
+                    for k in range(len(leaves))
+                ])
+
+            params = jax.tree.map(
+                lambda p, inc: (
+                    self_w.reshape((m,) + (1,) * (p.ndim - 1)) * p + inc
+                ),
+                params, incoming,
+            )
+            # Padding users trained on zeros; the mask drops them from the
+            # round loss, and every real user contributes exactly once.
+            loss_sum = jax.lax.psum(
+                jnp.sum(losses * mask[None, :]), USER_AXIS
+            )
+            state = (params, opt_state, cursor, epoch, perm, residual)
+            return state, loss_sum / (n * cfg.local_steps)
+
+        sharded = fls.user_mesh.shard_map(
+            body,
+            in_specs=(P(USER_AXIS),) * 7,
+            out_specs=(P(USER_AXIS), P()),
+        )
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        # Pin the output shardings: on a 1-device mesh jax canonicalizes
+        # P("users") to P(), so round r+1's state would key a fresh trace.
+        return jax.jit(
+            sharded,
+            donate_argnums=donate,
+            out_shardings=(fls.user_mesh.sharding(), fls.user_mesh.replicated()),
+        )
+
+    def _step_round_sharded(self) -> float:
+        self._state, mean_loss = self._dispatch(
+            self._round_jit, self._state, *self._sharded_args
+        )
+        return float(mean_loss)
+
     # -- public entry point --------------------------------------------------
     def step_round(self) -> dict:
         """One gossip round: local training + exchange + aggregate."""
         calls_before = self._jit_calls
         if self.backend == "stacked":
             mean_loss = self._step_round_stacked()
+        elif self.backend == "sharded":
+            mean_loss = self._step_round_sharded()
         else:
             mean_loss = self._step_round_reference()
         self.last_round_dispatches = self._jit_calls - calls_before
         self.round += 1
-        return {"round": self.round, "mean_loss": mean_loss}
+        return {
+            "round": self.round,
+            "mean_loss": mean_loss,
+            "dropped_samples": self.dropped_samples,
+        }

@@ -197,6 +197,7 @@ def run_fl_async(
 
     history: dict[str, list] = {}
     sims: dict[str, Any] = {}
+    lag_hists: dict[str, list] = {}
     for m, sched in schedules.items():
         a = np.asarray(sched.assignment, dtype=np.int64)
         res = simulate(
@@ -240,6 +241,10 @@ def run_fl_async(
             )
             rows.append(info)
         history[m] = rows
+        # Cumulative per-edge staleness histogram across the run: index
+        # Δτ = rounds behind — the empirical input a staleness-adaptive
+        # mixing policy would tune s(Δτ) against.
+        lag_hists[m] = trainer.lag_hist.tolist()
 
     return {
         "task_graph": tg,
@@ -253,5 +258,6 @@ def run_fl_async(
         "stale_mixes": {
             m: int(sum(row["stale_mixes"] for row in history[m])) for m in history
         },
+        "mix_lag_hist": lag_hists,
         "barrier_stalls": {m: int(sims[m].barrier_stalls) for m in sims},
     }

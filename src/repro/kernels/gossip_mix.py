@@ -5,8 +5,13 @@ N-1 separate AXPY sweeps (2(N-1) HBM round-trips of the full parameter
 vector); this kernel streams the stacked (N, L) neighbor buffer once and
 writes the mix — bandwidth-bound at (N+1)/(2(N-1))× fewer bytes.
 
-Two entry points:
+Three entry points:
   - ``gossip_mix_fwd``: one receiver — stacked (N, L) · weights (N,) -> (L,).
+  - ``gossip_mix_block_fwd``: one SHARD of receivers of the mesh-sharded
+    engine — the shard's local (m, L) sender slab under the intra-shard
+    mixing block (m, m) plus the gathered boundary-row halo (H, L) under
+    the cross-shard block (m, H), fused so both slabs stream once per
+    L-block (DESIGN.md §13).
   - ``gossip_mix_all_fwd``: ALL receivers of a gossip round at once —
     stacked (N, L) · row-normalized mixing matrix W (M, N) -> (M, L).
     Per L-block the kernel reads the (N, bl) slab ONCE and emits every
@@ -54,6 +59,59 @@ def gossip_mix_fwd(
         out_shape=jax.ShapeDtypeStruct((l,), stacked.dtype),
         interpret=interpret,
     )(stacked, weights)
+
+
+def _mix_block_kernel(x_ref, h_ref, wb_ref, wh_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (m, bl) local senders
+    h = h_ref[...].astype(jnp.float32)          # (H, bl) gathered halo rows
+    wb = wb_ref[...].astype(jnp.float32)        # (m, m) intra-shard block
+    wh = wh_ref[...].astype(jnp.float32)        # (m, H) cross-shard block
+    o_ref[...] = (wb @ x + wh @ h).astype(o_ref.dtype)
+
+
+def gossip_mix_block_fwd(
+    local: jnp.ndarray,     # (m, L) this shard's flat sender vectors
+    w_block: jnp.ndarray,   # (m, m) intra-shard mixing block
+    halo: jnp.ndarray,      # (H, L) gathered boundary rows of other shards
+    w_halo: jnp.ndarray,    # (m, H) cross-shard mixing block
+    *,
+    block_len: int = 65536,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Block-local mixing of the mesh-sharded exchange (one shard's view):
+    ``out = w_block @ local + w_halo @ halo``.
+
+    Per L-block the kernel streams the (m, bl) local slab AND the (H, bl)
+    halo slab exactly once and emits every local receiver's mix — the
+    sharded counterpart of ``gossip_mix_all_fwd``, whose (N, L) all-users
+    slab no longer exists on any one device.  The weight blocks ride along
+    whole (m and H are per-shard small).  With no cross-shard edges
+    (H = 0) the halo term is skipped entirely.
+    """
+    m, l = local.shape
+    h_rows = halo.shape[0]
+    assert w_block.shape == (m, m), (w_block.shape, m)
+    assert halo.shape[1] == l, (halo.shape, l)
+    assert w_halo.shape == (m, h_rows), (w_halo.shape, (m, h_rows))
+    if h_rows == 0:
+        return gossip_mix_all_fwd(
+            local, w_block, block_len=block_len, interpret=interpret
+        )
+    bl = min(block_len, l)
+    assert l % bl == 0, (l, bl)
+    return pl.pallas_call(
+        _mix_block_kernel,
+        grid=(l // bl,),
+        in_specs=[
+            pl.BlockSpec((m, bl), lambda i: (0, i)),
+            pl.BlockSpec((h_rows, bl), lambda i: (0, i)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+            pl.BlockSpec((m, h_rows), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bl), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((m, l), local.dtype),
+        interpret=interpret,
+    )(local, halo, w_block, w_halo)
 
 
 def _mix_all_kernel(x_ref, w_ref, o_ref):

@@ -1,19 +1,33 @@
-"""Sharding rules: FSDP x TP x SP layouts for every assigned architecture.
+"""Sharding layers: the gossip-FL user mesh and the LM-model mesh rules.
 
-Layout summary:
+Two consumers share this module:
+
+**Gossip-FL user mesh** (:class:`UserMesh` / :class:`FLSharding`) — the
+population-scale FL engine (``repro.fl.gossip``, DESIGN.md §13) shards the
+stacked ``(N_T, …)`` user-replica pytree across a 1-D ``"users"`` device
+mesh: the leading user axis is split into contiguous equal blocks (one per
+shard, padded with inert users when ``N_T % shards != 0``), everything
+else replicated.  The round body runs under ``repro.compat.shard_map`` and
+the mixing matrix becomes block-local work plus a boundary-row halo
+exchange.  On a host-only platform, fake devices stand in for a real mesh:
+set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` **before the
+first jax import** (the pattern of ``launch/dryrun.py`` and the
+``shard_fl_smoke`` CI target).
+
+**LM model stack** (:class:`MeshRules` + the partition-spec helpers) —
+FSDP x TP x SP layouts for the assigned LM architectures:
   - batch dims shard over the data axes (('pod', 'data') multi-pod);
   - params: "heavy" dim FSDP-sharded over 'data' (ZeRO-3 — optimizer state
     follows for free), head/ffn/vocab dims tensor-parallel over 'model';
   - residual stream between blocks is sequence-sharded over 'model'
     (Megatron-style sequence parallelism) so saved activations stay small;
-  - decode KV caches shard *sequence* over 'model' (kv_heads of most archs
-    are 8 < 16) and run a distributed flash-softmax inside ``shard_map``;
-  - whisper (12 heads, not 16-divisible): attention params replicated over
-    'model', MLP/vocab still TP-sharded (``shard_heads=False``).
+  - decode KV caches shard *sequence* over 'model' and run a distributed
+    flash-softmax inside ``shard_map``; whisper (12 heads, not
+    16-divisible) keeps attention params replicated (``shard_heads=False``).
 
 ``MeshRules.constrain`` is the only entry point models use, so models stay
-mesh-agnostic; ``state_shardings``/``batch_shardings`` produce the jit
-in/out shardings for the launcher and the dry-run.
+mesh-agnostic; ``param_shardings``/``batch_shardings``/``cache_shardings``
+produce the jit in/out shardings for the launcher and the dry-run.
 """
 
 from __future__ import annotations
@@ -21,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import re
-from typing import Any
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +47,190 @@ from repro.models.common import ModelConfig
 
 def _divisible(dim: int, size: int) -> bool:
     return dim % size == 0 and dim >= size
+
+
+# ---------------------------------------------------------------------------
+# Gossip-FL user-axis mesh (population-scale stacked engine, DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+USER_AXIS = "users"
+
+
+@dataclasses.dataclass(frozen=True)
+class UserMesh:
+    """A 1-D device mesh over the FL user axis.
+
+    Wraps a ``jax.sharding.Mesh`` with the single axis ``"users"``; the
+    stacked gossip engine splits the ``(N_T, …)`` replica pytree into
+    ``num_shards`` contiguous user blocks along it.  Build one with
+    :meth:`build` (first ``num_shards`` visible devices) or wrap an
+    existing 1-D mesh directly.
+    """
+
+    mesh: Mesh
+
+    def __post_init__(self):
+        if self.mesh.axis_names != (USER_AXIS,):
+            raise ValueError(
+                f"UserMesh needs a 1-D mesh with axis ({USER_AXIS!r},), "
+                f"got axes {self.mesh.axis_names}"
+            )
+
+    @classmethod
+    def build(cls, num_shards: int | None = None) -> "UserMesh":
+        """Mesh over the first ``num_shards`` devices (all by default).
+
+        Raises with a fake-device hint when the host exposes fewer
+        devices than requested — the count must be forced via
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+        first jax import; it cannot be raised afterwards.
+        """
+        devices = jax.devices()
+        if num_shards is None:
+            num_shards = len(devices)
+        if num_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {num_shards}")
+        if num_shards > len(devices):
+            raise ValueError(
+                f"requested {num_shards} user shards but only "
+                f"{len(devices)} device(s) are visible; on a host-only "
+                f"platform set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={num_shards} "
+                f"before the first jax import"
+            )
+        return cls(mesh=Mesh(np.asarray(devices[:num_shards]), (USER_AXIS,)))
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.mesh.shape[USER_AXIS])
+
+    def spec(self, *trailing) -> P:
+        """PartitionSpec sharding the leading (user) axis."""
+        return P(USER_AXIS, *trailing)
+
+    def sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec())
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    def shard_map(
+        self, fn: Callable, in_specs, out_specs, **kwargs
+    ) -> Callable:
+        """``repro.compat.shard_map`` over this mesh (jax-version shim)."""
+        from repro.compat import shard_map
+
+        kwargs.setdefault("check_vma", False)
+        return shard_map(
+            fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs,
+            **kwargs,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FLSharding:
+    """Placement of one FL population on a :class:`UserMesh`.
+
+    Knows the padded user count (``N_T`` rounded up to a multiple of the
+    shard count), pads host arrays with inert users, and device_puts
+    stacked pytrees with the leading axis sharded over ``"users"`` —
+    the one entry point the sharded gossip backend uses, mirroring how
+    ``MeshRules.constrain`` is the models' single entry point.
+    """
+
+    user_mesh: UserMesh
+    num_users: int
+
+    def __post_init__(self):
+        if self.num_users < 1:
+            raise ValueError(f"need >= 1 user, got {self.num_users}")
+
+    @property
+    def num_shards(self) -> int:
+        return self.user_mesh.num_shards
+
+    @property
+    def block_size(self) -> int:
+        """Users per shard (after padding)."""
+        return -(-self.num_users // self.num_shards)
+
+    @property
+    def num_padded(self) -> int:
+        """``N_T`` rounded up to a multiple of the shard count."""
+        return self.block_size * self.num_shards
+
+    @property
+    def num_padding(self) -> int:
+        return self.num_padded - self.num_users
+
+    def shard_of(self) -> np.ndarray:
+        """(num_padded,) shard id of each (padded) user slot."""
+        return np.arange(self.num_padded) // self.block_size
+
+    def valid_mask(self) -> np.ndarray:
+        """(num_padded,) bool — True for real users, False for padding."""
+        return np.arange(self.num_padded) < self.num_users
+
+    def pad_users(self, arr: np.ndarray, fill=0) -> np.ndarray:
+        """Pad a host array's leading user axis to ``num_padded``."""
+        arr = np.asarray(arr)
+        if arr.shape[0] != self.num_users:
+            raise ValueError(
+                f"leading axis {arr.shape[0]} != num_users {self.num_users}"
+            )
+        if not self.num_padding:
+            return arr
+        widths = [(0, self.num_padding)] + [(0, 0)] * (arr.ndim - 1)
+        return np.pad(arr, widths, constant_values=fill)
+
+    def shard(self, tree: Any) -> Any:
+        """device_put a stacked pytree: leading user axis over the mesh,
+        trailing axes replicated (leaves must already be padded)."""
+        ns = NamedSharding(self.user_mesh.mesh, self.user_mesh.spec())
+
+        def put(leaf):
+            leaf = jnp.asarray(leaf)
+            if leaf.shape[0] != self.num_padded:
+                raise ValueError(
+                    f"leaf leading axis {leaf.shape[0]} != padded user "
+                    f"count {self.num_padded}; pad_users() first"
+                )
+            return jax.device_put(leaf, ns)
+
+        return jax.tree.map(put, tree)
+
+    def shard_blocks(self, tree: Any) -> Any:
+        """device_put per-shard constant blocks: leading axis is the SHARD
+        axis (length ``num_shards``), one block per shard."""
+        ns = NamedSharding(self.user_mesh.mesh, self.user_mesh.spec())
+
+        def put(leaf):
+            leaf = jnp.asarray(leaf)
+            if leaf.shape[0] != self.num_shards:
+                raise ValueError(
+                    f"leaf leading axis {leaf.shape[0]} != shard count "
+                    f"{self.num_shards}"
+                )
+            return jax.device_put(leaf, ns)
+
+        return jax.tree.map(put, tree)
+
+
+def pad_edge_lists(
+    rows: Sequence[np.ndarray], fill: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stack ragged per-shard index lists into a dense (S, E_max) array.
+
+    Returns ``(stacked, lengths)``; positions past each row's length hold
+    ``fill`` — callers pair them with zero weights so padded entries are
+    exact no-ops in the mix.
+    """
+    lengths = np.asarray([len(r) for r in rows], dtype=np.int64)
+    e_max = int(lengths.max()) if len(rows) else 0
+    out = np.full((len(rows), e_max), fill, dtype=np.int32)
+    for s, r in enumerate(rows):
+        out[s, : len(r)] = r
+    return out, lengths
 
 
 @dataclasses.dataclass

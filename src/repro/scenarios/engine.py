@@ -50,6 +50,7 @@ import numpy as np
 from repro.core.graphs import (
     ComputeGraph,
     TaskGraph,
+    cluster_task_graph,
     erdos_renyi_task_graph,
     gossip_task_graph,
     layered_dag_task_graph,
@@ -137,6 +138,8 @@ def build_task_graph(scenario: Scenario, rng: np.random.Generator) -> TaskGraph:
         if n % layers:
             raise ValueError(f"num_tasks={n} not divisible into layers={layers}")
         g = layered_dag_task_graph(rng, layers, n // layers, **tp)
+    elif scenario.topology == "cluster":
+        g = cluster_task_graph(rng, n, **tp)
     elif scenario.topology == "gossip":
         g = gossip_task_graph(rng, n, **tp)
     elif scenario.topology == "random":

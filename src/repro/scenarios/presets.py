@@ -172,6 +172,23 @@ NEW_COMBINATIONS = (
             num_samples=512, backend="stacked",
         ),
     )),
+    # Hierarchical edge -> region gossip: dense intra-cluster exchange,
+    # only cluster heads on the sparse global ring (the population-scale
+    # topology the sharded engine partitions along, DESIGN.md §13).
+    register(Scenario(
+        name="cluster_hier",
+        topology="cluster",
+        num_tasks=24,
+        num_machines=4,
+        machine_profile="bimodal",
+        delay_model="cluster",
+        schedulers=DEFAULT_SCHEDULERS,
+        topology_params={
+            "clusters": 4, "inner_topology": "dense",
+            "head_topology": "ring", "heads_per_cluster": 2,
+        },
+        delay_params={"clusters": 2, "intra": 0.1, "inter": 1.0},
+    )),
 )
 
 # -- event-engine combinations: sync-vs-async/overlap on the same grids ------

@@ -9,8 +9,14 @@ import pytest
 from repro.core.bqp import bottleneck_time
 from repro.core.graphs import (
     ComputeGraph,
+    cluster_assignment,
+    cluster_shard_permutation,
+    cluster_task_graph,
+    contiguous_shard_of,
     erdos_renyi_task_graph,
+    halo_edge_count,
     layered_dag_task_graph,
+    permute_task_graph,
     ring_task_graph,
     scale_free_task_graph,
     small_world_task_graph,
@@ -95,6 +101,87 @@ def test_layered_dag_is_dag_and_connected():
     has_pred = {j for (_, j) in g.edges}
     assert has_succ >= set(range(12))              # all but the last layer
     assert has_pred >= set(range(4, 16))           # all but the first layer
+
+
+def test_cluster_topology_symmetric_and_hierarchical():
+    rng = np.random.default_rng(4)
+    g = cluster_task_graph(rng, 24, clusters=4, inner_topology="dense",
+                           head_topology="ring")
+    es = set(g.edges)
+    assert all(i != j for (i, j) in es)
+    assert all((j, i) in es for (i, j) in es)      # both directions emitted
+    cl = cluster_assignment(24, 4)
+    cross = {(i, j) for (i, j) in es if cl[i] != cl[j]}
+    # ring head graph with 1 head/cluster: 4 undirected links = 8 directed
+    assert len(cross) == 8
+    heads = {int(np.nonzero(cl == c)[0][0]) for c in range(4)}
+    assert {i for (i, _) in cross} <= heads        # only heads cross clusters
+    # dense inner wiring: 4 * (6*5) directed intra edges
+    assert len(es) - len(cross) == 4 * 6 * 5
+
+
+def test_cluster_topology_inner_families():
+    rng = np.random.default_rng(5)
+    ring = cluster_task_graph(rng, 24, clusters=4, inner_topology="ring")
+    cl = cluster_assignment(24, 4)
+    intra = [(i, j) for (i, j) in ring.edges if cl[i] == cl[j]]
+    assert len(intra) == 4 * 6 * 2                 # 6-rings, both directions
+    gos = cluster_task_graph(rng, 24, clusters=4, inner_topology="gossip",
+                             inner_degree=2, head_topology="dense")
+    deg = _out_degrees(gos)
+    assert deg.min() >= 2                          # >= inner_degree neighbors
+
+
+def test_cluster_topology_validation():
+    rng = np.random.default_rng(6)
+    with pytest.raises(ValueError, match="unknown inner topology"):
+        cluster_task_graph(rng, 24, inner_topology="torus")
+    with pytest.raises(ValueError, match="unknown head topology"):
+        cluster_task_graph(rng, 24, head_topology="star")
+    with pytest.raises(ValueError, match=">= 2 clusters"):
+        cluster_task_graph(rng, 24, clusters=1)
+    with pytest.raises(ValueError, match="2 \\* clusters"):
+        cluster_task_graph(rng, 6, clusters=4)
+    with pytest.raises(ValueError, match="heads_per_cluster"):
+        cluster_task_graph(rng, 24, clusters=4, heads_per_cluster=9)
+    with pytest.raises(ValueError, match="inner_degree"):
+        cluster_task_graph(rng, 24, clusters=4, inner_topology="gossip",
+                           inner_degree=0)
+
+
+def test_cluster_partition_utilities():
+    rng = np.random.default_rng(7)
+    n, clusters, shards = 64, 8, 4
+    g = cluster_task_graph(rng, n, clusters=clusters, inner_topology="dense",
+                           head_topology="ring")
+    base = halo_edge_count(g, contiguous_shard_of(n, shards))
+    # scramble user labels, then re-pack whole clusters onto shard blocks
+    scramble = rng.permutation(n)
+    scrambled = permute_task_graph(g, scramble)
+    cl_scrambled = cluster_assignment(n, clusters)[scramble]
+    worse = halo_edge_count(scrambled, contiguous_shard_of(n, shards))
+    perm = cluster_shard_permutation(cl_scrambled, shards)
+    packed = permute_task_graph(scrambled, perm)
+    repacked = halo_edge_count(packed, contiguous_shard_of(n, shards))
+    assert repacked == base < worse                # packing recovers optimum
+    # permuting preserves the degree multiset (graphs are isomorphic)
+    assert sorted(_out_degrees(packed)) == sorted(_out_degrees(g))
+    with pytest.raises(ValueError, match="permutation"):
+        permute_task_graph(g, np.zeros(n, dtype=np.int64))
+    with pytest.raises(ValueError, match="shard_of shape"):
+        halo_edge_count(g, np.zeros(n + 1, dtype=np.int64))
+
+
+def test_cluster_scenario_axis():
+    sc = Scenario(
+        name="clu", topology="cluster", num_tasks=16, num_machines=2,
+        topology_params={"clusters": 4, "inner_topology": "ring"},
+        schedulers=("greedy",), rounds=1,
+    )
+    g = build_task_graph(sc, np.random.default_rng(0))
+    assert g.num_tasks == 16
+    es = set(g.edges)
+    assert all((j, i) in es for (i, j) in es)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,304 @@
+"""Mesh-sharded gossip engine: fp32 equivalence with the stacked backend.
+
+Main-process tests cover mesh=1 (the degenerate single-shard mesh on the
+default device) plus the UserMesh/FLSharding placement layer; multi-shard
+runs (mesh 2 and 8, compression, uneven N_T % shards, the block-local
+Pallas mix, cluster-topology halos) execute in ONE subprocess with 8
+forced fake host devices — the device count must be set before jax's
+first init, so it cannot change inside the main pytest process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.graphs import gossip_task_graph  # noqa: E402
+from repro.data.synthetic import ImageDataset  # noqa: E402
+from repro.fl.gossip import BACKENDS, GossipConfig, GossipTrainer  # noqa: E402
+from repro.launch.sharding import (  # noqa: E402
+    FLSharding,
+    UserMesh,
+    pad_edge_lists,
+)
+
+# ---------------------------------------------------------------------------
+# Shared tiny workload (subprocess uses the same shapes)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_init(key, d=64, hidden=16, classes=10):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (d, hidden)) * (2.0 / d) ** 0.5,
+        "b1": jnp.zeros(hidden),
+        "w2": jax.random.normal(k2, (hidden, classes)) * (2.0 / hidden) ** 0.5,
+        "b2": jnp.zeros(classes),
+    }
+
+
+def _mlp_loss(params, batch):
+    x = batch["x"].reshape(batch["x"].shape[0], -1)
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def _instance(n, seed=0, samples_per_user=48):
+    rng = np.random.default_rng(seed)
+    tg = gossip_task_graph(rng, n, degree_low=3, degree_high=4)
+    m = n * samples_per_user
+    data = ImageDataset(
+        x=rng.normal(size=(m, 8, 8, 1)).astype(np.float32),
+        y=rng.integers(0, 10, size=m).astype(np.int64),
+        num_classes=10,
+    )
+    return tg, data.split(n, rng)
+
+
+def _trainer(n, backend, num_shards=None, rounds_cfg=None):
+    tg, shards = _instance(n)
+    cfg = rounds_cfg or GossipConfig(
+        local_steps=2, batch_size=8, num_shards=num_shards
+    )
+    return GossipTrainer(tg, _mlp_init, _mlp_loss, shards, cfg, seed=0,
+                         backend=backend)
+
+
+def _max_param_diff(a, b, n):
+    worst = 0.0
+    for i in range(n):
+        for x, y in zip(jax.tree.leaves(a.user_params(i)),
+                        jax.tree.leaves(b.user_params(i))):
+            worst = max(worst, float(jnp.max(jnp.abs(x - y))))
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# Mesh = 1 (main process): the degenerate single-shard mesh
+# ---------------------------------------------------------------------------
+
+
+def test_mesh1_sharded_matches_stacked():
+    n = 10
+    a = _trainer(n, "stacked")
+    b = _trainer(n, "sharded", num_shards=1)
+    assert b.backend == "sharded"
+    for _ in range(3):
+        ia, ib = a.step_round(), b.step_round()
+        assert abs(ia["mean_loss"] - ib["mean_loss"]) < 1e-5
+        assert b.last_round_dispatches == 1
+    assert _max_param_diff(a, b, n) < 1e-4
+    if hasattr(b._round_jit, "_cache_size"):
+        assert b._round_jit._cache_size() == 1
+    # single shard, no cross edges: the halo is empty
+    assert b.halo_stats["cross_edges"] == 0
+    assert b.halo_stats["halo_rows_per_shard"] == 0
+
+
+def test_sharded_backend_registered():
+    assert "sharded" in BACKENDS
+    with pytest.raises(ValueError, match="unknown backend"):
+        _trainer(4, "meshed")
+
+
+def test_dropped_samples_in_info():
+    """Uneven shards truncate to the common minimum; the count surfaces."""
+    rng = np.random.default_rng(0)
+    tg = gossip_task_graph(rng, 3, degree_low=1, degree_high=2)
+
+    def shard(m, seed):
+        r = np.random.default_rng(seed)
+        return ImageDataset(
+            x=r.normal(size=(m, 8, 8, 1)).astype(np.float32),
+            y=r.integers(0, 10, size=m).astype(np.int64),
+            num_classes=10,
+        )
+
+    shards = [shard(16, 1), shard(20, 2), shard(19, 3)]
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")  # the intentional truncation warning
+        tr = GossipTrainer(
+            tg, _mlp_init, _mlp_loss, shards,
+            GossipConfig(local_steps=1, batch_size=8), seed=0,
+            backend="stacked",
+        )
+    assert tr.dropped_samples == (20 - 16) + (19 - 16)
+    info = tr.step_round()
+    assert info["dropped_samples"] == 7
+
+
+# ---------------------------------------------------------------------------
+# UserMesh / FLSharding placement layer
+# ---------------------------------------------------------------------------
+
+
+def test_user_mesh_build_and_specs():
+    um = UserMesh.build(1)
+    assert um.num_shards == 1
+    assert um.spec()[0] == "users"
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        UserMesh.build(len(jax.devices()) + 1)
+    with pytest.raises(ValueError, match=">= 1 shard"):
+        UserMesh.build(0)
+
+
+def test_fl_sharding_padding():
+    fls = FLSharding(user_mesh=UserMesh.build(1), num_users=10)
+    assert fls.num_padded == 10 and fls.num_padding == 0
+    assert fls.block_size == 10
+    assert fls.valid_mask().all()
+    np.testing.assert_array_equal(fls.shard_of(), np.zeros(10))
+    padded = fls.pad_users(np.arange(10))
+    np.testing.assert_array_equal(padded, np.arange(10))
+    with pytest.raises(ValueError, match="leading axis"):
+        fls.pad_users(np.arange(7))
+    with pytest.raises(ValueError, match=">= 1 user"):
+        FLSharding(user_mesh=UserMesh.build(1), num_users=0)
+
+
+def test_pad_edge_lists():
+    stacked, lengths = pad_edge_lists(
+        [np.array([3, 1]), np.array([7]), np.array([], dtype=np.int64)]
+    )
+    assert stacked.shape == (3, 2)
+    np.testing.assert_array_equal(lengths, [2, 1, 0])
+    np.testing.assert_array_equal(stacked[0], [3, 1])
+    assert stacked[2, 0] == 0  # fill
+    empty, lens = pad_edge_lists([np.array([], dtype=np.int64)] * 2)
+    assert empty.shape == (2, 0) and lens.tolist() == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# Mesh = 2 and 8 (subprocess: forced fake host devices)
+# ---------------------------------------------------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, warnings
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.graphs import cluster_task_graph, gossip_task_graph
+from repro.data.synthetic import ImageDataset
+from repro.fl.gossip import GossipConfig, GossipTrainer
+from repro.train.compression import Int8, TopK
+
+def mlp_init(key, d=64, hidden=16, classes=10):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (d, hidden)) * (2.0 / d) ** 0.5,
+            "b1": jnp.zeros(hidden),
+            "w2": jax.random.normal(k2, (hidden, classes)) * (2.0 / hidden) ** 0.5,
+            "b2": jnp.zeros(classes)}
+
+def mlp_loss(params, batch):
+    x = batch["x"].reshape(batch["x"].shape[0], -1)
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    logits = h @ params["w2"] + params["b2"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["y"][:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+def instance(n, topology="gossip", seed=0):
+    rng = np.random.default_rng(seed)
+    if topology == "cluster":
+        tg = cluster_task_graph(rng, n, clusters=3, inner_topology="dense",
+                                head_topology="ring")
+    else:
+        tg = gossip_task_graph(rng, n, degree_low=3, degree_high=4)
+    m = n * 48
+    data = ImageDataset(x=rng.normal(size=(m, 8, 8, 1)).astype(np.float32),
+                        y=rng.integers(0, 10, size=m).astype(np.int64),
+                        num_classes=10)
+    return tg, data.split(n, rng)
+
+def pair(n, num_shards, compressor=None, mix="auto", topology="gossip",
+         rounds=3):
+    tg, shards = instance(n, topology)
+    cfg = GossipConfig(local_steps=2, batch_size=8, compressor=compressor,
+                       mix_backend=mix, num_shards=num_shards)
+    mk = lambda be: GossipTrainer(tg, mlp_init, mlp_loss, shards, cfg,
+                                  seed=0, backend=be)
+    a, b = mk("stacked"), mk("sharded")
+    loss_diff, dispatches = 0.0, set()
+    for _ in range(rounds):
+        ia, ib = a.step_round(), b.step_round()
+        loss_diff = max(loss_diff, abs(ia["mean_loss"] - ib["mean_loss"]))
+        dispatches.add(b.last_round_dispatches)
+    param_diff = 0.0
+    for i in range(n):
+        for x, y in zip(jax.tree.leaves(a.user_params(i)),
+                        jax.tree.leaves(b.user_params(i))):
+            param_diff = max(param_diff, float(jnp.max(jnp.abs(x - y))))
+    cache = (b._round_jit._cache_size()
+             if hasattr(b._round_jit, "_cache_size") else 1)
+    return {"loss_diff": loss_diff, "param_diff": param_diff,
+            "dispatches": sorted(dispatches), "cache_size": cache,
+            "halo": b.halo_stats, "num_padding": b._fls.num_padding}
+
+out = {
+    # n = 13: uneven vs 2 (block 7, pad 1) AND vs 8 (block 2, pad 3)
+    "mesh2": pair(13, 2),
+    "mesh8": pair(13, 8),
+    "mesh2_topk": pair(13, 2, compressor=TopK(0.2)),
+    "mesh2_int8": pair(13, 2, compressor=Int8()),
+    "mesh2_pallas": pair(13, 2, mix="pallas"),
+    "cluster_mesh2": pair(24, 2, topology="cluster"),
+}
+print("RESULT::" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def sharded_results():
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1200,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT::")]
+    assert line, proc.stdout[-2000:]
+    return json.loads(line[0][len("RESULT::"):])
+
+
+@pytest.mark.parametrize("case,loss_tol,param_tol", [
+    ("mesh2", 1e-5, 1e-4),
+    ("mesh8", 1e-5, 1e-4),
+    ("mesh2_topk", 1e-5, 1e-4),
+    ("mesh2_int8", 1e-3, 5e-3),   # int8 rounding is threshold-sensitive
+    ("mesh2_pallas", 1e-5, 1e-4),
+    ("cluster_mesh2", 1e-5, 1e-4),
+])
+def test_sharded_matches_stacked(sharded_results, case, loss_tol, param_tol):
+    r = sharded_results[case]
+    assert r["loss_diff"] < loss_tol, r
+    assert r["param_diff"] < param_tol, r
+    assert r["dispatches"] == [1], r           # one jitted call per round
+    assert r["cache_size"] == 1, r             # never retraced
+
+
+def test_uneven_population_padding(sharded_results):
+    # 13 % 2 -> one inert pad user; 13 % 8 -> three
+    assert sharded_results["mesh2"]["num_padding"] == 1
+    assert sharded_results["mesh8"]["num_padding"] == 3
+    h = sharded_results["mesh8"]["halo"]
+    assert h["num_shards"] == 8 and h["block_size"] == 2
+
+
+def test_cluster_halo_sparser_than_dense(sharded_results):
+    """On the hierarchical topology only head links cross shards, so the
+    halo gathers strictly fewer rows than the dense all-pairs exchange."""
+    h = sharded_results["cluster_mesh2"]["halo"]
+    assert 0 < h["halo_rows_per_shard"] < h["dense_rows_per_shard"], h
+    assert h["cross_edges"] < h["intra_edges"], h
